@@ -1,0 +1,85 @@
+"""Shared benchmark utilities: artifact loading, timing, prompt sets.
+
+CPU realism note (EXPERIMENTS.md): absolute tokens/s on this container is
+CPU-bound and ~3 orders of magnitude below the paper's A100 numbers; what
+must reproduce is the ORDERING and the RATIOS (PARD > VSD > AR+ > AR;
+PARD ≈ K× fewer draft forwards; acceptance orderings; COD's ~3x token
+reduction at equal accuracy). Each table prints the paper's corresponding
+numbers alongside for direct comparison.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import MarkovCorpus
+from repro.models import init_params
+from repro.training import checkpoint
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+CORPUS = dict(vocab_size=512, seed=0, determinism=3.0, branching=4)
+
+
+def corpus():
+    return MarkovCorpus(**CORPUS)
+
+
+def has_artifacts() -> bool:
+    return os.path.exists(os.path.join(ART, "manifest.json"))
+
+
+def load_model(name: str, arch: str = None):
+    """Load params for artifact ``name`` (arch defaults to name)."""
+    cfg = get_config(arch or name)
+    init = init_params(jax.random.PRNGKey(0), cfg)
+    path = os.path.join(ART, f"{name}.npz")
+    if os.path.exists(path):
+        return checkpoint.restore(path, init), cfg
+    return init, cfg
+
+
+def load_eagle(target_cfg):
+    from repro.core.eagle import init_eagle
+    init = init_eagle(jax.random.PRNGKey(9), target_cfg)
+    path = os.path.join(ART, "eagle_head.npz")
+    if os.path.exists(path):
+        return checkpoint.restore(path, init)
+    return init
+
+
+def prompts(batch: int, length: int = 16, seed: int = 5):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(corpus().prompts(rng, batch, length))
+
+
+def timed(fn, *args, warmup: int = 1, reps: int = 1, **kw):
+    """Returns (result, seconds) — best of ``reps`` after ``warmup``."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(jax.tree.leaves(out[0])[0]
+                              if isinstance(out, tuple) else out)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def emit(rows, table: str):
+    """Print the required ``name,us_per_call,derived`` CSV and persist."""
+    os.makedirs(RESULTS, exist_ok=True)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    with open(os.path.join(RESULTS, f"bench_{table}.json"), "w") as f:
+        json.dump([{"name": n, "us_per_call": u, "derived": d}
+                   for n, u, d in rows], f, indent=1)

@@ -1,0 +1,56 @@
+"""§Perf hillclimb helper: compare dry-run variant records for one
+(arch, shape) pair and print before/after roofline terms.
+
+  PYTHONPATH=src python -m benchmarks.perf_compare \
+      --pair command-r-35b:decode_32k --dir benchmarks/results/perf
+
+Reads every JSON whose name starts with the pair tag and tabulates the
+three terms + per-committed-token costs (verify steps process K+1 = 9
+tokens and commit mean_accepted ≈ (paper) 3.5-5 per iteration; we report
+per-PROCESSED-token so the comparison is conservative).
+"""
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import get_config
+from repro.launch import roofline
+from repro.launch.steps import PARD_K
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True, help="arch:shape")
+    ap.add_argument("--dir", default="benchmarks/results/perf")
+    args = ap.parse_args()
+    arch, shape = args.pair.split(":")
+
+    recs = []
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))) + \
+            sorted(glob.glob(os.path.join("benchmarks/results/dryrun",
+                                          f"{arch}__{shape}__single*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("arch") == arch and r.get("shape") == shape \
+                and not r.get("multi_pod") and "error" not in r \
+                and "skipped" not in r:
+            recs.append(r)
+
+    print(f"== {arch} x {shape} (single pod) ==")
+    hdr = ("variant", "mode", "compute_s", "memory_s", "collective_s",
+           "dominant", "tokens", "mem_s/token")
+    print(("{:>22s}" * len(hdr)).format(*hdr))
+    for r in recs:
+        cfg = get_config(r["arch"])
+        rl = roofline.roofline_terms(r, cfg, r["shape"])
+        toks = rl["tokens"]
+        print("{:>22s}{:>22s}{:>22.3e}{:>22.3e}{:>22.3e}{:>22s}{:>22.0f}"
+              "{:>22.3e}".format(
+                  r.get("variant", "baseline"), r.get("mode", "default"),
+                  rl["compute_s"], rl["memory_s"], rl["collective_s"],
+                  rl["dominant"], toks, rl["memory_s"] / max(toks, 1)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Aggregate the dry-run JSONs into the §Dry-run / §Roofline tables.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--dir ...] [--md]
+
+Re-derives the three roofline terms from the stored raw values (so older
+records produced before a roofline-formula fix are recomputed consistently)
+and prints a per-(arch x shape x mesh) table plus the bottleneck summary.
+"""
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import get_config
+from repro.launch import roofline
+
+DEF = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_all(d):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(b):
+    if b >= 1e9:
+        return f"{b / 1e9:.1f}GB"
+    if b >= 1e6:
+        return f"{b / 1e6:.1f}MB"
+    return f"{b / 1e3:.1f}KB"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=DEF)
+    ap.add_argument("--md", action="store_true", help="markdown table")
+    ap.add_argument("--mesh", default="all", choices=["all", "single", "multi"])
+    args = ap.parse_args()
+
+    recs = load_all(args.dir)
+    rows, skips, fails = [], [], []
+    for r in recs:
+        if "skipped" in r:
+            skips.append(r)
+            continue
+        if "error" in r:
+            fails.append(r)
+            continue
+        cfg = get_config(r["arch"])
+        r["roofline"] = roofline.roofline_terms(r, cfg, r["shape"])
+        rows.append(r)
+
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["multi_pod"]))
+    sep = "|" if args.md else " "
+    hdr = ["arch", "shape", "mesh", "mode", "compute_s", "memory_s",
+           "collective_s", "dominant", "hbm/dev", "ucr", "compile_s"]
+    if args.md:
+        print("| " + " | ".join(hdr) + " |")
+        print("|" + "---|" * len(hdr))
+    else:
+        print(",".join(hdr))
+    for r in rows:
+        if args.mesh == "single" and r["multi_pod"]:
+            continue
+        if args.mesh == "multi" and not r["multi_pod"]:
+            continue
+        rl = r["roofline"]
+        mem = r.get("memory", {})
+        hbm = mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0) + \
+            mem.get("output_bytes", 0) - mem.get("alias_bytes", 0)
+        cells = [r["arch"], r["shape"],
+                 "2x16x16" if r["multi_pod"] else "16x16",
+                 r.get("mode", "default"),
+                 f"{rl['compute_s']:.3e}", f"{rl['memory_s']:.3e}",
+                 f"{rl['collective_s']:.3e}", rl["dominant"],
+                 fmt_bytes(hbm), f"{rl['useful_compute_ratio']:.3f}",
+                 str(r.get("compile_s", ""))]
+        if args.md:
+            print("| " + " | ".join(cells) + " |")
+        else:
+            print(",".join(cells))
+
+    print()
+    print(f"# combos: {len(rows)} ok, {len(skips)} skipped, "
+          f"{len(fails)} failed")
+    for s in skips:
+        print(f"# skip {s['arch']} x {s['shape']}: {s['skipped'][:80]}")
+    for s in fails:
+        print(f"# FAIL {s['arch']} x {s['shape']} "
+              f"(multi={s['multi_pod']}): {s['error'][:120]}")
+
+    # bottleneck census
+    from collections import Counter
+    doms = Counter((r["shape"], r["roofline"]["dominant"]) for r in rows
+                   if not r["multi_pod"])
+    print("# dominant-term census (single-pod):")
+    for (shape, dom), cnt in sorted(doms.items()):
+        print(f"#   {shape:12s} {dom:10s} x{cnt}")
+
+
+if __name__ == "__main__":
+    main()

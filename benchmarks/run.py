@@ -1,0 +1,44 @@
+"""Benchmark harness — one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table1,table5] [--list]
+
+Prints ``name,us_per_call,derived`` CSV. Requires the trained artifacts
+(``python examples/pard_adaptation_train.py``); without them it falls back
+to random weights and WARNS (timings still valid, acceptance meaningless).
+
+The roofline/dry-run numbers (deliverable e/g) are produced separately by
+``python -m repro.launch.dryrun --all --both-meshes`` and summarised with
+``python -m benchmarks.roofline_report``.
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. table1,fig6b")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    from . import common, tables
+
+    if args.list:
+        print("\n".join(tables.ALL))
+        return
+    if not common.has_artifacts():
+        print("WARNING: benchmarks/artifacts missing — run "
+              "examples/pard_adaptation_train.py first; using random weights",
+              file=sys.stderr)
+
+    names = args.only.split(",") if args.only else list(tables.ALL)
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    for name in names:
+        tables.ALL[name]()
+    print(f"# total wall: {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

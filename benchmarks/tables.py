@@ -1,0 +1,290 @@
+"""One benchmark per paper table/figure (deliverable d).
+
+Each function measures the real engine/decoder machinery on the trained tiny
+model family and prints ``name,us_per_call,derived`` CSV rows. The paper's
+corresponding numbers are attached as ``paper=`` fields in the derived
+column for side-by-side validation of the ORDERINGS and RATIOS (absolute
+TPS is CPU-bound here; see common.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.eagle import EagleDecoder
+from repro.core.spec_decode import SpecDecoder
+from repro.models import forward, init_caches
+from repro.serving.engine import Engine
+
+from . import common
+from .common import emit, load_eagle, load_model, prompts, timed
+
+MAX_NEW = 48
+K = 8
+
+
+def _tps(dec_fn, prompt, max_new=MAX_NEW):
+    out, secs = timed(dec_fn, warmup=1, reps=1)
+    toks = max_new * prompt.shape[0]
+    return toks / secs, secs
+
+
+def _ar_eager_tps(params, cfg, prompt, max_new=12):
+    """The 'AR' baseline: op-by-op eager execution with a KV cache — the
+    analogue of unoptimized HF transformers (the paper's AR row)."""
+    with jax.disable_jit():
+        b, p = prompt.shape
+        caches = init_caches(cfg, b, 256)
+        t0 = time.perf_counter()
+        logits, caches, _ = forward(params, cfg, prompt, caches=caches,
+                                    cache_pos=jnp.zeros((b,), jnp.int32))
+        cur = jnp.argmax(logits[:, -1], -1)[:, None]
+        for i in range(max_new - 1):
+            logits, caches, _ = forward(
+                params, cfg, cur.astype(jnp.int32), caches=caches,
+                cache_pos=jnp.full((b,), p + i, jnp.int32))
+            cur = jnp.argmax(logits[:, -1], -1)[:, None]
+        jax.block_until_ready(cur)
+        secs = time.perf_counter() - t0
+    return max_new * b / secs
+
+
+def table1() -> List:
+    """Table 1: AR vs AR+ vs VSD vs PARD on the target/draft pair."""
+    tp, tc = load_model("bench-target")
+    dp, dc = load_model("bench-draft")
+    pp, _ = load_model("pard_k8_r07", "bench-draft")
+    prompt = prompts(4)
+    rows = []
+
+    ar_tps = _ar_eager_tps(tp, tc, prompt)
+    dec = SpecDecoder(tp, tc, dp, dc, k=K, max_len=512)
+    (_, s_arp) = timed(lambda: dec.generate_ar(prompt, MAX_NEW))
+    arp_tps = MAX_NEW * 4 / s_arp
+
+    (_, s_vsd) = timed(lambda: dec.generate_spec(prompt, MAX_NEW, mode="vsd"))
+    (_, st_vsd) = dec.generate_spec(prompt, MAX_NEW, mode="vsd")
+    vsd_tps = MAX_NEW * 4 / s_vsd
+
+    decp = SpecDecoder(tp, tc, pp, dc, k=K, max_len=512)
+    (_, s_pard) = timed(lambda: decp.generate_spec(prompt, MAX_NEW,
+                                                   mode="pard"))
+    (_, st_pard) = decp.generate_spec(prompt, MAX_NEW, mode="pard")
+    pard_tps = MAX_NEW * 4 / s_pard
+
+    rows.append(("table1.AR", 1e6 / ar_tps,
+                 f"tps={ar_tps:.1f};speedup={ar_tps / arp_tps:.2f}x;paper=0.46x"))
+    rows.append(("table1.AR+", 1e6 / arp_tps,
+                 f"tps={arp_tps:.1f};speedup=1.00x;paper=1.00x"))
+    rows.append(("table1.VSD", 1e6 / vsd_tps,
+                 f"tps={vsd_tps:.1f};speedup={vsd_tps / arp_tps:.2f}x;"
+                 f"acc={st_vsd.acceptance_rate:.2f};paper=2.31x"))
+    rows.append(("table1.PARD", 1e6 / pard_tps,
+                 f"tps={pard_tps:.1f};speedup={pard_tps / arp_tps:.2f}x;"
+                 f"acc={st_pard.acceptance_rate:.2f};"
+                 f"mean_acc={st_pard.mean_accepted:.2f};paper=3.57x"))
+    emit(rows, "table1")
+    return rows
+
+
+def table2() -> List:
+    """Table 2: target independence — ONE PARD draft accelerates the whole
+    family (three target sizes, including draft==target size)."""
+    dp, dc = load_model("bench-draft")
+    pp, _ = load_model("pard_k8_r07", "bench-draft")
+    prompt = prompts(4)
+    rows = []
+    for tname, paper in [("bench-target", "3.57x"), ("bench-mid", "2.81x"),
+                         ("bench-draft", "2.17x")]:
+        tp, tc = load_model(tname)
+        dec = SpecDecoder(tp, tc, dp, dc, k=K, max_len=512)
+        (_, s_arp) = timed(lambda: dec.generate_ar(prompt, MAX_NEW))
+        arp = MAX_NEW * 4 / s_arp
+        (_, s_vsd) = timed(lambda: dec.generate_spec(prompt, MAX_NEW,
+                                                     mode="vsd"))
+        decp = SpecDecoder(tp, tc, pp, dc, k=K, max_len=512)
+        (_, s_pard) = timed(lambda: decp.generate_spec(prompt, MAX_NEW,
+                                                       mode="pard"))
+        vsd, pard = MAX_NEW * 4 / s_vsd, MAX_NEW * 4 / s_pard
+        rows.append((f"table2.{tname}.VSD", 1e6 / vsd,
+                     f"speedup={vsd / arp:.2f}x"))
+        rows.append((f"table2.{tname}.PARD", 1e6 / pard,
+                     f"speedup={pard / arp:.2f}x;paper={paper}"))
+    emit(rows, "table2")
+    return rows
+
+
+def table3() -> List:
+    """Table 3: method comparison in the serving framework (vLLM analogue):
+    AR vs EAGLE vs VSD vs PARD at batch 1."""
+    tp, tc = load_model("bench-target")
+    dp, dc = load_model("bench-draft")
+    pp, _ = load_model("pard_k8_r07", "bench-draft")
+    ep = load_eagle(tc)
+    prompt = prompts(1)
+    rows = []
+
+    dec = SpecDecoder(tp, tc, dp, dc, k=4, max_len=512)
+    (_, s_ar) = timed(lambda: dec.generate_ar(prompt, MAX_NEW))
+    ar = MAX_NEW / s_ar
+
+    ed = EagleDecoder(tp, tc, ep, k=4, max_len=512)
+    (_, s_eag) = timed(lambda: ed.generate(prompt, MAX_NEW))
+    _, st_e = ed.generate(prompt, MAX_NEW)
+    (_, s_vsd) = timed(lambda: dec.generate_spec(prompt, MAX_NEW, mode="vsd"))
+    decp = SpecDecoder(tp, tc, pp, dc, k=4, max_len=512)
+    (_, s_pard) = timed(lambda: decp.generate_spec(prompt, MAX_NEW,
+                                                   mode="pard"))
+    eag, vsd, pard = (MAX_NEW / s for s in (s_eag, s_vsd, s_pard))
+    rows.append(("table3.AR", 1e6 / ar, "speedup=1.00x;paper=1.00x"))
+    rows.append(("table3.EAGLE", 1e6 / eag,
+                 f"speedup={eag / ar:.2f}x;acc={st_e.acceptance_rate:.2f};"
+                 f"paper=1.64x"))
+    rows.append(("table3.VSD", 1e6 / vsd,
+                 f"speedup={vsd / ar:.2f}x;paper=2.02x"))
+    rows.append(("table3.PARD", 1e6 / pard,
+                 f"speedup={pard / ar:.2f}x;paper=3.06x"))
+    emit(rows, "table3")
+    return rows
+
+
+def table4() -> List:
+    """Table 4: batch scaling 1..16 through the batched engine."""
+    tp, tc = load_model("bench-target")
+    dp, dc = load_model("bench-draft")
+    pp, _ = load_model("pard_k8_r07", "bench-draft")
+    rows = []
+    paper = {1: "3.06x", 2: "2.59x", 4: "2.19x", 8: "1.55x", 16: "1.17x"}
+    for bs in (1, 2, 4, 8, 16):
+        prompt_np = np.asarray(prompts(bs))
+        def run(mode, params, dcfg):
+            eng = Engine(tp, tc, params, dcfg, mode=mode, k=4,
+                         max_batch=bs, max_len=512)
+            for r in range(bs):
+                eng.submit(prompt_np[r], MAX_NEW)
+            t0 = time.perf_counter()
+            comps = eng.run()
+            return sum(c.generated for c in comps) / (time.perf_counter() - t0)
+        run("ar", dp, dc)                       # warm
+        ar = run("ar", dp, dc)
+        run("pard", pp, dc)
+        pard = run("pard", pp, dc)
+        rows.append((f"table4.bs{bs}.PARD", 1e6 / pard,
+                     f"speedup={pard / ar:.2f}x;paper={paper[bs]}"))
+    emit(rows, "table4")
+    return rows
+
+
+def table5() -> List:
+    """Table 5: acceptance rates (1-alpha and 4-alpha) PARD vs EAGLE vs VSD."""
+    tp, tc = load_model("bench-target")
+    dp, dc = load_model("bench-draft")
+    pp, _ = load_model("pard_k8_r07", "bench-draft")
+    ep = load_eagle(tc)
+    prompt = prompts(4)
+    rows = []
+
+    def k_alpha(hist, iters):
+        h = np.asarray(hist, np.float64) / max(iters, 1)
+        return h[0], float(np.mean(h[:4]))
+
+    ed = EagleDecoder(tp, tc, ep, k=4, max_len=512)
+    _, st = ed.generate(prompt, MAX_NEW)
+    a1, a4 = k_alpha(st.accept_hist, st.iterations * 4)
+    rows.append(("table5.EAGLE", 0.0,
+                 f"1-alpha={a1:.2f};4-alpha={a4:.2f};paper=0.82/0.72"))
+
+    decp = SpecDecoder(tp, tc, pp, dc, k=4, max_len=512)
+    _, st = decp.generate_spec(prompt, MAX_NEW, mode="pard")
+    a1, a4 = k_alpha(st.accept_hist, st.iterations * 4)
+    rows.append(("table5.PARD", 0.0,
+                 f"1-alpha={a1:.2f};4-alpha={a4:.2f};paper=0.90/0.88"))
+
+    dec = SpecDecoder(tp, tc, dp, dc, k=4, max_len=512)
+    _, st = dec.generate_spec(prompt, MAX_NEW, mode="vsd")
+    a1, a4 = k_alpha(st.accept_hist, st.iterations * 4)
+    rows.append(("table5.VSD", 0.0, f"1-alpha={a1:.2f};4-alpha={a4:.2f}"))
+    emit(rows, "table5")
+    return rows
+
+
+def table6() -> List:
+    """Table 6: draft-phase memory-bandwidth (analytic, bf16): bytes of
+    draft weights streamed per speculative iteration. PARD is constant in k;
+    AR drafts scale linearly. Computed for BOTH the tiny pair and the
+    paper's actual LLaMA3.2-1B draft (param count from the config)."""
+    from repro.configs import get_config
+    from repro.launch.steps import param_shapes
+
+    def param_bytes(cfg):
+        sds = param_shapes(cfg)
+        return sum(np.prod(s.shape) for s in jax.tree.leaves(sds)) * 2  # bf16
+
+    rows = []
+    for label, arch in [("bench-draft", "bench-draft"),
+                        ("L3.2-1B", "llama3.2-1b")]:
+        b = param_bytes(get_config(arch))
+        for k in (4, 6, 8):
+            vsd_gb = b * k / 1e9
+            pard_gb = b / 1e9
+            paper = {4: "2.48", 6: "2.48", 8: "2.48"}[k] \
+                if label == "L3.2-1B" else "-"
+            rows.append((f"table6.{label}.k{k}", 0.0,
+                         f"vsd_draft_gb={vsd_gb:.2f};pard_draft_gb={pard_gb:.2f};"
+                         f"paper_pard_gb={paper}"))
+    emit(rows, "table6")
+    return rows
+
+
+def fig6a() -> List:
+    """Fig 6a: COD ablation — training token cost vs final speed/acceptance
+    for (r=0.7,rmin=0.2), (r=0.5,rmin=0.1), no-drop."""
+    tp, tc = load_model("bench-target")
+    _, dc = load_model("bench-draft")
+    prompt = prompts(4)
+    import json, os
+    man = json.load(open(os.path.join(common.ART, "manifest.json")))
+    rows = []
+    for tag in ("pard_k8_r07", "pard_k8_r05", "pard_k8_nodrop"):
+        pp, _ = load_model(tag, "bench-draft")
+        dec = SpecDecoder(tp, tc, pp, dc, k=K, max_len=512)
+        (_, secs) = timed(lambda: dec.generate_spec(prompt, MAX_NEW,
+                                                    mode="pard"))
+        _, st = dec.generate_spec(prompt, MAX_NEW, mode="pard")
+        tokens = man["runs"].get(tag, {}).get("train_tokens", 0)
+        rows.append((f"fig6a.{tag}", 1e6 * secs / (MAX_NEW * 4),
+                     f"train_tokens={tokens};acc={st.acceptance_rate:.3f};"
+                     f"mean_acc={st.mean_accepted:.2f}"))
+    emit(rows, "fig6a")
+    return rows
+
+
+def fig6b() -> List:
+    """Fig 6b: K_train x K_infer grid — extrapolation via the shared mask
+    token (K_infer > K_train must still work)."""
+    tp, tc = load_model("bench-target")
+    _, dc = load_model("bench-draft")
+    prompt = prompts(4)
+    rows = []
+    for ktr, tag in [(2, "pard_k2_r07"), (4, "pard_k4_r07"),
+                     (8, "pard_k8_r07")]:
+        pp, _ = load_model(tag, "bench-draft")
+        for kinf in (2, 4, 8, 12):
+            dec = SpecDecoder(tp, tc, pp, dc, k=kinf, max_len=512)
+            (_, secs) = timed(lambda: dec.generate_spec(prompt, MAX_NEW,
+                                                        mode="pard"))
+            _, st = dec.generate_spec(prompt, MAX_NEW, mode="pard")
+            tps = MAX_NEW * 4 / secs
+            rows.append((f"fig6b.ktrain{ktr}.kinfer{kinf}", 1e6 / tps,
+                         f"tps={tps:.1f};mean_acc={st.mean_accepted:.2f}"))
+    emit(rows, "fig6b")
+    return rows
+
+
+ALL = {"table1": table1, "table2": table2, "table3": table3,
+       "table4": table4, "table5": table5, "table6": table6,
+       "fig6a": fig6a, "fig6b": fig6b}

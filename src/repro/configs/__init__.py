@@ -1,0 +1,37 @@
+"""Architecture registry.
+
+One module per assigned architecture (exact public config, source cited in
+``source``) plus the paper's own draft/target pairs and tiny CPU-test models.
+``get_config(name)`` accepts the dashed public id (e.g. ``gemma2-27b``) or a
+``-smoke`` suffix for the reduced same-family variant.
+"""
+from __future__ import annotations
+
+from ..models.config import ModelConfig
+
+from . import (command_r_35b, deepseek_67b, deepseek_v2_lite_16b, gemma2_27b,
+               granite_moe_3b_a800m, jamba_1_5_large_398b,
+               llama_3_2_vision_11b, mamba2_130m, minicpm3_4b, whisper_tiny,
+               paper_models, tiny)
+
+_MODULES = [whisper_tiny, command_r_35b, gemma2_27b, deepseek_v2_lite_16b,
+            jamba_1_5_large_398b, minicpm3_4b, llama_3_2_vision_11b,
+            deepseek_67b, mamba2_130m, granite_moe_3b_a800m]
+
+CONFIGS = {}
+for _m in _MODULES:
+    CONFIGS[_m.CONFIG.name] = _m.CONFIG
+CONFIGS.update(paper_models.CONFIGS)
+CONFIGS.update(tiny.CONFIGS)
+
+ASSIGNED = [m.CONFIG.name for m in _MODULES]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name.endswith("-smoke"):
+        return CONFIGS[name[:-len("-smoke")]].reduced()
+    return CONFIGS[name]
+
+
+def list_configs():
+    return sorted(CONFIGS)

@@ -1,0 +1,24 @@
+"""llama-3.2-vision-11b — dense GQA decoder with gated cross-attention
+image layers every 5th layer. [hf:meta-llama/Llama-3.2-11B-Vision]
+40L d_model=4096 32H (kv=8) d_ff=14336 vocab=128256. The ViT vision
+encoder + projector is a STUB: input_specs provides patch embeddings
+[B, 1601, 4096]."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    arch_type="vlm",
+    num_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=128256,
+    head_dim=128,
+    rope_theta=500000.0,
+    cross_attn_period=5,
+    cross_kv_len=1601,
+    tie_embeddings=False,
+    max_seq_len=131072,
+    source="hf:meta-llama/Llama-3.2-11B-Vision",
+)

@@ -1,0 +1,23 @@
+"""minicpm3-4b — dense decoder with MLA. [hf:openbmb/MiniCPM3-4B]
+62L d_model=2560 40H d_ff=6400 vocab=73448, kv_lora=256, q_lora=768."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b",
+    arch_type="dense",
+    num_layers=62,
+    d_model=2560,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=6400,
+    vocab_size=73448,
+    attn_kind="mla",
+    kv_lora_rank=256,
+    q_lora_rank=768,
+    qk_nope_head_dim=64,
+    qk_rope_head_dim=32,
+    v_head_dim=64,
+    tie_embeddings=True,
+    max_seq_len=32768,
+    source="hf:openbmb/MiniCPM3-4B",
+)

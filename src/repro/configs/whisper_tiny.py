@@ -1,0 +1,29 @@
+"""whisper-tiny — encoder-decoder audio transformer backbone.
+[arXiv:2212.04356] 4L(enc)+4L(dec), d_model=384, 6H (kv=6), d_ff=1536,
+vocab=51865. Conv/mel frontend is a STUB: input_specs provides precomputed
+frame embeddings [B, 1500, 384]."""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    arch_type="audio",
+    num_layers=4,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    head_dim=64,
+    use_layernorm=True,
+    mlp_act="gelu",
+    mlp_gated=False,
+    use_rope=False,
+    abs_pos=True,
+    qkv_bias=True,
+    is_encoder_decoder=True,
+    encoder_layers=4,
+    encoder_seq=1500,
+    tie_embeddings=True,
+    max_seq_len=448,
+    source="arXiv:2212.04356",
+)

@@ -1,0 +1,84 @@
+"""PARD adaptation objective — paper §3.2.1, Eq. 8.
+
+The packed COD batch (core/cod.py) trains all K subtasks simultaneously:
+cross-entropy at every token with a label, with the Fig. 4 attention pattern
+supplied as (segment, base) metadata. ``per_subtask_norm=True`` reproduces
+Eq. 8 exactly (each subtask's loss is averaged over its own token count,
+then subtasks are summed); ``False`` is a plain token-mean, useful for
+loss-curve comparisons at different r (same estimator across drop rates).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import forward
+from ..models.attention import PardMaskInfo
+from .cod import IGNORE
+
+
+def pard_adaptation_loss(params, cfg, batch, *, k_max: int = 0,
+                         per_subtask_norm: bool = True, dtype=jnp.bfloat16):
+    """batch: dict of [B, T] arrays from cod.pack_batch (jnp or np).
+
+    Returns (loss, metrics).
+    """
+    seg = jnp.asarray(batch["segment"])
+    base = jnp.asarray(batch["base"])
+    mask_info = PardMaskInfo(seg, base)
+    logits, _, aux = forward(
+        params, cfg, jnp.asarray(batch["input_ids"]),
+        positions=jnp.asarray(batch["position_ids"]),
+        mask_info=mask_info, dtype=dtype)
+
+    labels = jnp.asarray(batch["labels"])
+    valid = labels != IGNORE
+    safe_labels = jnp.where(valid, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    tok_nll = -jnp.take_along_axis(logp, safe_labels[..., None], axis=-1)[..., 0]
+    tok_nll = jnp.where(valid, tok_nll, 0.0)
+
+    metrics = {}
+    if per_subtask_norm and k_max:
+        total = jnp.zeros((), jnp.float32)
+        for s in range(1, k_max + 1):
+            sel = valid & (seg == s)
+            cnt = jnp.maximum(jnp.sum(sel), 1)
+            ls = jnp.sum(jnp.where(sel, tok_nll, 0.0)) / cnt
+            metrics[f"loss_subtask_{s}"] = ls
+            total = total + ls
+        loss = total
+    else:
+        loss = jnp.sum(tok_nll) / jnp.maximum(jnp.sum(valid), 1)
+
+    metrics["token_mean_nll"] = jnp.sum(tok_nll) / jnp.maximum(jnp.sum(valid), 1)
+    metrics["n_loss_tokens"] = jnp.sum(valid)
+    if "load_balance_loss" in aux:
+        metrics["load_balance_loss"] = aux["load_balance_loss"]
+    return loss, metrics
+
+
+def ar_loss(params, cfg, tokens, *, dtype=jnp.bfloat16, aux_weight: float = 0.0,
+            frontend_embed=None, remat: bool = False):
+    """Plain next-token AR loss (Eq. 1) — used for pretraining the tiny
+    target/draft models and as the non-PARD baseline objective.
+
+    ``frontend_embed`` feeds the audio/vision stub: run through the encoder
+    for enc-dec configs, used directly as cross-attention KV for VLMs."""
+    tokens = jnp.asarray(tokens)
+    enc_out = None
+    if frontend_embed is not None:
+        from ..models import encode  # local import to avoid cycle
+        if cfg.is_encoder_decoder:
+            enc_out = encode(params, cfg, frontend_embed)
+        else:
+            enc_out = frontend_embed
+    logits, _, aux = forward(params, cfg, tokens[:, :-1], dtype=dtype,
+                             enc_out=enc_out, remat=remat)
+    labels = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    if aux_weight and "load_balance_loss" in aux:
+        loss = loss + aux_weight * aux["load_balance_loss"]
+    return loss, {"nll": jnp.mean(nll)}

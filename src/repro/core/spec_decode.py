@@ -1,0 +1,400 @@
+"""Speculative decoding: AR baseline, vanilla SD (AR draft), PARD.
+
+All step functions use fixed shapes (jit-once):
+
+  * the generation buffer ``gen [B, L]`` holds committed tokens; ``n [B]``
+    counts them. Commits write a full (K+1)-slot window at offset n — slots
+    beyond the accepted count hold garbage that is overwritten before it can
+    ever be read (reads are always < n).
+  * KV caches are contiguous; speculative rollback = the next call's
+    ``cache_pos`` simply re-covers the rejected entries (validity is
+    ``index < cache_pos + q_len``, so stale KV is invisible).
+  * SSM/hybrid layers cannot roll back by position: the verify forward runs
+    with ``collect_ssm=True`` and the engine gathers the per-token state at
+    the last accepted index (DESIGN.md §3).
+
+PARD draft (paper Eq. 7): ONE forward of
+  [ new committed tokens (A <= K+1) | mask x (K-1) | pad ]   (2K slots)
+produces all K proposals: slot A-1 (last real token) proposes token 1, the
+K-1 mask slots propose the rest. Plain causal attention over this window
+equals the paper's mask-token factorisation because exactly one chain is in
+flight at inference time.
+
+VSD draft: the same window advances the committed tokens, then K-1 extra
+single-token AR calls — K draft forwards/iteration vs PARD's 1 (Eq. 3 vs 4).
+
+Greedy (temperature 0) verification is exactly lossless vs AR decoding;
+temperature > 0 uses Leviathan speculative sampling (accept with p/q,
+resample from the clipped residual).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import forward, init_caches
+from ..models.config import SSM, ModelConfig, scan_plan
+
+Array = jax.Array
+
+
+def _row_take(x: Array, idx: Array) -> Array:
+    """x: [B, T, ...], idx: [B] -> [B, ...]."""
+    return jax.vmap(lambda r, i: jax.lax.dynamic_index_in_dim(r, i, 0, False))(x, idx)
+
+
+def _row_write(buf: Array, vec: Array, pos: Array) -> Array:
+    """buf: [B, L]; vec: [B, W]; pos: [B] -> buf with vec written at pos."""
+    return jax.vmap(lambda b, v, p: jax.lax.dynamic_update_slice(b, v, (p,)))(
+        buf, vec, pos)
+
+
+def gather_ssm_states(cfg: ModelConfig, collected, accept_idx: Array):
+    """Select per-token SSM states at the last accepted index.
+
+    ``collected`` is the new_caches pytree from a ``collect_ssm`` forward:
+    SSM entries hold per-token states (conv: [B, T, W-1, C], ssm:
+    [B, T, H, P, N]; scanned layers carry a leading repeats dim) while
+    attention entries are normal caches. Returns the cache pytree with every
+    SSM state set to the state after ``accept_idx[b]`` input tokens.
+    """
+    plan = scan_plan(cfg)
+
+    def row_gather(leaf):       # [B, T, ...] -> [B, ...]
+        return jax.vmap(lambda r, i: jax.lax.dynamic_index_in_dim(
+            r, i, 0, False))(leaf, accept_idx)
+
+    def pick(tree, scanned: bool):
+        def gather_leaf(leaf):
+            if scanned:         # [R, B, T, ...]
+                return jax.vmap(row_gather)(leaf)
+            return row_gather(leaf)
+        return jax.tree.map(gather_leaf, tree)
+
+    out = {"prefix": [], "scan": []}
+    for i, spec in enumerate(plan.prefix):
+        c = collected["prefix"][i]
+        out["prefix"].append(pick(c, False) if spec.mixer == SSM else c)
+    for j, spec in enumerate(plan.period):
+        c = collected["scan"][j]
+        out["scan"].append(pick(c, True) if spec.mixer == SSM else c)
+    return out
+
+
+def _has_ssm(cfg: ModelConfig) -> bool:
+    plan = scan_plan(cfg)
+    return any(s.mixer == SSM for s in plan.prefix + plan.period)
+
+
+def speculative_accept(p_full, qprob, props, rng):
+    """Leviathan speculative sampling (the T>0 acceptance rule).
+
+    p_full: [B, K+1, V] target probabilities at each verify position
+    qprob:  [B, K, V]   draft proposal distributions
+    props:  [B, K]      proposed tokens
+    Returns (a [B] number accepted, commit_tok [B] the correction/bonus
+    token). The induced distribution of every committed token equals the
+    target's own sampling distribution (tested in tests/test_spec_decode).
+    """
+    b, k = props.shape
+    r_acc, r_res = jax.random.split(rng)
+    p_at = jnp.take_along_axis(p_full[:, :k], props[..., None], axis=-1)[..., 0]
+    q_at = jnp.take_along_axis(qprob, props[..., None], axis=-1)[..., 0]
+    u = jax.random.uniform(r_acc, p_at.shape)
+    ok = (u * q_at < p_at).astype(jnp.int32)
+    accepted = jnp.cumprod(ok, axis=1)
+    a = jnp.sum(accepted, axis=1)
+    # residual at the first reject; when a == K the padded q row is 0 so the
+    # residual reduces to the target dist (bonus sampling) automatically
+    q_ext = jnp.concatenate([qprob, jnp.zeros_like(qprob[:, :1])], axis=1)
+    p_a = _row_take(p_full, a)
+    q_a = _row_take(q_ext, a)
+    resid = jnp.maximum(p_a - q_a, 0.0)
+    resid = resid / jnp.maximum(jnp.sum(resid, axis=-1, keepdims=True), 1e-9)
+    commit_tok = jax.random.categorical(
+        r_res, jnp.log(resid + 1e-30)).astype(jnp.int32)
+    return a, accepted, commit_tok
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SpecStats:
+    iterations: int
+    tokens_generated: int
+    draft_forwards: int
+    target_forwards: int
+    accept_hist: Any          # [K] — how often draft position j was accepted
+    acceptance_rate: float    # mean accepted drafts / K per iteration
+    mean_accepted: float      # mean committed tokens per iteration (a+1)
+
+
+class SpecDecoder:
+    """Bundles target + draft and exposes AR / VSD / PARD generation.
+
+    All public ``generate_*`` methods take ``prompt [B, P]`` (uniform length;
+    the batched serving engine in serving/engine.py handles ragged requests)
+    and return (tokens [B, P + max_new], SpecStats).
+    """
+
+    def __init__(self, target_params, target_cfg: ModelConfig,
+                 draft_params=None, draft_cfg: ModelConfig = None, *,
+                 k: int = 8, max_len: int = 2048, temperature: float = 0.0,
+                 enc_out=None, draft_enc_out=None):
+        self.tp, self.tc = target_params, target_cfg
+        self.dp, self.dc = draft_params, draft_cfg
+        self.k = k
+        self.max_len = max_len
+        self.temperature = temperature
+        self.enc_out = enc_out
+        self.draft_enc_out = draft_enc_out
+        if draft_cfg is not None:
+            assert draft_cfg.vocab_size == target_cfg.vocab_size, \
+                "speculative decoding requires a shared tokenizer/vocab"
+        self._jit_cache: Dict[str, Any] = {}
+
+    # -- jitted primitives ------------------------------------------------
+    def _fn(self, name, builder, donate=()):
+        if name not in self._jit_cache:
+            self._jit_cache[name] = jax.jit(builder, donate_argnums=donate)
+        return self._jit_cache[name]
+
+    def _target_forward(self, tokens, caches, cache_pos, collect_ssm=False):
+        return forward(self.tp, self.tc, tokens, caches=caches,
+                       cache_pos=cache_pos, enc_out=self.enc_out,
+                       collect_ssm=collect_ssm)
+
+    def _draft_forward(self, tokens, caches, cache_pos, collect_ssm=False):
+        return forward(self.dp, self.dc, tokens, caches=caches,
+                       cache_pos=cache_pos, enc_out=self.draft_enc_out,
+                       collect_ssm=collect_ssm)
+
+    # ----------------------------------------------------------------- AR
+    def generate_ar(self, prompt: Array, max_new: int):
+        b, p = prompt.shape
+        caches = init_caches(self.tc, b, self.max_len)
+
+        prefill = self._fn("ar_prefill", lambda toks, c: self._target_forward(
+            toks, c, jnp.zeros((toks.shape[0],), jnp.int32)), donate=(1,))
+
+        def step(tok, c, pos):
+            logits, c, _ = self._target_forward(tok, c, pos)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            return nxt, c
+
+        step = self._fn("ar_step", step, donate=(1,))
+
+        logits, caches, _ = prefill(prompt, caches)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        out = [prompt]
+        cur = nxt
+        pos = jnp.full((b,), p, jnp.int32)
+        for i in range(max_new - 1):
+            out.append(cur[:, None])
+            cur, caches = step(cur[:, None], caches, pos)
+            pos = pos + 1
+        out.append(cur[:, None])
+        tokens = jnp.concatenate(out, axis=1)
+        stats = SpecStats(max_new, max_new * b, 0, max_new, None, 0.0, 1.0)
+        return tokens, stats
+
+    # ------------------------------------------------------------- shared
+    def _build_spec_step(self, mode: str):
+        k = self.k
+        tc, dc = self.tc, self.dc
+        mask_id = dc.mask_token_id
+        t_has_ssm = _has_ssm(tc)
+        d_has_ssm = _has_ssm(dc)
+        temp = self.temperature
+
+        def draft_window(gen, n, m):
+            """[B, 2K] window of new committed tokens + masks."""
+            b = gen.shape[0]
+            i = jnp.arange(2 * k)[None, :]
+            idx = m[:, None] + i
+            a = (n - m)[:, None]                      # committed, unprocessed
+            tok = jnp.take_along_axis(gen, jnp.clip(idx, 0, gen.shape[1] - 1),
+                                      axis=1)
+            is_real = i < a
+            is_mask = (i >= a) & (i < a + (k - 1))
+            tok = jnp.where(is_real, tok, jnp.where(is_mask, mask_id, 0))
+            return tok.astype(jnp.int32)
+
+        def propose_pard(gen, n, m, dcache, rng):
+            tok = draft_window(gen, n, m)
+            logits, dcache, _ = self._draft_forward(
+                tok, dcache, m, collect_ssm=d_has_ssm)
+            if d_has_ssm:
+                # state after the last real token (input index A-1)
+                dcache = gather_ssm_states(dc, dcache, n - m - 1)
+            a = n - m
+            sl = (a - 1)[:, None] + jnp.arange(k)[None, :]
+            lg = jax.vmap(lambda l, s: l[s])(logits, sl)   # [B, K, V]
+            if temp == 0.0:
+                props = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                qprob = None
+            else:
+                lg = lg.astype(jnp.float32) / temp
+                props = jax.random.categorical(rng, lg).astype(jnp.int32)
+                qprob = jax.nn.softmax(lg, axis=-1)
+            return props, qprob, dcache, 1                  # 1 draft forward
+
+        def propose_vsd(gen, n, m, dcache, rng):
+            # call 1: advance committed window, propose token 1
+            tok = draft_window(gen, n, m)[:, :k + 1]        # reals only window
+            logits, dcache, _ = self._draft_forward(
+                tok, dcache, m, collect_ssm=d_has_ssm)
+            a = n - m
+            if d_has_ssm:
+                # roll SSM state back to "after the last real token"; the AR
+                # proposal calls below advance a throwaway copy, the next
+                # iteration restarts from this snapshot.
+                dcache = gather_ssm_states(dc, dcache, a - 1)
+            snapshot = dcache
+            lg_list = [jax.vmap(lambda l, i: l[i])(logits, a - 1)]  # [B, V]
+            props = []
+            rngs = jax.random.split(rng, k)
+            cur_pos = n
+            for j in range(k - 1 + 1):
+                lgj = lg_list[-1]
+                if temp == 0.0:
+                    pj = jnp.argmax(lgj, axis=-1).astype(jnp.int32)
+                else:
+                    pj = jax.random.categorical(
+                        rngs[j], lgj.astype(jnp.float32) / temp).astype(jnp.int32)
+                props.append(pj)
+                if j == k - 1:
+                    break
+                lgn, dcache, _ = self._draft_forward(pj[:, None], dcache, cur_pos)
+                cur_pos = cur_pos + 1
+                lg_list.append(lgn[:, 0])
+            props = jnp.stack(props, axis=1)                # [B, K]
+            if temp == 0.0:
+                qprob = None
+            else:
+                qprob = jax.nn.softmax(
+                    jnp.stack(lg_list, axis=1).astype(jnp.float32) / temp, axis=-1)
+            return props, qprob, snapshot, k                # K draft forwards
+
+        propose = propose_pard if mode == "pard" else propose_vsd
+
+        def step(gen, n, m, done, tcache, dcache, rng):
+            b = gen.shape[0]
+            rng, r1, r2, r3 = jax.random.split(rng, 4)
+            props, qprob, dcache, n_draft = propose(gen, n, m, dcache, r1)
+
+            # verify window: [last committed, d_1..d_K]
+            last = jnp.take_along_axis(gen, (n - 1)[:, None], axis=1)
+            vin = jnp.concatenate([last.astype(jnp.int32), props], axis=1)
+            logits, tcache_new, _ = self._target_forward(
+                vin, tcache, n - 1, collect_ssm=t_has_ssm)
+
+            if temp == 0.0:
+                tgt = jnp.argmax(logits[:, :k], axis=-1).astype(jnp.int32)
+                match = (props == tgt).astype(jnp.int32)
+                accepted = jnp.cumprod(match, axis=1)        # [B, K]
+                a = jnp.sum(accepted, axis=1)                # [B]
+                all_argmax = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                commit_tok = _row_take(all_argmax, a)        # correction/bonus
+            else:
+                p_full = jax.nn.softmax(
+                    logits.astype(jnp.float32) / temp, axis=-1)  # [B, K+1, V]
+                a, accepted, commit_tok = speculative_accept(
+                    p_full, qprob, props, r2)
+
+            # committed tokens this iteration: d_1..d_a, then commit_tok
+            j = jnp.arange(k + 1)[None, :]
+            props_ext = jnp.concatenate([props, props[:, -1:]], axis=1)
+            vec = jnp.where(j < a[:, None], props_ext,
+                            jnp.where(j == a[:, None], commit_tok[:, None], 0))
+            # frozen rows: rewrite what's already there
+            old = jax.vmap(lambda g, p: jax.lax.dynamic_slice(g, (p,), (k + 1,)))(
+                gen, n)
+            vec = jnp.where(done[:, None], old, vec)
+            gen = _row_write(gen, vec.astype(gen.dtype), n)
+
+            n_commit = jnp.where(done, 0, a + 1)
+            new_m = jnp.where(done, m, n)
+            new_n = n + n_commit
+
+            if t_has_ssm:
+                # state after input index a (= last committed token processed)
+                tcache_new = gather_ssm_states(tc, tcache_new, a)
+            # frozen rows keep old caches? their cache contents are untouched
+            # at positions < n and never read beyond; safe to keep new buffers.
+            acc_hist = jnp.sum(
+                jnp.where(done[:, None], 0, accepted), axis=0)  # [K]
+            return (gen, new_n, new_m, tcache_new, dcache,
+                    jnp.where(done, 0, a), acc_hist, n_draft)
+
+        return step
+
+    def generate_spec(self, prompt: Array, max_new: int, mode: str = "pard",
+                      seed: int = 0):
+        assert self.dp is not None, "spec decoding requires a draft model"
+        b, p = prompt.shape
+        k = self.k
+        tcache = init_caches(self.tc, b, self.max_len)
+        dcache = init_caches(self.dc, b, self.max_len)
+
+        prefill_t = self._fn("sp_prefill_t", lambda t, c: self._target_forward(
+            t, c, jnp.zeros((t.shape[0],), jnp.int32)), donate=(1,))
+        prefill_d = self._fn("sp_prefill_d", lambda t, c: self._draft_forward(
+            t, c, jnp.zeros((t.shape[0],), jnp.int32)), donate=(1,))
+        # donate gen + both cache pools: the engine's steady state then
+        # updates KV in place (no per-iteration multi-MB buffer copies)
+        step = self._fn(f"spec_step_{mode}_{self.temperature}",
+                        self._build_spec_step(mode), donate=(0, 4, 5))
+
+        # Both prefills stop at prompt[:-1]: the verify window re-processes
+        # x_{P-1} (an idempotent KV rewrite for attention — but SSM state
+        # must NOT see it twice, so it is excluded here).
+        assert p >= 2, "prompts must have at least 2 tokens"
+        _, tcache, _ = prefill_t(prompt[:, :-1], tcache)
+        _, dcache, _ = prefill_d(prompt[:, :-1], dcache)
+
+        L = p + max_new + 2 * k + 2   # room for the final (K+1)-slot write
+        gen = jnp.zeros((b, L), jnp.int32)
+        gen = gen.at[:, :p].set(prompt)
+        n = jnp.full((b,), p, jnp.int32)
+        m = jnp.full((b,), p - 1, jnp.int32)
+        done = jnp.zeros((b,), bool)
+        rng = jax.random.PRNGKey(seed)
+
+        iters, draft_calls, target_calls = 0, 0, 0
+        acc_hist = jnp.zeros((k,), jnp.int32)
+        acc_total, live_iters = 0, 0
+        target_n = p + max_new
+        while True:
+            live = int(jnp.sum(~done))
+            rng, sub = jax.random.split(rng)
+            gen, n, m, tcache, dcache, a, hist, n_draft = step(
+                gen, n, m, done, tcache, dcache, sub)
+            iters += 1
+            live_iters += live
+            draft_calls += n_draft
+            target_calls += 1
+            acc_hist = acc_hist + hist
+            acc_total += int(jnp.sum(a))
+            done = n >= target_n
+            if bool(jnp.all(done)) or iters > max_new + 2:
+                break
+
+        tokens = gen[:, :target_n]
+        live_iters = max(live_iters, 1)
+        stats = SpecStats(
+            iterations=iters,
+            tokens_generated=int(jnp.sum(jnp.minimum(n, target_n) - p)),
+            draft_forwards=draft_calls,
+            target_forwards=target_calls,
+            accept_hist=jax.device_get(acc_hist),
+            acceptance_rate=acc_total / (live_iters * k),
+            mean_accepted=acc_total / live_iters + 1.0,
+        )
+        return tokens, stats

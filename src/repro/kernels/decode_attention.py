@@ -1,0 +1,122 @@
+"""Speculative-verify / decode attention — Pallas TPU kernel.
+
+The PARD serving hot path: a small query block (1 AR token or the K+1
+verification window) attends to a long KV cache. This is the kernel the
+paper's Table 6 bandwidth argument lives in: per iteration the draft+target
+weights stream once, and the KV cache stream dominates — so the kernel's job
+is to keep the cache read perfectly sequential and do the online softmax in
+VMEM.
+
+Grid: (batch, kv_head, num_kv_blocks). ALL queries for one kv head — the
+(K+1) positions x G grouped q heads — are flattened into one [Tq*G, D] tile
+that stays resident in VMEM across the whole cache sweep (Tq*G <= a few
+hundred rows), while K/V blocks stream through. Per-row validity comes from
+(kv_len, q_pos) scalars, prefetched to SMEM-like VMEM blocks.
+
+Blocks past kv_len are skipped entirely (pl.when on the block index), so the
+swept bytes scale with the *actual* cache fill, not the allocated max_len.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qpos_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s,
+            *, scale, window, softcap, block_k, tq, g):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    kv_len = kvlen_ref[0]                              # scalar for this row
+    k_start = ki * block_k
+
+    @pl.when(k_start < kv_len)
+    def _compute():
+        q = q_ref[0, :, :, :].astype(jnp.float32)      # [tq, g, d]
+        d = q.shape[-1]
+        q2 = q.reshape(tq * g, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # [bk, d]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jnp.dot(q2, k.T, preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+
+        # rows are (q position i, group member): validity depends only on i
+        qp = qpos_ref[0, :]                            # [tq]
+        qp_rows = jnp.repeat(qp, g)[:, None]           # [tq*g, 1] — static
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (tq * g, block_k), 1)
+        mask = (k_pos < kv_len) & (k_pos <= qp_rows)
+        if window:
+            mask &= k_pos > qp_rows - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_s[...] = acc_s[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _final():
+        l = jnp.where(l_s[...] == 0.0, 1.0, l_s[...])
+        o_ref[0, :, 0, :] = (acc_s[...] / l).reshape(
+            tq, g * acc_s.shape[-1]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, kv_len, q_pos, *, window=0, softcap=0.0,
+                     scale=None, block_k=256, interpret=False):
+    """q: [B, Tq, Hq, D] (Tq small); k, v: [B, S, Hkv, D];
+    kv_len: [B] int32 valid cache entries; q_pos: [B, Tq] absolute."""
+    b, tq, hq, d = q.shape
+    s_len, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+
+    # group q heads by their kv head: [B, Tq, Hkv, G, D]
+    qg = q.reshape(b, tq, hkv, g, d)
+    grid = (b, hkv, pl.cdiv(s_len, block_k))
+
+    kern = functools.partial(_kernel, scale=scale, window=window,
+                             softcap=softcap, block_k=block_k, tq=tq, g=g)
+
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tq), lambda bi, h, ki: (bi, 0)),       # q_pos
+            pl.BlockSpec((1,), lambda bi, h, ki: (bi,)),            # kv_len
+            pl.BlockSpec((1, tq, 1, g, d),
+                         lambda bi, h, ki: (bi, 0, h, 0, 0)),       # q
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bi, h, ki: (bi, ki, h, 0)),         # k
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bi, h, ki: (bi, ki, h, 0)),         # v
+        ],
+        out_specs=pl.BlockSpec((1, tq, 1, g * d),
+                               lambda bi, h, ki: (bi, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, tq, hkv, g * d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq * g, 1), jnp.float32),
+            pltpu.VMEM((tq * g, 1), jnp.float32),
+            pltpu.VMEM((tq * g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos.astype(jnp.int32), kv_len.astype(jnp.int32), qg, k, v)
+    return out.reshape(b, tq, hq, d)

@@ -1,0 +1,114 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handle padding to TPU-aligned block shapes, GQA head grouping, dtype
+plumbing, and interpret-mode dispatch (CPU backend -> interpret=True so the
+kernels validate on this container; on TPU they compile natively).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import decode_attention as _dec
+from . import flash_attention as _fa
+from . import pard_attention as _pard
+from . import ssd as _ssd
+
+
+def _interpret(flag):
+    if flag is not None:
+        return flag
+    return jax.default_backend() == "cpu"
+
+
+def _pad_axis(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if not pad:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    scale=None, block_q=128, block_k=128, interpret=None):
+    """Drop-in for ref.flash_attention_ref. Pads T/S/D to block multiples."""
+    interpret = _interpret(interpret)
+    b, t, hq, d = q.shape
+    block_q = min(block_q, max(8, 1 << (t - 1).bit_length()))
+    block_k = min(block_k, max(8, 1 << (k.shape[1] - 1).bit_length()))
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    q, _ = _pad_axis(q, 1, block_q)
+    k, s_orig = _pad_axis(k, 1, block_k)
+    v, _ = _pad_axis(v, 1, block_k)
+    # padded kv tail is masked via seq_len; padded q rows are dropped below
+    out = _fa.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap, scale=scale, block_q=block_q,
+                              block_k=block_k, interpret=interpret)
+    return out[:, :t]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "softcap", "scale", "block_k", "interpret"))
+def decode_attention(q, k, v, kv_len, q_pos, *, window=0, softcap=0.0,
+                     scale=None, block_k=256, interpret=None):
+    interpret = _interpret(interpret)
+    b, tq, hq, d = q.shape
+    block_k = min(block_k, max(8, 1 << (k.shape[1] - 1).bit_length()))
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    k, _ = _pad_axis(k, 1, block_k)
+    v, _ = _pad_axis(v, 1, block_k)
+    return _dec.decode_attention(q, k, v, kv_len, q_pos, window=window,
+                                 softcap=softcap, scale=scale,
+                                 block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "softcap", "block_q", "block_k", "interpret"))
+def pard_attention(q, k, v, segment, base, *, scale=None, softcap=0.0,
+                   block_q=128, block_k=128, interpret=None):
+    """GQA is handled by repeating KV heads (draft models are small; the
+    repeat is cheap relative to the mask-aware attention itself)."""
+    interpret = _interpret(interpret)
+    b, t, hq, d = q.shape
+    hkv = k.shape[2]
+    if hkv != hq:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    block_q = min(block_q, max(8, 1 << (t - 1).bit_length()))
+    block_k = min(block_k, block_q)
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    q, _ = _pad_axis(q, 1, block_q)
+    k, _ = _pad_axis(k, 1, block_k)
+    v, _ = _pad_axis(v, 1, block_k)
+    seg, _ = _pad_axis(segment.astype(jnp.int32), 1, block_q)  # pad seg=0
+    bas, _ = _pad_axis(base.astype(jnp.int32), 1, block_q)
+    out = _pard.pard_attention(q, k, v, seg, bas, scale=scale,
+                               softcap=softcap, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+    return out[:, :t]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked(x, dt, A, B, C, init_state=None, *, chunk=128,
+                interpret=None):
+    interpret = _interpret(interpret)
+    b, t, h, p = x.shape
+    chunk = min(chunk, max(8, 1 << (t - 1).bit_length()))
+    x, t_orig = _pad_axis(x, 1, chunk)
+    dt, _ = _pad_axis(dt, 1, chunk)      # padded dt=0 -> exp(0)=1, x=0: no-op
+    B, _ = _pad_axis(B, 1, chunk)
+    C, _ = _pad_axis(C, 1, chunk)
+    y, sf = _ssd.ssd_chunked_kernel(x, dt, A, B, C, init_state, chunk=chunk,
+                                    interpret=interpret)
+    return y[:, :t_orig], sf

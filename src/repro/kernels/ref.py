@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic source of truth: each kernel's tests sweep shapes and
+dtypes and assert allclose against these functions. They intentionally share
+the model's reference attention core (models.attention.attend — itself pure
+jnp) so the kernels are validated against exactly what the model computes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.attention import NEG_INF, PardMaskInfo, attend, pard_mask
+from ..models.ssm import ssd_scan_chunked, ssd_scan_ref
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
+                        scale=None):
+    """q: [B,T,Hq,D]; k,v: [B,S,Hkv,D] (GQA: Hq % Hkv == 0)."""
+    b, t = q.shape[:2]
+    s = k.shape[1]
+    q_pos = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    kv_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    return attend(q, k, v, q_pos, kv_pos, s, causal=causal, window=window,
+                  attn_softcap=softcap, scale=scale)
+
+
+def decode_attention_ref(q, k, v, kv_len, q_pos, *, window=0, softcap=0.0,
+                         scale=None):
+    """Speculative-verify attention: small q against a long KV cache.
+
+    q: [B,Tq,Hq,D]; k,v: [B,S,Hkv,D]; kv_len: [B]; q_pos: [B,Tq] absolute.
+    """
+    b = q.shape[0]
+    s = k.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    return attend(q, k, v, q_pos, kv_pos, kv_len, causal=True, window=window,
+                  attn_softcap=softcap, scale=scale)
+
+
+def pard_attention_ref(q, k, v, segment, base, *, scale=None, softcap=0.0):
+    """PARD-COD training attention; mask from (segment, base) metadata.
+
+    q,k,v: [B,T,H*,D]; segment, base: [B,T] int32 (segment 0 = padding).
+    """
+    b, t = q.shape[:2]
+    pos = jnp.zeros((b, t), jnp.int32)
+    info = PardMaskInfo(jnp.asarray(segment), jnp.asarray(base))
+    return attend(q, k, v, pos, pos, t, causal=False, attn_softcap=softcap,
+                  scale=scale, mask_info=info)
+
+
+def ssd_ref(x, dt, A, B, C, init_state=None):
+    """Token-by-token SSD oracle. x: [b,t,h,p]; dt: [b,t,h] (post-softplus);
+    A: [h] (negative); B,C: [b,t,n]. Returns (y, final_state)."""
+    return ssd_scan_ref(x, dt, A, B, C, init_state=init_state)

@@ -1,0 +1,107 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+
+Grid: (batch, head, num_chunks), chunks innermost; the running state
+S [P, N] lives in VMEM scratch and is carried across chunk iterations
+(sequential dependence is exactly the flash-attention revisiting pattern,
+with the state playing the accumulator role).
+
+Per chunk (length L):
+  cum_t   = cumsum(dt_t * A)                         (log-decay prefix)
+  y_intra = ((C B^T) ∘ exp(cum_i - cum_j) ∘ causal) @ (dt x)
+  y_state = (C @ S_in) * exp(cum)
+  S_out   = S_in * exp(cum_L) + sum_j exp(cum_L - cum_j) dt_j x_j B_j^T
+
+The intra-chunk term is two MXU matmuls of shape [L,N]x[N,L] and [L,L]x[L,P]
+— chunk length L is chosen 128/256 so both hit the systolic array at full
+tile occupancy; dt/A gating is VPU elementwise work on [L] vectors.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, s0_ref, y_ref, sf_ref, s_s,
+            *, chunk):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_s[...] = s0_ref[0, 0, :, :].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)         # [L, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)          # [L]
+    A = a_ref[0]                                       # scalar (per head)
+    B = b_ref[0, :, :].astype(jnp.float32)            # [L, N]
+    C = c_ref[0, :, :].astype(jnp.float32)            # [L, N]
+
+    dtA = dt * A                                       # [L]
+    cum = jnp.cumsum(dtA)                              # [L]
+    l = x.shape[0]
+    i = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    w = jnp.where(i >= j, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+    cb = jnp.dot(C, B.T, preferred_element_type=jnp.float32)   # [L, L]
+    gate = w * cb
+    xdt = x * dt[:, None]                              # [L, P]
+    y_intra = jnp.dot(gate, xdt, preferred_element_type=jnp.float32)
+
+    S = s_s[...]                                       # [P, N]
+    y_state = jnp.dot(C, S.T, preferred_element_type=jnp.float32) \
+        * jnp.exp(cum)[:, None]                        # [L, P]... (C@S^T)[l,p]
+    y_ref[0, :, 0, :] = (y_intra + y_state).astype(y_ref.dtype)
+
+    decay_end = jnp.exp(cum[-1] - cum)                 # [L]
+    S_new = S * jnp.exp(cum[-1]) + jnp.dot(
+        (xdt * decay_end[:, None]).T, B,
+        preferred_element_type=jnp.float32)            # [P, N]
+    s_s[...] = S_new
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        sf_ref[0, 0, :, :] = S_new.astype(sf_ref.dtype)
+
+
+def ssd_chunked_kernel(x, dt, A, B, C, init_state=None, *, chunk=128,
+                       interpret=False):
+    """x: [b, t, h, p]; dt: [b, t, h] (post-softplus); A: [h] (negative);
+    B, C: [b, t, n]; init_state: [b, h, p, n] or None.
+    Returns (y [b,t,h,p], final_state [b,h,p,n]). t must be a multiple of
+    ``chunk`` (ops.py pads)."""
+    b, t, h, p = x.shape
+    n = B.shape[-1]
+    assert t % chunk == 0, "pad t to a chunk multiple in ops.py"
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+    nc = t // chunk
+
+    kern = functools.partial(_kernel, chunk=chunk)
+    # B/C are shared across heads: index maps ignore the head coordinate
+    y, sf = pl.pallas_call(
+        kern,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hh, ci: (bi, ci, hh, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hh, ci: (bi, ci, hh)),
+            pl.BlockSpec((1,), lambda bi, hh, ci: (hh,)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hh, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hh, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hh, ci: (bi, hh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hh, ci: (bi, ci, hh, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hh, ci: (bi, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), B, C, init_state.astype(jnp.float32))
+    return y, sf

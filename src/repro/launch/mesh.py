@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+Single pod: TPU v5e-256 -> (16, 16) over ("data", "model").
+Multi-pod:  2 pods = 512 chips -> (2, 16, 16) over ("pod", "data", "model").
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before first jax init;
+tests and benches must keep seeing 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link (~per-chip usable)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1):
+    """A tiny mesh over however many (real or placeholder) devices exist —
+    for tests that want sharded execution on CPU."""
+    n = jax.device_count()
+    data = n // model
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

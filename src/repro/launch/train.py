@@ -1,0 +1,84 @@
+"""Distributed training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tiny-target \
+      --steps 100 --batch 16 --seq 128 [--pard --draft-init ckpt.npz]
+
+On real hardware this process runs once per host (jax.distributed handles
+the rest); on this container it runs the same code path on the local
+device(s). ``--mesh data,model`` shards over the host mesh when more than
+one device is available.
+"""
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core.cod import CodConfig
+from repro.data.pipeline import MarkovCorpus
+from repro.models import init_params
+from repro.sharding.specs import param_specs
+from repro.training import checkpoint
+from repro.training.optimizer import AdamW, cosine_schedule
+from repro.training.train_loop import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--pard", action="store_true",
+                    help="PARD adaptation objective instead of AR")
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--r", type=float, default=0.7)
+    ap.add_argument("--r-min", type=float, default=0.2)
+    ap.add_argument("--init", default=None, help="checkpoint to start from")
+    ap.add_argument("--out", default=None, help="checkpoint output path")
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    if args.init:
+        params = checkpoint.restore(args.init, params)
+
+    mesh = psharding = dsharding = None
+    if jax.device_count() > 1:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh(model=args.model_parallel)
+        pspec = param_specs(params, mesh, fsdp=False)
+        psharding = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec,
+                                 is_leaf=lambda x: isinstance(x, P))
+        params = jax.device_put(params, psharding)
+        dsharding = jax.tree.map(
+            lambda _: NamedSharding(mesh, P("data", None)),
+            {"tokens": 0} if not args.pard else
+            {k: 0 for k in ("input_ids", "position_ids", "labels",
+                            "segment", "base")})
+
+    corpus = MarkovCorpus(vocab_size=cfg.vocab_size, seed=0, determinism=2.0)
+    opt = AdamW(lr=cosine_schedule(args.lr, min(30, args.steps // 5 + 1),
+                                   args.steps))
+    cod = CodConfig(k=args.k, r=args.r, r_min=args.r_min)
+    tr = Trainer(cfg, opt, loss_kind="pard" if args.pard else "ar", cod=cod,
+                 mesh=mesh, param_sharding=psharding, data_sharding=dsharding)
+    params, _, hist = tr.fit(params, corpus.batches(args.batch, args.seq,
+                                                    seed=args.seed),
+                             args.steps, log_every=max(args.steps // 10, 1))
+    if args.out:
+        checkpoint.save(args.out, params,
+                        metadata={"arch": args.arch, "steps": args.steps,
+                                  "pard": args.pard,
+                                  "final_loss": hist[-1]["loss"]})
+        print("saved", args.out)
+
+
+if __name__ == "__main__":
+    main()

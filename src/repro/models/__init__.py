@@ -1,0 +1,4 @@
+from .config import ModelConfig, LayerSpec, layer_plan, scan_plan
+from .transformer import init_params, init_caches, forward, encode
+from .frontend import (fake_frontend_embed, frontend_embed_shape,
+                       frontend_embed_spec)

@@ -1,0 +1,344 @@
+"""Attention blocks: GQA (global / sliding-window), MLA, cross-attention.
+
+All flavours share one masked-attention core (``attend``) driven by absolute
+positions, so training (no cache), prefill (cache write, full seq) and decode
+(small q against a long cache) are the same code path. The PARD training
+mask (Fig. 4/5 of the paper) enters through ``mask_info`` — per-token
+(segment, base) metadata — and is computed functionally, never materialised
+by the caller.
+
+KV caches are contiguous buffers indexed by absolute position; speculative
+rollback is just resetting ``cache_pos`` (stale entries are masked out by the
+validity test ``kv_index < kv_len``).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, softcap
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+# attention backend: "xla" (jnp reference, default) or "pallas" (the
+# kernels/ implementations; interpret-mode on CPU, native on TPU). Switch
+# with set_attention_backend — tests assert both paths agree.
+_BACKEND = "xla"
+
+
+def set_attention_backend(name: str) -> None:
+    global _BACKEND
+    assert name in ("xla", "pallas")
+    _BACKEND = name
+
+
+def _pallas_ok(q, k, mask_info, scale) -> bool:
+    """The Pallas kernels cover the standard GQA cases: no PARD metadata
+    (training masks use ops.pard_attention via the loss path), head_dim
+    uniform q/k (excludes MLA's mixed dims handled by the xla path)."""
+    return (_BACKEND == "pallas" and mask_info is None
+            and q.shape[-1] == k.shape[-1])
+
+
+class PardMaskInfo(NamedTuple):
+    """Per-token PARD-COD metadata (see core/cod.py).
+
+    segment[i] = s >= 1: which prediction subtask the token belongs to
+                 (s==1: real tokens; s>=2: mask tokens predicting the s-th
+                 next token).
+    base[i]    = n: context length the token conditions on. For s==1 tokens
+                 base == position == index in the original sequence.
+    A query (s_q, n_q) may attend key (s_k, n_k) iff:
+      s_k == 1 and n_k <  n_q              (real context)
+      s_k  > 1 and s_k <  s_q and n_k == n_q   (earlier masks, same base)
+      s_k == s_q and n_k == n_q            (self)
+    Padding tokens carry segment == 0 and never attend / are attended.
+    """
+    segment: Array  # [B, T] int32
+    base: Array     # [B, T] int32
+
+
+def pard_mask(q_seg, q_base, k_seg, k_base):
+    """Boolean [.., Tq, Tk] PARD training mask from metadata (broadcasts)."""
+    qs, qb = q_seg[..., :, None], q_base[..., :, None]
+    ks, kb = k_seg[..., None, :], k_base[..., None, :]
+    real_ctx = (ks == 1) & (kb < qb)
+    mask_chain = (ks > 1) & (ks < qs) & (kb == qb)
+    self_tok = (ks == qs) & (kb == qb)
+    valid = (qs > 0) & (ks > 0)
+    return valid & (real_ctx | mask_chain | self_tok)
+
+
+def attend(q, k, v, q_pos, kv_pos, kv_len, *, causal=True, window=0,
+           attn_softcap=0.0, scale=None, mask_info=None, kv_mask_info=None):
+    """Masked multi-head attention core (pure jnp reference path).
+
+    q:      [B, Tq, Hq, Dk]
+    k, v:   [B, Tk, Hkv, Dk] / [B, Tk, Hkv, Dv]
+    q_pos:  [B, Tq] absolute positions of queries
+    kv_pos: [B, Tk] absolute positions of keys
+    kv_len: [B] or scalar — number of valid cache entries (Tk used)
+    """
+    b, tq, hq, dk = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / math.sqrt(dk)
+
+    if _pallas_ok(q, k, mask_info, scale) and causal:
+        from ..kernels import ops
+        kv_len_arr = jnp.broadcast_to(jnp.asarray(kv_len), (b,)).astype(jnp.int32)
+        if tq == k.shape[1]:          # full self-attention (training/prefill)
+            return ops.flash_attention(q, k, v, causal=True, window=window,
+                                       softcap=attn_softcap, scale=scale)
+        # small-q decode/verify against a long cache
+        return ops.decode_attention(q, k, v, kv_len_arr, q_pos,
+                                    window=window, softcap=attn_softcap,
+                                    scale=scale)
+
+    qg = q.reshape(b, tq, hkv, g, dk)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = softcap(logits, attn_softcap)
+
+    if mask_info is not None:
+        allowed = pard_mask(mask_info.segment, mask_info.base,
+                            (kv_mask_info or mask_info).segment,
+                            (kv_mask_info or mask_info).base)      # [B,Tq,Tk]
+    else:
+        allowed = jnp.ones((b, tq, k.shape[1]), bool)
+        if causal:
+            allowed &= kv_pos[:, None, :] <= q_pos[:, :, None]
+        if window:
+            allowed &= kv_pos[:, None, :] > (q_pos[:, :, None] - window)
+    kv_len = jnp.asarray(kv_len)
+    if kv_len.ndim == 0:
+        kv_len = jnp.full((b,), kv_len)
+    valid = jnp.arange(k.shape[1])[None, :] < kv_len[:, None]       # [B,Tk]
+    allowed &= valid[:, None, :]
+
+    logits = jnp.where(allowed[:, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # rows with no allowed key (padding queries) produce ~uniform probs over
+    # masked keys; their output is garbage but they are never read.
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, tq, hq, -1).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def _dense(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) / math.sqrt(fan_in)
+
+
+def init_gqa(key, cfg, cross: bool = False):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": _dense(k1, (d, hq, hd), d),
+        "wk": _dense(k2, (d, hkv, hd), d),
+        "wv": _dense(k3, (d, hkv, hd), d),
+        "wo": _dense(k4, (hq, hd, d), hq * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq, hd), jnp.float32)
+        p["bk"] = jnp.zeros((hkv, hd), jnp.float32)
+        p["bv"] = jnp.zeros((hkv, hd), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def init_gqa_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {"k": jnp.zeros((batch, max_len, hkv, hd), dtype),
+            "v": jnp.zeros((batch, max_len, hkv, hd), dtype)}
+
+
+def _write_cache(buf, new, cache_pos):
+    """buf: [B, max, H, D]; new: [B, T, H, D]; cache_pos: [B] int32."""
+    b, t = new.shape[0], new.shape[1]
+
+    def row(buf_r, new_r, p):
+        return jax.lax.dynamic_update_slice(buf_r, new_r.astype(buf_r.dtype), (p, 0, 0))
+
+    return jax.vmap(row)(buf, new, cache_pos)
+
+
+def _qk_rmsnorm(x, scale, eps):
+    v = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(v + eps) * scale).astype(x.dtype)
+
+
+def gqa_apply(params, cfg, x, positions, *, layer_window=0, cache=None,
+              cache_pos=None, mask_info=None, causal=True, use_rope=True):
+    """Self attention. Returns (y, new_cache)."""
+    b, t, _ = x.shape
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = _qk_rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = _qk_rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    scale = cfg.attn_scale or None
+    if cache is None:
+        out = attend(q, k, v, positions, positions, t, causal=causal,
+                     window=layer_window, attn_softcap=cfg.attn_softcap,
+                     scale=scale, mask_info=mask_info)
+        new_cache = None
+    else:
+        new_k = _write_cache(cache["k"], k, cache_pos)
+        new_v = _write_cache(cache["v"], v, cache_pos)
+        new_cache = {"k": new_k, "v": new_v}
+        max_len = new_k.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(max_len)[None, :], (b, max_len))
+        kv_len = cache_pos + t
+        out = attend(q, new_k, new_v, positions, kv_pos, kv_len, causal=causal,
+                     window=layer_window, attn_softcap=cfg.attn_softcap,
+                     scale=scale)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (static encoder / image KV)
+# ---------------------------------------------------------------------------
+
+def init_cross_attn(key, cfg):
+    p = init_gqa(key, cfg)
+    if cfg.arch_type == "vlm":  # llama-vision gates cross-attn output
+        p["gate"] = jnp.zeros((), jnp.float32)
+    return p
+
+
+def precompute_cross_kv(params, cfg, enc_out):
+    """enc_out: [B, S, D] -> static cross KV."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"].astype(enc_out.dtype))
+    return {"k": k, "v": v}
+
+
+def cross_attn_apply(params, cfg, x, enc_out=None, cross_kv=None):
+    """Cross attention against encoder/image states. Pass either raw
+    ``enc_out`` [B, S, D] (KV computed here) or a precomputed ``cross_kv``
+    (decode-time optimisation, see ``precompute_cross_kv``)."""
+    b, t, _ = x.shape
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+    if cross_kv is None:
+        cross_kv = precompute_cross_kv(params, cfg, enc_out)
+    k, v = cross_kv["k"], cross_kv["v"]
+    s = k.shape[1]
+    pos = jnp.zeros((b, t), jnp.int32)
+    kv_pos = jnp.zeros((b, s), jnp.int32)
+    out = attend(q, k, v, pos, kv_pos, s, causal=False)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"].astype(x.dtype))
+    if "gate" in params:
+        y = jnp.tanh(params["gate"]).astype(y.dtype) * y
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg):
+    d, h = cfg.d_model, cfg.n_heads
+    r_kv, r_q = cfg.kv_lora_rank, cfg.q_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    p = {}
+    if r_q:
+        p["w_dq"] = _dense(ks[0], (d, r_q), d)
+        p["q_lora_norm"] = jnp.ones((r_q,), jnp.float32)
+        p["w_uq"] = _dense(ks[1], (r_q, h, dn + dr), r_q)
+    else:
+        p["w_q"] = _dense(ks[1], (d, h, dn + dr), d)
+    p["w_dkv"] = _dense(ks[2], (d, r_kv + dr), d)
+    p["kv_lora_norm"] = jnp.ones((r_kv,), jnp.float32)
+    p["w_uk"] = _dense(ks[3], (r_kv, h, dn), r_kv)
+    p["w_uv"] = _dense(ks[4], (r_kv, h, dv), r_kv)
+    p["wo"] = _dense(ks[5], (h, dv, d), h * dv)
+    return p
+
+
+def init_mla_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    width = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+    return {"ckv": jnp.zeros((batch, max_len, width), dtype)}
+
+
+def _rms(x, scale, eps):
+    v = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(v + eps) * scale).astype(x.dtype)
+
+
+def mla_apply(params, cfg, x, positions, *, cache=None, cache_pos=None,
+              mask_info=None):
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r_kv = cfg.kv_lora_rank
+
+    if "w_dq" in params:
+        cq = _rms(jnp.einsum("btd,dr->btr", x, params["w_dq"].astype(x.dtype)),
+                  params["q_lora_norm"], cfg.norm_eps)
+        q = jnp.einsum("btr,rhk->bthk", cq, params["w_uq"].astype(x.dtype))
+    else:
+        q = jnp.einsum("btd,dhk->bthk", x, params["w_q"].astype(x.dtype))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv_full = jnp.einsum("btd,dr->btr", x, params["w_dkv"].astype(x.dtype))
+    ckv, k_rope = ckv_full[..., :r_kv], ckv_full[..., r_kv:]
+    ckv = _rms(ckv, params["kv_lora_norm"], cfg.norm_eps)
+    # rope on the shared key channel (1 "head")
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    compressed = jnp.concatenate([ckv, k_rope], axis=-1)     # [B,T,r_kv+dr]
+
+    if cache is not None:
+        buf = jax.vmap(lambda bf, nw, p: jax.lax.dynamic_update_slice(
+            bf, nw.astype(bf.dtype), (p, 0)))(cache["ckv"], compressed, cache_pos)
+        new_cache = {"ckv": buf}
+        kv_src = buf
+        s = buf.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        kv_len = cache_pos + t
+    else:
+        new_cache = None
+        kv_src = compressed
+        kv_pos = positions
+        kv_len = t
+
+    ckv_all, k_rope_all = kv_src[..., :r_kv], kv_src[..., r_kv:]
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv_all.astype(x.dtype),
+                        params["w_uk"].astype(x.dtype))
+    v = jnp.einsum("bsr,rhk->bshk", ckv_all.astype(x.dtype),
+                   params["w_uv"].astype(x.dtype))
+    k_rope_b = jnp.broadcast_to(k_rope_all[:, :, None, :].astype(x.dtype),
+                                (b, kv_src.shape[1], h, dr))
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    out = attend(qfull, k, v, positions, kv_pos, kv_len, causal=True,
+                 scale=scale, mask_info=mask_info if cache is None else None)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"].astype(x.dtype))
+    return y, new_cache

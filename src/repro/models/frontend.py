@@ -1,0 +1,38 @@
+"""Modality frontend STUBS (the one sanctioned carve-out).
+
+Whisper's mel-spectrogram + conv feature extractor and the VLM's ViT/SigLIP
+vision encoder + projector are not implemented; ``frontend_embed_spec``
+returns ShapeDtypeStructs (dry-run) and ``fake_frontend_embed`` returns
+deterministic embeddings (tests/examples) of the exact shape the language
+backbone consumes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def frontend_embed_shape(cfg: ModelConfig, batch: int):
+    if cfg.is_encoder_decoder:          # audio: mel frames after conv stride
+        return (batch, cfg.encoder_seq, cfg.d_model)
+    if cfg.cross_attn_period:           # vlm: projected image patches
+        return (batch, cfg.cross_kv_len, cfg.d_model)
+    return None
+
+
+def frontend_embed_spec(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    shape = frontend_embed_shape(cfg, batch)
+    if shape is None:
+        return None
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def fake_frontend_embed(cfg: ModelConfig, batch: int, seed: int = 0,
+                        dtype=jnp.bfloat16):
+    shape = frontend_embed_shape(cfg, batch)
+    if shape is None:
+        return None
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32
+                             ).astype(dtype) * 0.02

@@ -1,0 +1,252 @@
+"""Shared building blocks: norms, RoPE, embeddings, dense MLP, MoE.
+
+Everything is functional: ``init_*`` returns a param pytree (plain dicts of
+jnp arrays), ``*_apply`` consumes it. Param leaf names are load-bearing —
+the sharding rules in ``repro.sharding.specs`` map leaf names to logical
+mesh axes.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm_apply(params, x: Array, eps: float = 1e-5, gemma_style: bool = False) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    scale = params["scale"]
+    if gemma_style:  # gemma multiplies by (1 + scale)
+        y = y * (1.0 + scale)
+    else:
+        y = y * scale
+    return y.astype(dtype)
+
+
+def init_layernorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm_apply(params, x: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(dtype)
+
+
+def make_norm(cfg):
+    """Returns (init_fn, apply_fn) per the config's norm flavour."""
+    if cfg.use_layernorm:
+        return init_layernorm, lambda p, x: layernorm_apply(p, x, cfg.norm_eps)
+    gemma = cfg.post_block_norms  # gemma2 uses (1+scale) RMSNorm
+    return init_rmsnorm, lambda p, x: rmsnorm_apply(p, x, cfg.norm_eps, gemma_style=gemma)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (int)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                    # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    angles = angles[..., None, :]                          # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# Softcap
+# ---------------------------------------------------------------------------
+
+def softcap(x: Array, cap: float) -> Array:
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg):
+    v, d = cfg.padded_vocab, cfg.d_model
+    scale = 1.0 / math.sqrt(d)
+    p = {"embedding": jax.random.normal(key, (v, d), jnp.float32) * scale}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["unembed"] = jax.random.normal(k2, (v, d), jnp.float32) * scale
+    return p
+
+
+def embed_apply(params, tokens: Array, cfg, dtype=jnp.bfloat16) -> Array:
+    x = jnp.take(params["embedding"].astype(dtype), tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    return x
+
+
+def unembed_apply(params, x: Array, cfg) -> Array:
+    table = params.get("unembed", params["embedding"]).astype(x.dtype)
+    logits = jnp.einsum("...d,vd->...v", x, table)
+    logits = softcap(logits, cfg.final_softcap)
+    # mask padded vocab rows so they can never be sampled
+    if cfg.padded_vocab != cfg.vocab_size:
+        neg = jnp.asarray(-1e9, logits.dtype)
+        pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad, neg, logits)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP (SwiGLU; whisper uses GELU — flag via act)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, gated: bool = True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d_model)
+    s_out = 1.0 / math.sqrt(d_ff)
+    p = {"wi": jax.random.normal(k1, (d_model, d_ff), jnp.float32) * s_in,
+         "wo": jax.random.normal(k3, (d_ff, d_model), jnp.float32) * s_out}
+    if gated:
+        p["wg"] = jax.random.normal(k2, (d_model, d_ff), jnp.float32) * s_in
+    return p
+
+
+def mlp_apply(params, x: Array, act: str = "silu") -> Array:
+    h = jnp.einsum("...d,df->...f", x, params["wi"].astype(x.dtype))
+    if "wg" in params:
+        g = jnp.einsum("...d,df->...f", x, params["wg"].astype(x.dtype))
+        if act == "gelu":
+            h = jax.nn.gelu(g) * h
+        else:
+            h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h) if act == "gelu" else jax.nn.silu(h)
+    return jnp.einsum("...f,fd->...d", h, params["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# MoE — GShard-style dense dispatch with capacity (TPU-friendly, static shapes)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg):
+    e = cfg.moe_num_experts
+    d, f = cfg.d_model, (cfg.moe_d_ff or cfg.d_ff)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    p = {
+        "router": jax.random.normal(k1, (d, e), jnp.float32) * s_in,
+        "we_i": jax.random.normal(k2, (e, d, f), jnp.float32) * s_in,
+        "we_g": jax.random.normal(k3, (e, d, f), jnp.float32) * s_in,
+        "we_o": jax.random.normal(k4, (e, f, d), jnp.float32) * s_out,
+    }
+    if cfg.moe_num_shared:
+        p["shared"] = init_mlp(k5, d, f * cfg.moe_num_shared)
+    return p
+
+
+def moe_apply(params, x: Array, cfg, return_aux: bool = False,
+              dropless: bool = False, group_size: int = 256):
+    """x: [B, T, D]. Top-k routing with GROUPED GShard one-hot dispatch:
+    tokens are split into groups of ``group_size``; each group dispatches to
+    per-group expert capacity ``cap = factor * g * k / e``. Everything is
+    einsum/one-hot — no sort, no scatter — which is what GSPMD partitions
+    well (a distributed argsort at 1M tokens compiles pathologically, and
+    the ungrouped one-hot dispatch tensor [n, e, n*k/e] is O(n^2)).
+
+    Dispatch-einsum overhead is G*g*e*cap*d = n*e*cap*d, a few percent of
+    the expert FLOPs at g=256.
+
+    ``dropless=True`` (decode/verify) uses ONE group with capacity = n so no
+    token can ever be dropped — routing must be independent of batch
+    composition or lossless speculative decoding would diverge from AR.
+    """
+    b, t, d = x.shape
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    xt = x.reshape(b * t, d)
+    n = b * t
+    logits = jnp.einsum("nd,de->ne", xt, params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # [n, e]
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # [n, k]
+    gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
+
+    if dropless:
+        g = n
+        cap = n
+    else:
+        g = min(group_size, n)
+        while n % g:
+            g //= 2
+        cap = max(4, int(cfg.moe_capacity_factor * g * k / e))
+        cap = min(cap, g)
+    ng = n // g
+
+    idx_g = gate_idx.reshape(ng, g, k)
+    gate_g = gate_vals.reshape(ng, g, k).astype(x.dtype)
+    x_g = xt.reshape(ng, g, d)
+
+    # rank of each (token, slot) within its expert, per group
+    onehot = jax.nn.one_hot(idx_g, e, dtype=jnp.int32)       # [G, g, k, e]
+    flat = onehot.reshape(ng, g * k, e)
+    rank = (jnp.cumsum(flat, axis=1) - flat).reshape(ng, g, k, e)
+    pos = jnp.sum(rank * onehot, axis=-1)                    # [G, g, k]
+    keep = pos < cap
+    gate_g = gate_g * keep.astype(x.dtype)
+
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap, dtype=x.dtype)
+    oh = onehot.astype(x.dtype)                              # [G, g, k, e]
+    disp = jnp.einsum("Ggke,Ggkc->Ggec", oh, pos_oh)         # [G, g, e, cap]
+    comb = jnp.einsum("Ggec,Ggk,Ggke->Ggec", disp, gate_g, oh)
+
+    xe = jnp.einsum("Ggec,Ggd->Gecd", disp, x_g)             # [G, e, cap, d]
+    hi = jnp.einsum("Gecd,edf->Gecf", xe, params["we_i"].astype(x.dtype))
+    hg = jnp.einsum("Gecd,edf->Gecf", xe, params["we_g"].astype(x.dtype))
+    he = jax.nn.silu(hg) * hi
+    ye = jnp.einsum("Gecf,efd->Gecd", he, params["we_o"].astype(x.dtype))
+    y = jnp.einsum("Ggec,Gecd->Ggd", comb, ye).reshape(n, d)
+
+    if "shared" in params:
+        y = y + mlp_apply(params["shared"], xt)
+    y = y.reshape(b, t, d)
+
+    if return_aux:
+        # Switch-style load balance loss
+        me = jnp.mean(probs, axis=0)                         # [e]
+        ce = jnp.mean(jnp.sum(onehot.reshape(n, k, e), axis=1
+                              ).astype(jnp.float32), axis=0)
+        aux = e * jnp.sum(me * ce)
+        return y, {"load_balance_loss": aux,
+                   "expert_fraction": ce}
+    return y

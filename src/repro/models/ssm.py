@@ -1,0 +1,235 @@
+"""Mamba2 (SSD — state-space duality) block. arXiv:2405.21060.
+
+The block follows the reference Mamba2 layout with n_groups=1:
+  in_proj -> [z | x | B | C | dt], causal depthwise conv over [x|B|C],
+  SSD scan, gated RMSNorm, out_proj.
+
+Three execution paths share the same math:
+  * ``ssd_scan_ref``     — token-by-token lax.scan (oracle, tests)
+  * ``ssd_scan_chunked`` — chunked jnp (training/prefill; what the Pallas
+                           kernel in kernels/ssd.py tiles for VMEM)
+  * ``ssd_step``         — single-token recurrent decode; verification of K
+                           speculative tokens uses ``ssd_scan_chunked`` with
+                           an explicit initial state, so a PARD verify pass
+                           is ONE forward even for SSM layers.
+
+The decode-time state is the (conv_cache, ssm_state) pair; speculative
+rollback re-runs the scan from the iteration-start snapshot over accepted
+tokens only (see serving/engine.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    d_in = cfg.ssm_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_nheads
+    conv_dim = d_in + 2 * n
+    ks = jax.random.split(key, 6)
+    proj_out = 2 * d_in + 2 * n + h
+    p = {
+        "in_proj": jax.random.normal(ks[0], (d, proj_out), jnp.float32) / math.sqrt(d),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h).astype(jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "ssm_norm": jnp.ones((d_in,), jnp.float32),
+        "out_proj": jax.random.normal(ks[2], (d_in, d), jnp.float32) / math.sqrt(d_in),
+    }
+    return p
+
+
+def init_mamba2_state(cfg, batch, dtype=jnp.float32):
+    d_in, n, h, p = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    conv_dim = d_in + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, h, p, n), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD scans
+# ---------------------------------------------------------------------------
+
+def ssd_scan_ref(x, dt, A, B, C, init_state=None, collect_states: bool = False):
+    """Token-by-token oracle.
+
+    x:  [b, t, h, p]   dt: [b, t, h]   A: [h]
+    B, C: [b, t, n]
+    Returns (y [b,t,h,p], final_state [b,h,p,n]); with ``collect_states``
+    the second element is the per-token state [b,t,h,p,n] (used for
+    speculative rollback of SSM layers — gather at the accepted index).
+    """
+    b, t, h, p = x.shape
+    n = B.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(S, inp):
+        xt, dtt, Bt, Ct = inp              # [b,h,p], [b,h], [b,n], [b,n]
+        decay = jnp.exp(dtt * A)[:, :, None, None]          # [b,h,1,1]
+        upd = (dtt[:, :, None] * xt)[..., None] * Bt[:, None, None, :]
+        S = decay * S + upd
+        y = jnp.einsum("bhpn,bn->bhp", S, Ct)
+        return S, (y, S) if collect_states else (y, None)
+
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(B.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(C.astype(jnp.float32), 1, 0))
+    S, (ys, states) = jax.lax.scan(step, init_state.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    if collect_states:
+        return y, jnp.moveaxis(states, 0, 1)   # [b,t,h,p,n]
+    return y, S
+
+
+def ssd_chunk_body(x, dt, A, B, C, S_in):
+    """Exact SSD over one chunk given incoming state.
+
+    x: [b, l, h, p]; dt: [b, l, h]; B, C: [b, l, n]; S_in: [b, h, p, n].
+    Returns (y [b,l,h,p], S_out).
+    """
+    dtA = dt.astype(jnp.float32) * A                       # [b,l,h]
+    cum = jnp.cumsum(dtA, axis=1)                          # [b,l,h]
+    # intra-chunk kernel: w[i,j] = exp(cum_i - cum_j) for j<=i.
+    # Mask INSIDE the exp: masked (j>i) entries have positive diff that can
+    # overflow to inf, and grad-of-where would then produce NaN cotangents.
+    diff = cum[:, :, None, :] - cum[:, None, :, :]         # [b,i,j,h]
+    l = x.shape[1]
+    causal = jnp.tril(jnp.ones((l, l), bool))
+    w = jnp.exp(jnp.where(causal[None, :, :, None], diff, -1e30))
+    cb = jnp.einsum("bin,bjn->bij", C.astype(jnp.float32), B.astype(jnp.float32))
+    gate = w * cb[..., None]                               # [b,i,j,h]
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]  # [b,l,h,p]
+    y_intra = jnp.einsum("bijh,bjhp->bihp", gate, xdt)
+    # incoming state contribution
+    y_state = jnp.einsum("bhpn,bin,bih->bihp", S_in.astype(jnp.float32),
+                         C.astype(jnp.float32), jnp.exp(cum))
+    # state update
+    decay_to_end = jnp.exp(cum[:, -1:, :] - cum)           # [b,l,h]
+    S_out = S_in.astype(jnp.float32) * jnp.exp(cum[:, -1])[:, :, None, None] + \
+        jnp.einsum("bjh,bjhp,bjn->bhpn", decay_to_end, xdt, B.astype(jnp.float32))
+    return (y_intra + y_state).astype(x.dtype), S_out
+
+
+def ssd_scan_chunked(x, dt, A, B, C, init_state=None, chunk: int = 64):
+    """Chunked SSD: lax.scan over chunks of ``chunk`` tokens."""
+    b, t, h, p = x.shape
+    n = B.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+    if t % chunk:
+        pad = chunk - t % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    tc = x.shape[1] // chunk
+
+    def body(S, inp):
+        xc, dtc, Bc, Cc = inp
+        y, S = ssd_chunk_body(xc, dtc, A, Bc, Cc, S)
+        return S, y
+
+    def split(a):
+        return jnp.moveaxis(a.reshape(a.shape[0], tc, chunk, *a.shape[2:]), 1, 0)
+
+    S, ys = jax.lax.scan(body, init_state.astype(jnp.float32),
+                         (split(x), split(dt), split(B), split(C)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, tc * chunk, h, p)[:, :t]
+    return y, S
+
+
+# ---------------------------------------------------------------------------
+# Full block
+# ---------------------------------------------------------------------------
+
+def _causal_conv(seq, w, b, conv_state=None):
+    """seq: [B, T, C]; w: [W, C] depthwise; returns ([B,T,C], new_conv_state)."""
+    width = w.shape[0]
+    if conv_state is None:
+        ctx = jnp.pad(seq, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        ctx = jnp.concatenate([conv_state.astype(seq.dtype), seq], axis=1)
+    # depthwise conv: out[t] = sum_k ctx[t+k] * w[k]
+    t = seq.shape[1]
+    out = jnp.zeros_like(seq, dtype=jnp.float32)
+    for k in range(width):
+        out = out + ctx[:, k:k + t].astype(jnp.float32) * w[k]
+    out = out + b
+    new_state = ctx[:, -(width - 1):] if width > 1 else None
+    return jax.nn.silu(out).astype(seq.dtype), new_state
+
+
+def mamba2_apply(params, cfg, x, *, state=None, chunk=None,
+                 collect_states: bool = False):
+    """x: [B, T, D]. state: dict(conv, ssm) or None (zero init, training).
+
+    Returns (y, new_state). new_state is None when state is None (training
+    path does not track states). With ``collect_states`` (speculative verify
+    path) new_state holds PER-TOKEN states:
+      conv: [B, T, W-1, C]   ssm: [B, T, H, P, N]
+    so the engine can gather the state at the last accepted token.
+    """
+    b, t, _ = x.shape
+    d_in, n, h, p = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    proj = jnp.einsum("btd,de->bte", x, params["in_proj"].astype(x.dtype))
+    z, xs, Bmat, Cmat, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+
+    conv_in = jnp.concatenate([xs, Bmat, Cmat], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, params["conv_w"], params["conv_b"],
+                                      conv_state)
+    xs, Bmat, Cmat = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+
+    xh = xs.reshape(b, t, h, p)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    ssm_state = state["ssm"] if state is not None else None
+    if collect_states:
+        y, new_ssm = ssd_scan_ref(xh, dtv, A, Bmat, Cmat, init_state=ssm_state,
+                                  collect_states=True)
+    else:
+        y, new_ssm = ssd_scan_chunked(xh, dtv, A, Bmat, Cmat,
+                                      init_state=ssm_state,
+                                      chunk=chunk or cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * params["D"][None, None, :, None]
+    y = y.reshape(b, t, d_in).astype(x.dtype)
+
+    # gated RMSNorm (mamba2 norm_before_gate=False: norm(y * silu(z)))
+    g = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-1, keepdims=True)
+    g = (g.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         * params["ssm_norm"]).astype(x.dtype)
+
+    out = jnp.einsum("bte,ed->btd", g, params["out_proj"].astype(x.dtype))
+    new_state = None
+    if state is not None:
+        if collect_states:
+            # per-token conv windows: state after token t = ctx[t+1 : t+W]
+            width = params["conv_w"].shape[0]
+            ctx = jnp.concatenate([state["conv"].astype(conv_in.dtype), conv_in],
+                                  axis=1)                    # [B, W-1+T, C]
+            conv_steps = jnp.stack(
+                [jax.lax.dynamic_slice_in_dim(ctx, i + 1, width - 1, axis=1)
+                 for i in range(t)], axis=1)                 # [B, T, W-1, C]
+            new_state = {"conv": conv_steps.astype(state["conv"].dtype),
+                         "ssm": new_ssm.astype(state["ssm"].dtype)}
+        else:
+            new_state = {"conv": new_conv.astype(state["conv"].dtype),
+                         "ssm": new_ssm.astype(state["ssm"].dtype)}
+    return out, new_state

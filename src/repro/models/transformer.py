@@ -1,0 +1,289 @@
+"""Transformer assembly: decoder-only LM + whisper-style encoder-decoder.
+
+The layer stack is executed as ``lax.scan`` over repeating *periods* (see
+config.scan_plan) so 95-layer models lower to a small HLO. Params, caches and
+SSM states for scanned layers are stacked on a leading ``n_repeats`` axis;
+prefix layers (e.g. deepseek-v2's leading dense layer) run unrolled.
+
+Public entry points:
+  init_params(key, cfg)                      -> param pytree
+  init_caches(cfg, batch, max_len, dtype)    -> cache pytree (decode)
+  encode(params, cfg, frontend_embed)        -> encoder output (enc-dec only)
+  forward(params, cfg, tokens, ...)          -> (logits, new_caches, aux)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import (ATTN_CROSS, ATTN_GLOBAL, ATTN_LOCAL, ATTN_MLA, MLP_DENSE,
+                     MLP_MOE, MLP_NONE, SSM, LayerSpec, ModelConfig, scan_plan)
+from . import attention as attn
+from . import layers as L
+from . import ssm as ssm_mod
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, spec: LayerSpec):
+    ks = jax.random.split(key, 8)
+    init_norm, _ = L.make_norm(cfg)
+    p: Dict[str, Any] = {"norm1": init_norm(cfg.d_model)}
+    if spec.mixer in (ATTN_GLOBAL, ATTN_LOCAL):
+        p["mixer"] = attn.init_gqa(ks[0], cfg)
+    elif spec.mixer == ATTN_MLA:
+        p["mixer"] = attn.init_mla(ks[0], cfg)
+    elif spec.mixer == ATTN_CROSS:
+        p["mixer"] = attn.init_cross_attn(ks[0], cfg)
+    elif spec.mixer == SSM:
+        p["mixer"] = ssm_mod.init_mamba2(ks[0], cfg)
+    else:
+        raise ValueError(spec.mixer)
+
+    if spec.mlp != MLP_NONE and not cfg.parallel_block:
+        p["norm2"] = init_norm(cfg.d_model)
+    if spec.mlp == MLP_DENSE:
+        d_ff = cfg.first_dense_d_ff or cfg.d_ff
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, d_ff, gated=cfg.mlp_gated)
+    elif spec.mlp == MLP_MOE:
+        p["mlp"] = L.init_moe(ks[1], cfg)
+
+    if cfg.post_block_norms:
+        p["post_norm1"] = init_norm(cfg.d_model)
+        if spec.mlp != MLP_NONE:
+            p["post_norm2"] = init_norm(cfg.d_model)
+
+    if cfg.is_encoder_decoder:  # whisper decoder: self + cross per layer
+        p["cross"] = attn.init_gqa(ks[2], cfg)
+        p["norm_cross"] = init_norm(cfg.d_model)
+    return p
+
+
+def _init_encoder_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    init_norm, _ = L.make_norm(cfg)
+    return {"norm1": init_norm(cfg.d_model),
+            "mixer": attn.init_gqa(ks[0], cfg),
+            "norm2": init_norm(cfg.d_model),
+            "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, gated=cfg.mlp_gated)}
+
+
+def init_params(key, cfg: ModelConfig):
+    plan = scan_plan(cfg)
+    keys = jax.random.split(key, cfg.num_layers + 4)
+    init_norm, _ = L.make_norm(cfg)
+
+    params: Dict[str, Any] = {
+        "embed": L.init_embedding(keys[-1], cfg),
+        "final_norm": init_norm(cfg.d_model),
+    }
+    params["prefix"] = [
+        _init_layer(keys[i], cfg, spec) for i, spec in enumerate(plan.prefix)]
+
+    scanned = []
+    base = len(plan.prefix)
+    for j, spec in enumerate(plan.period):
+        # one stacked tree per period position: leading dim n_repeats
+        per_repeat = [
+            _init_layer(keys[base + r * len(plan.period) + j], cfg, spec)
+            for r in range(plan.n_repeats)]
+        scanned.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_repeat))
+    params["scan"] = scanned
+
+    if cfg.is_encoder_decoder:
+        ek = jax.random.split(keys[-2], cfg.encoder_layers + 1)
+        params["encoder"] = {
+            "layers": [_init_encoder_layer(ek[i], cfg)
+                       for i in range(cfg.encoder_layers)],
+            "final_norm": init_norm(cfg.d_model),
+        }
+    return params
+
+
+def _init_layer_cache(cfg, spec: LayerSpec, batch, max_len, dtype):
+    if spec.mixer in (ATTN_GLOBAL, ATTN_LOCAL):
+        return attn.init_gqa_cache(cfg, batch, max_len, dtype)
+    if spec.mixer == ATTN_MLA:
+        return attn.init_mla_cache(cfg, batch, max_len, dtype)
+    if spec.mixer == SSM:
+        return ssm_mod.init_mamba2_state(cfg, batch, jnp.float32)
+    if spec.mixer == ATTN_CROSS:
+        return {}
+    raise ValueError(spec.mixer)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    plan = scan_plan(cfg)
+    caches = {
+        "prefix": [_init_layer_cache(cfg, s, batch, max_len, dtype)
+                   for s in plan.prefix],
+        "scan": [jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (plan.n_repeats,) + x.shape).copy()
+            if hasattr(x, "shape") else x,
+            _init_layer_cache(cfg, s, batch, max_len, dtype))
+            for s in plan.period],
+    }
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# Apply
+# ---------------------------------------------------------------------------
+
+def _apply_layer(lp, cfg: ModelConfig, spec: LayerSpec, x, positions, *,
+                 cache=None, cache_pos=None, mask_info=None, enc_out=None,
+                 collect_ssm=False):
+    _, norm = L.make_norm(cfg)
+    aux = {}
+    h = norm(lp["norm1"], x)
+
+    if spec.mixer in (ATTN_GLOBAL, ATTN_LOCAL):
+        window = cfg.sliding_window if spec.mixer == ATTN_LOCAL else 0
+        y, new_cache = attn.gqa_apply(
+            lp["mixer"], cfg, h, positions, layer_window=window, cache=cache,
+            cache_pos=cache_pos, mask_info=mask_info, use_rope=cfg.use_rope)
+    elif spec.mixer == ATTN_MLA:
+        y, new_cache = attn.mla_apply(lp["mixer"], cfg, h, positions,
+                                      cache=cache, cache_pos=cache_pos,
+                                      mask_info=mask_info)
+    elif spec.mixer == ATTN_CROSS:
+        y = attn.cross_attn_apply(lp["mixer"], cfg, h, enc_out)
+        new_cache = cache
+    elif spec.mixer == SSM:
+        y, new_cache = ssm_mod.mamba2_apply(lp["mixer"], cfg, h, state=cache,
+                                            collect_states=collect_ssm)
+    else:
+        raise ValueError(spec.mixer)
+
+    if cfg.post_block_norms:
+        y = norm(lp["post_norm1"], y)
+
+    if cfg.parallel_block and spec.mlp != MLP_NONE:
+        m = L.mlp_apply(lp["mlp"], h, act=cfg.mlp_act)
+        x = x + y + m
+        return x, (new_cache if new_cache is not None else {}), aux
+
+    x = x + y
+
+    if cfg.is_encoder_decoder:
+        hc = norm(lp["norm_cross"], x)
+        yc = attn.cross_attn_apply(lp["cross"], cfg, hc, enc_out)
+        x = x + yc
+
+    if spec.mlp != MLP_NONE:
+        h2 = norm(lp["norm2"], x)
+        if spec.mlp == MLP_MOE:
+            # dropless routing on decode/verify paths: routing must not
+            # depend on batch shape or speculative decoding loses
+            # losslessness. Long prefills use capacity routing (capacity=n
+            # would make the expert batch O(n^2) — industry standard is to
+            # accept capacity drops at prefill).
+            dropless = cache_pos is not None and x.shape[1] <= 64
+            m, moe_aux = L.moe_apply(lp["mlp"], h2, cfg, return_aux=True,
+                                     dropless=dropless)
+            aux["load_balance_loss"] = moe_aux["load_balance_loss"]
+        else:
+            m = L.mlp_apply(lp["mlp"], h2, act=cfg.mlp_act)
+        if cfg.post_block_norms:
+            m = norm(lp["post_norm2"], m)
+        x = x + m
+    return x, (new_cache if new_cache is not None else {}), aux
+
+
+def encode(params, cfg: ModelConfig, frontend_embed: Array) -> Array:
+    """Whisper-style encoder over precomputed frame embeddings [B, S, D]."""
+    _, norm = L.make_norm(cfg)
+    x = frontend_embed
+    s = x.shape[1]
+    x = x + L.sinusoidal_positions(s, cfg.d_model).astype(x.dtype)
+    pos = jnp.broadcast_to(jnp.arange(s)[None, :], x.shape[:2])
+    for lp in params["encoder"]["layers"]:
+        h = norm(lp["norm1"], x)
+        y, _ = attn.gqa_apply(lp["mixer"], cfg, h, pos, causal=False,
+                              use_rope=False)
+        x = x + y
+        h2 = norm(lp["norm2"], x)
+        x = x + L.mlp_apply(lp["mlp"], h2, act=cfg.mlp_act)
+    return norm(params["encoder"]["final_norm"], x)
+
+
+def forward(params, cfg: ModelConfig, tokens: Array, positions=None, *,
+            mask_info=None, enc_out=None, caches=None, cache_pos=None,
+            collect_ssm=False, remat: bool = False, dtype=jnp.bfloat16,
+            last_only: bool = False):
+    """Run the decoder stack.
+
+    tokens:    [B, T] int32
+    positions: [B, T] absolute positions (default arange)
+    caches:    pytree from init_caches (None = no-cache training/prefill path)
+    cache_pos: [B] int32 — write offset into the caches
+
+    Returns (logits [B, T, padded_vocab], new_caches, aux).
+    """
+    plan = scan_plan(cfg)
+    b, t = tokens.shape
+    if positions is None:
+        base = cache_pos[:, None] if cache_pos is not None else 0
+        positions = base + jnp.broadcast_to(jnp.arange(t)[None, :], (b, t))
+
+    x = L.embed_apply(params["embed"], tokens, cfg, dtype=dtype)
+    if cfg.abs_pos:
+        pe = L.sinusoidal_positions(cfg.max_seq_len, cfg.d_model).astype(x.dtype)
+        x = x + jnp.take(pe, positions, axis=0)
+
+    _, norm = L.make_norm(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = {"prefix": [], "scan": []}
+
+    def run(lp, spec, x, cache):
+        return _apply_layer(lp, cfg, spec, x, positions, cache=cache,
+                            cache_pos=cache_pos, mask_info=mask_info,
+                            enc_out=enc_out, collect_ssm=collect_ssm)
+
+    # ---- prefix layers (unrolled) ----
+    for i, spec in enumerate(plan.prefix):
+        cache = caches["prefix"][i] if caches is not None else None
+        x, nc, aux = run(params["prefix"][i], spec, x, cache)
+        new_caches["prefix"].append(nc)
+        aux_total = aux_total + aux.get("load_balance_loss", 0.0)
+
+    # ---- scanned periods ----
+    if plan.n_repeats:
+        period = plan.period
+
+        def body(carry, xs):
+            x, aux_acc = carry
+            lps, cs = xs
+            new_cs = []
+            for j, spec in enumerate(period):
+                cache_j = cs[j] if caches is not None else None
+                x, nc, aux = run(lps[j], spec, x, cache_j)
+                new_cs.append(nc)
+                aux_acc = aux_acc + aux.get("load_balance_loss", 0.0)
+            return (x, aux_acc), tuple(new_cs)
+
+        if remat:
+            body = jax.checkpoint(body)
+
+        xs = (tuple(params["scan"]),
+              tuple(caches["scan"]) if caches is not None
+              else tuple({} for _ in period))
+        (x, aux_total), scan_caches = jax.lax.scan(body, (x, aux_total), xs)
+        new_caches["scan"] = list(scan_caches)
+
+    if last_only:
+        # serving prefill: only the last position's logits are consumed;
+        # skipping the [B, T, vocab] unembed is a large memory/compute win
+        x = x[:, -1:]
+    hidden = x  # pre-final-norm features (EAGLE-style heads condition on these)
+    x = norm(params["final_norm"], x)
+    logits = L.unembed_apply(params["embed"], x, cfg)
+    return logits, (new_caches if caches is not None else None), \
+        {"load_balance_loss": aux_total, "hidden": hidden}

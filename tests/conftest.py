@@ -1,0 +1,16 @@
+import os
+
+# Tests must see exactly ONE device (the dry-run sets 512 in its own
+# process); keep any user XLA_FLAGS out of the test environment.
+os.environ.pop("XLA_FLAGS", None)
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,56 @@
+"""End-to-end backend equivalence: the model forward with the Pallas
+attention backend (interpret mode on CPU) must match the XLA reference path
+— the integration-level counterpart of the per-kernel oracle tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import forward, init_caches, init_params
+from repro.models.attention import set_attention_backend
+
+
+@pytest.fixture(autouse=True)
+def _restore_backend():
+    yield
+    set_attention_backend("xla")
+
+
+@pytest.mark.parametrize("arch", ["tiny-target", "gemma2-27b"])
+def test_forward_backend_equivalence(arch):
+    cfg = get_config(arch + "-smoke") if arch != "tiny-target" \
+        else get_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                cfg.vocab_size)
+    set_attention_backend("xla")
+    ref, _, _ = forward(params, cfg, tokens, dtype=jnp.float32)
+    set_attention_backend("pallas")
+    out, _, _ = forward(params, cfg, tokens, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_decode_backend_equivalence():
+    cfg = get_config("tiny-target")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab_size)
+
+    def run():
+        caches = init_caches(cfg, 2, 64, dtype=jnp.float32)
+        _, caches, _ = forward(params, cfg, tokens, caches=caches,
+                               cache_pos=jnp.zeros(2, jnp.int32),
+                               dtype=jnp.float32)
+        lg, _, _ = forward(params, cfg, tokens[:, :1], caches=caches,
+                           cache_pos=jnp.full(2, 16, jnp.int32),
+                           dtype=jnp.float32)
+        return lg
+
+    set_attention_backend("xla")
+    ref = run()
+    set_attention_backend("pallas")
+    out = run()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-3, rtol=2e-3)

