@@ -285,6 +285,50 @@ def fig6b() -> List:
     return rows
 
 
+def serve() -> List:
+    """Serving-engine KV layouts: tokens/sec and cache HBM bytes for
+    ar/vsd/pard in both the contiguous and the block-paged layout. Uses the
+    tiny family (the point is the LAYOUT ratio — paged bytes track actual
+    fill — not absolute CPU throughput) and persists the trajectory to
+    BENCH_serve.json at the repo root."""
+    import json, os
+    tp, tc = load_model("tiny-target")
+    dp, dc = load_model("tiny-draft")
+    rng = np.random.default_rng(0)
+    reqs = [np.asarray(common.corpus().prompts(rng, 1, int(l))[0])
+            for l in rng.integers(8, 24, size=8)]
+    max_len, max_new = 1024, 24
+
+    rows, record = [], {}
+    for mode in ("ar", "vsd", "pard"):
+        for layout in ("contiguous", "paged"):
+            eng = Engine(tp, tc, dp, dc, mode=mode, k=4, max_batch=2,
+                         max_len=max_len, kv_layout=layout, kv_block_size=64)
+            for r in reqs:                      # warm pass: compile steps
+                eng.submit(r, max_new)
+            eng.run()
+            eng.peak_kv_bytes_in_use = eng.kv_bytes_in_use()
+            for r in reqs:
+                eng.submit(r, max_new)
+            t0 = time.perf_counter()
+            comps = eng.run()
+            wall = time.perf_counter() - t0
+            tps = sum(c.generated for c in comps[len(reqs):]) / wall
+            cap = eng.kv_capacity_bytes()
+            peak = eng.peak_kv_bytes_in_use
+            rows.append((f"serve.{mode}.{layout}", 1e6 / tps,
+                         f"tps={tps:.1f};kv_capacity_mb={cap / 1e6:.2f};"
+                         f"kv_peak_mb={peak / 1e6:.2f}"))
+            record[f"{mode}.{layout}"] = dict(
+                tokens_per_sec=round(tps, 2), kv_capacity_bytes=cap,
+                kv_peak_bytes_in_use=peak)
+    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+    with open(out, "w") as f:
+        json.dump(record, f, indent=1, sort_keys=True)
+    emit(rows, "serve")
+    return rows
+
+
 ALL = {"table1": table1, "table2": table2, "table3": table3,
        "table4": table4, "table5": table5, "table6": table6,
-       "fig6a": fig6a, "fig6b": fig6b}
+       "fig6a": fig6a, "fig6b": fig6b, "serve": serve}

@@ -66,7 +66,9 @@ def main():
               f"{total / wall:7.1f} tok/s   p50 latency {lats[len(lats)//2]:.2f}s"
               f"   steps={eng.stats['steps']}"
               f" target_fwd={eng.stats['target_forwards']}"
-              f" draft_fwd={eng.stats['draft_forwards']}")
+              f" draft_fwd={eng.stats['draft_forwards']}"
+              f" kv_peak={eng.peak_kv_bytes_in_use / 1e6:.2f}MB"
+              f"/{eng.kv_capacity_bytes() / 1e6:.2f}MB")
 
     agree = all(np.array_equal(outputs["ar"][r], outputs["pard"][r])
                 for r in outputs["ar"])

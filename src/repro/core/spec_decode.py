@@ -121,6 +121,68 @@ def speculative_accept(p_full, qprob, props, rng):
 
 
 # ---------------------------------------------------------------------------
+# Decode state — the unified core shared with the serving engine
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DecodeState:
+    """Everything one decode step reads and writes, as one pytree.
+
+    Both ``SpecDecoder.generate_*`` (uniform batch, run-to-completion) and
+    the continuous-batching serving engine (ragged slots, admission /
+    release between steps) advance a ``DecodeState`` through the SAME jitted
+    step functions (``SpecDecoder._build_ar_step`` /  ``_build_spec_step``).
+
+      gen    [B, L]  committed tokens (prompt + generated)
+      n      [B]     committed count (reads are always < n)
+      m      [B]     draft progress: committed tokens already processed by
+                     the draft (n - m = the new-token window)
+      done   [B]     frozen rows — steps rewrite their gen/n/m unchanged
+      tcache, dcache cache pytrees (contiguous rows or paged pools)
+      tables [B, MBS] block tables for the paged KV layout, or None for
+                     contiguous (DESIGN.md §5); shared by target and draft
+                     since both cache the same absolute positions.
+    """
+    gen: Array
+    n: Array
+    m: Array
+    done: Array
+    tcache: Any
+    dcache: Any = None
+    tables: Optional[Array] = None
+
+
+# every field is pytree data (derived from the dataclass so new fields can
+# never silently fall out of the jitted steps)
+jax.tree_util.register_dataclass(
+    DecodeState, [f.name for f in dataclasses.fields(DecodeState)], [])
+
+
+def prefill_row(params, cfg: ModelConfig, toks: Array, plen, caches, *,
+                tables=None, block_size=0, enc_out=None):
+    """Prefill ``toks`` [B, T] (right-padded past ``plen``) into ``caches``.
+
+    Shared by SpecDecoder prefills (uniform batch, ``plen=None``: every
+    token real, final SSM state already correct) and the engine's bucketed
+    per-request admission (T >= plen). Attention KV written at padded
+    positions >= plen is never valid (kv_len bookkeeping; in the paged
+    layout it lands in the row's own future blocks or the garbage block).
+    SSM state cannot be masked after the fact, so with padding present it is
+    rolled back to the state after the last REAL token (DESIGN.md §3).
+    """
+    has = _has_ssm(cfg) and plen is not None
+    _, cache, _ = forward(params, cfg, toks, caches=caches,
+                          cache_pos=jnp.zeros((toks.shape[0],), jnp.int32),
+                          block_tables=tables, kv_block_size=block_size,
+                          collect_ssm=has, enc_out=enc_out, last_only=True)
+    if has:
+        idx = jnp.broadcast_to(jnp.asarray(plen, jnp.int32) - 1,
+                               (toks.shape[0],))
+        cache = gather_ssm_states(cfg, cache, idx)
+    return cache
+
+
+# ---------------------------------------------------------------------------
 # Decoder
 # ---------------------------------------------------------------------------
 
@@ -146,7 +208,7 @@ class SpecDecoder:
     def __init__(self, target_params, target_cfg: ModelConfig,
                  draft_params=None, draft_cfg: ModelConfig = None, *,
                  k: int = 8, max_len: int = 2048, temperature: float = 0.0,
-                 enc_out=None, draft_enc_out=None):
+                 enc_out=None, draft_enc_out=None, kv_block_size: int = 0):
         self.tp, self.tc = target_params, target_cfg
         self.dp, self.dc = draft_params, draft_cfg
         self.k = k
@@ -154,6 +216,9 @@ class SpecDecoder:
         self.temperature = temperature
         self.enc_out = enc_out
         self.draft_enc_out = draft_enc_out
+        # 0 = contiguous caches; > 0 = paged pools, steps consume the block
+        # tables carried in DecodeState.tables (the serving engine's layout)
+        self.kv_block_size = kv_block_size
         if draft_cfg is not None:
             assert draft_cfg.vocab_size == target_cfg.vocab_size, \
                 "speculative decoding requires a shared tokenizer/vocab"
@@ -165,42 +230,74 @@ class SpecDecoder:
             self._jit_cache[name] = jax.jit(builder, donate_argnums=donate)
         return self._jit_cache[name]
 
-    def _target_forward(self, tokens, caches, cache_pos, collect_ssm=False):
+    def _target_forward(self, tokens, caches, cache_pos, tables=None,
+                        collect_ssm=False):
         return forward(self.tp, self.tc, tokens, caches=caches,
                        cache_pos=cache_pos, enc_out=self.enc_out,
-                       collect_ssm=collect_ssm)
+                       collect_ssm=collect_ssm, block_tables=tables,
+                       kv_block_size=self.kv_block_size)
 
-    def _draft_forward(self, tokens, caches, cache_pos, collect_ssm=False):
+    def _draft_forward(self, tokens, caches, cache_pos, tables=None,
+                       collect_ssm=False):
         return forward(self.dp, self.dc, tokens, caches=caches,
                        cache_pos=cache_pos, enc_out=self.draft_enc_out,
-                       collect_ssm=collect_ssm)
+                       collect_ssm=collect_ssm, block_tables=tables,
+                       kv_block_size=self.kv_block_size)
 
     # ----------------------------------------------------------------- AR
+    def _build_ar_step(self):
+        """One greedy AR decode step over a DecodeState (the AR+ baseline
+        and the engine's mode="ar" — one shared implementation)."""
+        def step(state: DecodeState) -> DecodeState:
+            gen, n, done = state.gen, state.n, state.done
+            last = jnp.take_along_axis(gen, (n - 1)[:, None], axis=1)
+            logits, tcache, _ = self._target_forward(
+                last.astype(jnp.int32), state.tcache, n - 1, state.tables)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            gen2 = jax.vmap(
+                lambda g, t, p: jax.lax.dynamic_update_slice(g, t[None], (p,))
+            )(gen, nxt, n)
+            gen = jnp.where(done[:, None], gen, gen2)
+            n = jnp.where(done, n, n + 1)
+            return dataclasses.replace(state, gen=gen, n=n, tcache=tcache)
+        return step
+
+    def init_state(self, prompt: Array, gen_len: int,
+                   with_draft: bool = True) -> DecodeState:
+        """Contiguous-layout DecodeState for a uniform-length batch (the
+        engine builds its own paged state from serving.kv_pool)."""
+        b, p = prompt.shape
+        gen = jnp.zeros((b, gen_len), jnp.int32)
+        gen = gen.at[:, :p].set(prompt)
+        return DecodeState(
+            gen=gen, n=jnp.full((b,), p, jnp.int32),
+            m=jnp.full((b,), p - 1, jnp.int32), done=jnp.zeros((b,), bool),
+            tcache=init_caches(self.tc, b, self.max_len),
+            dcache=(init_caches(self.dc, b, self.max_len)
+                    if with_draft and self.dc is not None else None))
+
     def generate_ar(self, prompt: Array, max_new: int):
         b, p = prompt.shape
-        caches = init_caches(self.tc, b, self.max_len)
+        state = self.init_state(prompt, p + max_new + 1, with_draft=False)
 
-        prefill = self._fn("ar_prefill", lambda toks, c: self._target_forward(
-            toks, c, jnp.zeros((toks.shape[0],), jnp.int32)), donate=(1,))
+        # AR prefill covers the WHOLE prompt: its last logits commit the
+        # first new token, so exactly max_new forwards produce max_new
+        # tokens (unlike spec prefills, which stop at prompt[:-1] and let
+        # the first verify window re-read x_{P-1})
+        def pre(toks, c):
+            logits, c, _ = self._target_forward(
+                toks, c, jnp.zeros((toks.shape[0],), jnp.int32))
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), c
+        prefill = self._fn("ar_prefill", pre, donate=(1,))
+        step = self._fn("ar_step", self._build_ar_step(), donate=(0,))
 
-        def step(tok, c, pos):
-            logits, c, _ = self._target_forward(tok, c, pos)
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            return nxt, c
-
-        step = self._fn("ar_step", step, donate=(1,))
-
-        logits, caches, _ = prefill(prompt, caches)
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        out = [prompt]
-        cur = nxt
-        pos = jnp.full((b,), p, jnp.int32)
-        for i in range(max_new - 1):
-            out.append(cur[:, None])
-            cur, caches = step(cur[:, None], caches, pos)
-            pos = pos + 1
-        out.append(cur[:, None])
-        tokens = jnp.concatenate(out, axis=1)
+        first, tcache = prefill(prompt, state.tcache)
+        state = dataclasses.replace(
+            state, gen=state.gen.at[:, p].set(first),
+            n=state.n + 1, tcache=tcache)
+        for _ in range(max_new - 1):
+            state = step(state)
+        tokens = state.gen[:, :p + max_new]
         stats = SpecStats(max_new, max_new * b, 0, max_new, None, 0.0, 1.0)
         return tokens, stats
 
@@ -226,10 +323,10 @@ class SpecDecoder:
             tok = jnp.where(is_real, tok, jnp.where(is_mask, mask_id, 0))
             return tok.astype(jnp.int32)
 
-        def propose_pard(gen, n, m, dcache, rng):
+        def propose_pard(gen, n, m, dcache, tables, rng):
             tok = draft_window(gen, n, m)
             logits, dcache, _ = self._draft_forward(
-                tok, dcache, m, collect_ssm=d_has_ssm)
+                tok, dcache, m, tables, collect_ssm=d_has_ssm)
             if d_has_ssm:
                 # state after the last real token (input index A-1)
                 dcache = gather_ssm_states(dc, dcache, n - m - 1)
@@ -245,11 +342,11 @@ class SpecDecoder:
                 qprob = jax.nn.softmax(lg, axis=-1)
             return props, qprob, dcache, 1                  # 1 draft forward
 
-        def propose_vsd(gen, n, m, dcache, rng):
+        def propose_vsd(gen, n, m, dcache, tables, rng):
             # call 1: advance committed window, propose token 1
             tok = draft_window(gen, n, m)[:, :k + 1]        # reals only window
             logits, dcache, _ = self._draft_forward(
-                tok, dcache, m, collect_ssm=d_has_ssm)
+                tok, dcache, m, tables, collect_ssm=d_has_ssm)
             a = n - m
             if d_has_ssm:
                 # roll SSM state back to "after the last real token"; the AR
@@ -271,7 +368,8 @@ class SpecDecoder:
                 props.append(pj)
                 if j == k - 1:
                     break
-                lgn, dcache, _ = self._draft_forward(pj[:, None], dcache, cur_pos)
+                lgn, dcache, _ = self._draft_forward(pj[:, None], dcache,
+                                                     cur_pos, tables)
                 cur_pos = cur_pos + 1
                 lg_list.append(lgn[:, 0])
             props = jnp.stack(props, axis=1)                # [B, K]
@@ -284,16 +382,19 @@ class SpecDecoder:
 
         propose = propose_pard if mode == "pard" else propose_vsd
 
-        def step(gen, n, m, done, tcache, dcache, rng):
+        def step(state: DecodeState, rng):
+            gen, n, m, done = state.gen, state.n, state.m, state.done
+            tcache, dcache, tables = state.tcache, state.dcache, state.tables
             b = gen.shape[0]
             rng, r1, r2, r3 = jax.random.split(rng, 4)
-            props, qprob, dcache, n_draft = propose(gen, n, m, dcache, r1)
+            props, qprob, dcache, n_draft = propose(gen, n, m, dcache,
+                                                    tables, r1)
 
             # verify window: [last committed, d_1..d_K]
             last = jnp.take_along_axis(gen, (n - 1)[:, None], axis=1)
             vin = jnp.concatenate([last.astype(jnp.int32), props], axis=1)
             logits, tcache_new, _ = self._target_forward(
-                vin, tcache, n - 1, collect_ssm=t_has_ssm)
+                vin, tcache, n - 1, tables, collect_ssm=t_has_ssm)
 
             if temp == 0.0:
                 tgt = jnp.argmax(logits[:, :k], axis=-1).astype(jnp.int32)
@@ -330,8 +431,10 @@ class SpecDecoder:
             # at positions < n and never read beyond; safe to keep new buffers.
             acc_hist = jnp.sum(
                 jnp.where(done[:, None], 0, accepted), axis=0)  # [K]
-            return (gen, new_n, new_m, tcache_new, dcache,
-                    jnp.where(done, 0, a), acc_hist, n_draft)
+            new_state = dataclasses.replace(
+                state, gen=gen, n=new_n, m=new_m, tcache=tcache_new,
+                dcache=dcache)
+            return new_state, jnp.where(done, 0, a), acc_hist, n_draft
 
         return step
 
@@ -340,31 +443,26 @@ class SpecDecoder:
         assert self.dp is not None, "spec decoding requires a draft model"
         b, p = prompt.shape
         k = self.k
-        tcache = init_caches(self.tc, b, self.max_len)
-        dcache = init_caches(self.dc, b, self.max_len)
-
-        prefill_t = self._fn("sp_prefill_t", lambda t, c: self._target_forward(
-            t, c, jnp.zeros((t.shape[0],), jnp.int32)), donate=(1,))
-        prefill_d = self._fn("sp_prefill_d", lambda t, c: self._draft_forward(
-            t, c, jnp.zeros((t.shape[0],), jnp.int32)), donate=(1,))
-        # donate gen + both cache pools: the engine's steady state then
-        # updates KV in place (no per-iteration multi-MB buffer copies)
-        step = self._fn(f"spec_step_{mode}_{self.temperature}",
-                        self._build_spec_step(mode), donate=(0, 4, 5))
-
         # Both prefills stop at prompt[:-1]: the verify window re-processes
         # x_{P-1} (an idempotent KV rewrite for attention — but SSM state
         # must NOT see it twice, so it is excluded here).
         assert p >= 2, "prompts must have at least 2 tokens"
-        _, tcache, _ = prefill_t(prompt[:, :-1], tcache)
-        _, dcache, _ = prefill_d(prompt[:, :-1], dcache)
-
         L = p + max_new + 2 * k + 2   # room for the final (K+1)-slot write
-        gen = jnp.zeros((b, L), jnp.int32)
-        gen = gen.at[:, :p].set(prompt)
-        n = jnp.full((b,), p, jnp.int32)
-        m = jnp.full((b,), p - 1, jnp.int32)
-        done = jnp.zeros((b,), bool)
+        state = self.init_state(prompt, L)
+
+        prefill_t = self._fn("sp_prefill_t", lambda t, c: prefill_row(
+            self.tp, self.tc, t, None, c, enc_out=self.enc_out), donate=(1,))
+        prefill_d = self._fn("sp_prefill_d", lambda t, c: prefill_row(
+            self.dp, self.dc, t, None, c, enc_out=self.draft_enc_out),
+            donate=(1,))
+        # donate the whole state: the steady state then updates gen + both
+        # cache pools in place (no per-iteration multi-MB buffer copies)
+        step = self._fn(f"spec_step_{mode}_{self.temperature}",
+                        self._build_spec_step(mode), donate=(0,))
+
+        state = dataclasses.replace(
+            state, tcache=prefill_t(prompt[:, :-1], state.tcache),
+            dcache=prefill_d(prompt[:, :-1], state.dcache))
         rng = jax.random.PRNGKey(seed)
 
         iters, draft_calls, target_calls = 0, 0, 0
@@ -372,20 +470,20 @@ class SpecDecoder:
         acc_total, live_iters = 0, 0
         target_n = p + max_new
         while True:
-            live = int(jnp.sum(~done))
+            live = int(jnp.sum(~state.done))
             rng, sub = jax.random.split(rng)
-            gen, n, m, tcache, dcache, a, hist, n_draft = step(
-                gen, n, m, done, tcache, dcache, sub)
+            state, a, hist, n_draft = step(state, sub)
             iters += 1
             live_iters += live
             draft_calls += n_draft
             target_calls += 1
             acc_hist = acc_hist + hist
             acc_total += int(jnp.sum(a))
-            done = n >= target_n
-            if bool(jnp.all(done)) or iters > max_new + 2:
+            state = dataclasses.replace(state, done=state.n >= target_n)
+            if bool(jnp.all(state.done)) or iters > max_new + 2:
                 break
 
+        n, gen = state.n, state.gen
         tokens = gen[:, :target_n]
         live_iters = max(live_iters, 1)
         stats = SpecStats(

@@ -15,6 +15,21 @@ hundred rows), while K/V blocks stream through. Per-row validity comes from
 
 Blocks past kv_len are skipped entirely (pl.when on the block index), so the
 swept bytes scale with the *actual* cache fill, not the allocated max_len.
+
+Two cache layouts share ONE kernel body:
+
+  * contiguous — k/v are [B, S, Hkv, D]; grid step ki streams block ki of
+    row b's buffer;
+  * paged — k/v are a pool of fixed-size blocks [NB, block, Hkv, D] plus a
+    per-row block table [B, MBS]. The table is scalar-prefetched
+    (PrefetchScalarGridSpec) so the BlockSpec index_map can resolve the
+    indirection *before* the DMA: grid step ki streams pool block
+    table[b, ki], which holds row b's absolute positions
+    [ki*block, (ki+1)*block). Unallocated entries point at the reserved
+    garbage block 0 and are skipped by the kv_len guard anyway.
+
+The kernel's masking logic is identical in both cases because a sequence
+block index ki maps to the same absolute position range either way.
 """
 from __future__ import annotations
 
@@ -119,4 +134,63 @@ def decode_attention(q, k, v, kv_len, q_pos, *, window=0, softcap=0.0,
         ],
         interpret=interpret,
     )(q_pos.astype(jnp.int32), kv_len.astype(jnp.int32), qg, k, v)
+    return out.reshape(b, tq, hq, d)
+
+
+def _paged_kernel(bt_ref, qpos_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_s, l_s, acc_s, **kw):
+    # bt_ref (the scalar-prefetched block table) is consumed only by the
+    # BlockSpec index_maps; the compute body is the contiguous kernel's.
+    _kernel(qpos_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s,
+            **kw)
+
+
+def decode_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
+                           *, window=0, softcap=0.0, scale=None,
+                           interpret=False):
+    """Paged-pool decode/verify attention.
+
+    q: [B, Tq, Hq, D]; k_pages, v_pages: [NB, block, Hkv, D] shared pools;
+    block_tables: [B, MBS] int32 (block 0 = reserved garbage block);
+    kv_len: [B] int32 valid entries; q_pos: [B, Tq] absolute positions.
+    """
+    b, tq, hq, d = q.shape
+    block, hkv = k_pages.shape[1], k_pages.shape[2]
+    mbs = block_tables.shape[1]
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+
+    qg = q.reshape(b, tq, hkv, g, d)
+    kern = functools.partial(_paged_kernel, scale=scale, window=window,
+                             softcap=softcap, block_k=block, tq=tq, g=g)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, mbs),
+        in_specs=[
+            pl.BlockSpec((1, tq), lambda bi, h, ki, bt: (bi, 0)),   # q_pos
+            pl.BlockSpec((1,), lambda bi, h, ki, bt: (bi,)),        # kv_len
+            pl.BlockSpec((1, tq, 1, g, d),
+                         lambda bi, h, ki, bt: (bi, 0, h, 0, 0)),   # q
+            pl.BlockSpec((1, block, 1, d),
+                         lambda bi, h, ki, bt: (bt[bi, ki], 0, h, 0)),  # k
+            pl.BlockSpec((1, block, 1, d),
+                         lambda bi, h, ki, bt: (bt[bi, ki], 0, h, 0)),  # v
+        ],
+        out_specs=pl.BlockSpec((1, tq, 1, g * d),
+                               lambda bi, h, ki, bt: (bi, 0, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((tq * g, 1), jnp.float32),
+            pltpu.VMEM((tq * g, 1), jnp.float32),
+            pltpu.VMEM((tq * g, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, tq, hkv, g * d), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), q_pos.astype(jnp.int32),
+      kv_len.astype(jnp.int32), qg, k_pages, v_pages)
     return out.reshape(b, tq, hq, d)

@@ -72,6 +72,24 @@ def decode_attention(q, k, v, kv_len, q_pos, *, window=0, softcap=0.0,
 
 
 @functools.partial(jax.jit, static_argnames=(
+    "window", "softcap", "scale", "interpret"))
+def decode_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
+                           *, window=0, softcap=0.0, scale=None,
+                           interpret=None):
+    """Paged-pool variant: k/v are [NB, block, Hkv, D] pools indirected by
+    ``block_tables`` [B, MBS]. The pool's block size IS the kernel's kv
+    block, so no padding is needed — the grid sweeps the table entries."""
+    interpret = _interpret(interpret)
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    return _dec.decode_attention_paged(q, k_pages, v_pages, block_tables,
+                                       kv_len, q_pos, window=window,
+                                       softcap=softcap, scale=scale,
+                                       interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
     "scale", "softcap", "block_q", "block_k", "interpret"))
 def pard_attention(q, k, v, segment, base, *, scale=None, softcap=0.0,
                    block_q=128, block_k=128, interpret=None):

@@ -13,7 +13,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from ..models.attention import NEG_INF, PardMaskInfo, attend, pard_mask
+from ..models.attention import (NEG_INF, PardMaskInfo, attend, gather_pages,
+                                pard_mask)
 from ..models.ssm import ssd_scan_chunked, ssd_scan_ref
 
 
@@ -39,6 +40,20 @@ def decode_attention_ref(q, k, v, kv_len, q_pos, *, window=0, softcap=0.0,
     kv_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
     return attend(q, k, v, q_pos, kv_pos, kv_len, causal=True, window=window,
                   attn_softcap=softcap, scale=scale)
+
+
+def decode_attention_paged_ref(q, k_pages, v_pages, block_tables, kv_len,
+                               q_pos, *, window=0, softcap=0.0, scale=None):
+    """Paged-pool oracle: gather each row's blocks into a contiguous view
+    (models.attention.gather_pages) and defer to the contiguous reference.
+
+    q: [B,Tq,Hq,D]; k_pages, v_pages: [NB, block, Hkv, D];
+    block_tables: [B, MBS]; kv_len: [B]; q_pos: [B,Tq] absolute.
+    """
+    k = gather_pages(k_pages, block_tables)
+    v = gather_pages(v_pages, block_tables)
+    return decode_attention_ref(q, k, v, kv_len, q_pos, window=window,
+                                softcap=softcap, scale=scale)
 
 
 def pard_attention_ref(q, k, v, segment, base, *, scale=None, softcap=0.0):

@@ -36,6 +36,16 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    layout = ap.add_mutually_exclusive_group()
+    layout.add_argument("--paged", dest="kv_layout", action="store_const",
+                        const="paged", help="block-paged KV cache (default)")
+    layout.add_argument("--contiguous", dest="kv_layout",
+                        action="store_const", const="contiguous",
+                        help="full-length per-slot KV rows")
+    ap.set_defaults(kv_layout="paged")
+    ap.add_argument("--kv-block-size", type=int, default=64)
+    ap.add_argument("--kv-num-blocks", type=int, default=None,
+                    help="paged pool size (default: worst-case coverage)")
     args = ap.parse_args()
 
     tc = get_config(args.target)
@@ -52,7 +62,9 @@ def main():
 
     eng = Engine(tp, tc, dp, dc, mode=args.mode, k=args.k,
                  max_batch=args.max_batch, max_len=args.max_len,
-                 temperature=args.temperature, seed=args.seed)
+                 temperature=args.temperature, seed=args.seed,
+                 kv_layout=args.kv_layout, kv_block_size=args.kv_block_size,
+                 kv_num_blocks=args.kv_num_blocks)
 
     corpus = MarkovCorpus(vocab_size=tc.vocab_size, seed=0, determinism=2.0)
     rng = np.random.default_rng(args.seed)
@@ -68,6 +80,9 @@ def main():
           f"throughput={total / wall:.1f} tok/s")
     lats = sorted(c.wall_done - c.wall_submitted for c in comps)
     print(f"latency p50={lats[len(lats) // 2]:.2f}s p max={lats[-1]:.2f}s")
+    print(f"kv layout={args.kv_layout} "
+          f"capacity={eng.kv_capacity_bytes() / 1e6:.2f}MB "
+          f"peak_in_use={eng.peak_kv_bytes_in_use / 1e6:.2f}MB")
     print("engine stats:", eng.stats)
 
 

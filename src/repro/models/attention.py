@@ -7,9 +7,21 @@ mask (Fig. 4/5 of the paper) enters through ``mask_info`` — per-token
 (segment, base) metadata — and is computed functionally, never materialised
 by the caller.
 
-KV caches are contiguous buffers indexed by absolute position; speculative
-rollback is just resetting ``cache_pos`` (stale entries are masked out by the
-validity test ``kv_index < kv_len``).
+KV caches come in two layouts (DESIGN.md §5):
+
+  * contiguous — one full-length buffer per batch row, indexed by absolute
+    position; speculative rollback is just resetting ``cache_pos`` (stale
+    entries are masked out by the validity test ``kv_index < kv_len``);
+  * paged — fixed-size KV blocks in a shared pool ``[num_blocks, block,
+    ...]`` with a per-row block table ``[B, max_blocks]`` mapping absolute
+    position ``p`` to ``(table[b, p // block], p % block)``. Block 0 is the
+    reserved garbage block: unallocated table entries point at it, so writes
+    past a row's allocation land there and are never attended (reads are
+    bounded by ``kv_len``). The serving pool lives in serving/kv_pool.py.
+
+The paged layout is selected by passing ``block_tables``/``kv_block_size``
+through ``forward`` — the same rollback-by-``cache_pos`` semantics hold
+because validity is still ``kv_index < kv_len``.
 """
 from __future__ import annotations
 
@@ -174,13 +186,82 @@ def _write_cache(buf, new, cache_pos):
     return jax.vmap(row)(buf, new, cache_pos)
 
 
+def write_cache_paged(pages, new, cache_pos, block_tables, block_size):
+    """Scatter new KV into a block-paged pool through per-row block tables.
+
+    pages: [NB, bs, ...]; new: [B, T, ...]; cache_pos: [B] int32;
+    block_tables: [B, MBS] int32. Rows own disjoint blocks, so the flattened
+    scatter indices never collide across the batch; positions mapping past a
+    row's table (or to unallocated entries) land in the reserved garbage
+    block 0, whose contents are never attended.
+    """
+    b, t = new.shape[0], new.shape[1]
+    bs = block_size
+    pos = cache_pos[:, None] + jnp.arange(t)[None, :]            # [B, T]
+    ent = pos // bs
+    mbs = block_tables.shape[1]
+    blk = jnp.take_along_axis(block_tables, jnp.clip(ent, 0, mbs - 1),
+                              axis=1)                            # [B, T]
+    blk = jnp.where(ent >= mbs, 0, blk)      # past the table -> garbage block
+    flat = (blk * bs + pos % bs).reshape(-1)
+    pf = pages.reshape((-1,) + pages.shape[2:])
+    pf = pf.at[flat].set(new.reshape((-1,) + new.shape[2:]).astype(pages.dtype))
+    return pf.reshape(pages.shape)
+
+
+def gather_pages(pages, block_tables):
+    """Per-row contiguous view of a paged pool (the reference read path).
+
+    pages: [NB, bs, ...]; block_tables: [B, MBS] -> [B, MBS * bs, ...].
+    """
+    g = jnp.take(pages, block_tables, axis=0)                    # [B, MBS, bs, ...]
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
 def _qk_rmsnorm(x, scale, eps):
     v = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
     return (x.astype(jnp.float32) * jax.lax.rsqrt(v + eps) * scale).astype(x.dtype)
 
 
+# queries per row in the decode/verify windows stay tiny (<= 2K); above this
+# the paged Pallas kernel's q tile would not fit VMEM comfortably and the
+# gather-based path is used instead (prefill-sized q blocks).
+_PAGED_KERNEL_MAX_TQ = 32
+
+
+def _paged_attend(q, k_pages, v_pages, block_tables, q_pos, kv_len, *,
+                  causal=True, window=0, attn_softcap=0.0, scale=None):
+    """Attention against a block-paged KV pool.
+
+    Uses the Pallas paged decode kernel for small query windows on the
+    pallas backend (the kernel's mask is causal, so only when ``causal``);
+    otherwise gathers the row's blocks into a contiguous view and reuses
+    the standard ``attend`` core (semantic reference). The gathered
+    temporary is the same size as a contiguous cache buffer, so the
+    reference path's peak memory matches the contiguous layout — the
+    paged layout's HBM win is the persistent pool, and the per-step copy
+    is avoided wherever the kernel path is active (TPU decode/verify).
+    """
+    b, tq = q.shape[:2]
+    if (_BACKEND == "pallas" and causal
+            and q.shape[-1] == k_pages.shape[-1]
+            and tq <= _PAGED_KERNEL_MAX_TQ):
+        from ..kernels import ops
+        kv_len_arr = jnp.broadcast_to(jnp.asarray(kv_len), (b,)).astype(jnp.int32)
+        return ops.decode_attention_paged(
+            q, k_pages, v_pages, block_tables, kv_len_arr, q_pos,
+            window=window, softcap=attn_softcap, scale=scale)
+    k = gather_pages(k_pages, block_tables)
+    v = gather_pages(v_pages, block_tables)
+    s = k.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    return attend(q, k, v, q_pos, kv_pos, kv_len, causal=causal,
+                  window=window, attn_softcap=attn_softcap, scale=scale)
+
+
 def gqa_apply(params, cfg, x, positions, *, layer_window=0, cache=None,
-              cache_pos=None, mask_info=None, causal=True, use_rope=True):
+              cache_pos=None, mask_info=None, causal=True, use_rope=True,
+              block_tables=None, kv_block_size=0):
     """Self attention. Returns (y, new_cache)."""
     b, t, _ = x.shape
     q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(x.dtype))
@@ -203,6 +284,16 @@ def gqa_apply(params, cfg, x, positions, *, layer_window=0, cache=None,
                      window=layer_window, attn_softcap=cfg.attn_softcap,
                      scale=scale, mask_info=mask_info)
         new_cache = None
+    elif block_tables is not None:
+        new_k = write_cache_paged(cache["k"], k, cache_pos, block_tables,
+                                  kv_block_size)
+        new_v = write_cache_paged(cache["v"], v, cache_pos, block_tables,
+                                  kv_block_size)
+        new_cache = {"k": new_k, "v": new_v}
+        out = _paged_attend(q, new_k, new_v, block_tables, positions,
+                            cache_pos + t, causal=causal,
+                            window=layer_window,
+                            attn_softcap=cfg.attn_softcap, scale=scale)
     else:
         new_k = _write_cache(cache["k"], k, cache_pos)
         new_v = _write_cache(cache["v"], v, cache_pos)
@@ -291,7 +382,7 @@ def _rms(x, scale, eps):
 
 
 def mla_apply(params, cfg, x, positions, *, cache=None, cache_pos=None,
-              mask_info=None):
+              mask_info=None, block_tables=None, kv_block_size=0):
     b, t, _ = x.shape
     h = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
@@ -313,7 +404,17 @@ def mla_apply(params, cfg, x, positions, *, cache=None, cache_pos=None,
     k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
     compressed = jnp.concatenate([ckv, k_rope], axis=-1)     # [B,T,r_kv+dr]
 
-    if cache is not None:
+    if cache is not None and block_tables is not None:
+        # paged MLA: the compressed KV pages gather into a per-row view;
+        # the projection to full K/V below is shared with the other paths
+        pages = write_cache_paged(cache["ckv"], compressed, cache_pos,
+                                  block_tables, kv_block_size)
+        new_cache = {"ckv": pages}
+        kv_src = gather_pages(pages, block_tables)
+        s = kv_src.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        kv_len = cache_pos + t
+    elif cache is not None:
         buf = jax.vmap(lambda bf, nw, p: jax.lax.dynamic_update_slice(
             bf, nw.astype(bf.dtype), (p, 0)))(cache["ckv"], compressed, cache_pos)
         new_cache = {"ckv": buf}

@@ -139,7 +139,7 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
 
 def _apply_layer(lp, cfg: ModelConfig, spec: LayerSpec, x, positions, *,
                  cache=None, cache_pos=None, mask_info=None, enc_out=None,
-                 collect_ssm=False):
+                 collect_ssm=False, block_tables=None, kv_block_size=0):
     _, norm = L.make_norm(cfg)
     aux = {}
     h = norm(lp["norm1"], x)
@@ -148,11 +148,14 @@ def _apply_layer(lp, cfg: ModelConfig, spec: LayerSpec, x, positions, *,
         window = cfg.sliding_window if spec.mixer == ATTN_LOCAL else 0
         y, new_cache = attn.gqa_apply(
             lp["mixer"], cfg, h, positions, layer_window=window, cache=cache,
-            cache_pos=cache_pos, mask_info=mask_info, use_rope=cfg.use_rope)
+            cache_pos=cache_pos, mask_info=mask_info, use_rope=cfg.use_rope,
+            block_tables=block_tables, kv_block_size=kv_block_size)
     elif spec.mixer == ATTN_MLA:
         y, new_cache = attn.mla_apply(lp["mixer"], cfg, h, positions,
                                       cache=cache, cache_pos=cache_pos,
-                                      mask_info=mask_info)
+                                      mask_info=mask_info,
+                                      block_tables=block_tables,
+                                      kv_block_size=kv_block_size)
     elif spec.mixer == ATTN_CROSS:
         y = attn.cross_attn_apply(lp["mixer"], cfg, h, enc_out)
         new_cache = cache
@@ -217,13 +220,19 @@ def encode(params, cfg: ModelConfig, frontend_embed: Array) -> Array:
 def forward(params, cfg: ModelConfig, tokens: Array, positions=None, *,
             mask_info=None, enc_out=None, caches=None, cache_pos=None,
             collect_ssm=False, remat: bool = False, dtype=jnp.bfloat16,
-            last_only: bool = False):
+            last_only: bool = False, block_tables=None, kv_block_size=0):
     """Run the decoder stack.
 
-    tokens:    [B, T] int32
-    positions: [B, T] absolute positions (default arange)
-    caches:    pytree from init_caches (None = no-cache training/prefill path)
-    cache_pos: [B] int32 — write offset into the caches
+    tokens:       [B, T] int32
+    positions:    [B, T] absolute positions (default arange)
+    caches:       pytree from init_caches (None = no-cache training/prefill
+                  path) or, with ``block_tables``, from
+                  serving.kv_pool.init_paged_caches
+    cache_pos:    [B] int32 — write offset into the caches
+    block_tables: [B, MBS] int32 — per-row block tables selecting the paged
+                  KV layout (attention leaves are [NB, block, ...] pools);
+                  SSM states stay batch-indexed either way
+    kv_block_size: tokens per KV block (static; required with block_tables)
 
     Returns (logits [B, T, padded_vocab], new_caches, aux).
     """
@@ -245,7 +254,9 @@ def forward(params, cfg: ModelConfig, tokens: Array, positions=None, *,
     def run(lp, spec, x, cache):
         return _apply_layer(lp, cfg, spec, x, positions, cache=cache,
                             cache_pos=cache_pos, mask_info=mask_info,
-                            enc_out=enc_out, collect_ssm=collect_ssm)
+                            enc_out=enc_out, collect_ssm=collect_ssm,
+                            block_tables=block_tables,
+                            kv_block_size=kv_block_size)
 
     # ---- prefix layers (unrolled) ----
     for i, spec in enumerate(plan.prefix):

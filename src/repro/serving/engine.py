@@ -2,20 +2,29 @@
 analogue of the paper's evaluation stack.
 
 Design (all fixed shapes, jit-once):
-  * a KV-cache POOL of ``max_batch`` slots (target + draft), a generation
-    buffer, and per-slot host state (committed count n, draft progress m,
-    done flag, request id);
+  * ONE ``DecodeState`` (core.spec_decode) holds the generation buffer,
+    per-slot (n, m, done) counters, block tables and the target + draft
+    cache handles; the decode steps are the exact jitted step functions
+    ``SpecDecoder`` uses for uniform-batch generation — no duplicated
+    AR/prefill machinery;
+  * KV layout is either "paged" (default; serving/kv_pool.py — fixed-size
+    blocks, per-slot block tables, free-list allocation, copy-free
+    admission, O(1) release) or "contiguous" (one full-length row per slot,
+    admission scatters the prefilled row into the pool);
   * admission: a free slot gets a PREFILL — the request's caches are
     computed in a [1, P_bucket] forward (prompt lengths bucketed to powers
-    of two to bound recompilation) and scattered into the pool at the slot's
-    batch index;
-  * decode: ONE jitted speculative step (from core.spec_decode) advances all
-    active slots together; finished slots free immediately and new requests
-    admit on the next tick (continuous batching);
+    of two to bound recompilation). Paged: the forward writes straight into
+    the slot's allocated blocks through its block-table row. When the pool
+    has no free blocks, requests wait in the queue (memory backpressure)
+    and admit as completions release blocks;
+  * decode: ONE jitted speculative step advances all active slots together;
+    finished slots free immediately and new requests admit on the next tick
+    (continuous batching);
   * modes: "ar" (AR+ baseline), "vsd", "pard" — same engine, same pool.
 
 SSM/hybrid targets work unchanged: the spec step's collect_ssm rollback is
-per-row, and prefill produces the row's (conv, ssm) state like any cache.
+per-row, SSM states stay batch-indexed in both KV layouts, and prefill
+produces the row's (conv, ssm) state like any cache (DESIGN.md §3/§5).
 """
 from __future__ import annotations
 
@@ -28,9 +37,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.spec_decode import SpecDecoder
-from ..models import forward, init_caches
+from ..core.spec_decode import DecodeState, SpecDecoder, prefill_row
+from ..models import init_caches
 from ..models.config import ModelConfig
+from . import kv_pool
 
 
 @dataclasses.dataclass
@@ -56,52 +66,71 @@ def _bucket(n: int) -> int:
     return b
 
 
-def _row_insert(pool_tree, row_tree, slot: int):
-    """Scatter a [1, ...] cache row into the pool at batch index ``slot``.
-    The cache pytree structure is {"prefix": [...], "scan": [...]}: prefix
-    leaves carry batch at axis 0, scanned leaves at axis 1 (repeats first)."""
-    def ins_axis(axis):
-        def ins(pool, row):
-            idx = [0] * pool.ndim
-            idx[axis] = slot
-            return jax.lax.dynamic_update_slice(pool, row.astype(pool.dtype),
-                                                tuple(idx))
-        return ins
-
-    return {
-        "prefix": jax.tree.map(ins_axis(0), pool_tree["prefix"],
-                               row_tree["prefix"]),
-        "scan": jax.tree.map(ins_axis(1), pool_tree["scan"],
-                             row_tree["scan"]),
-    }
-
-
 class Engine:
     def __init__(self, target_params, target_cfg: ModelConfig,
                  draft_params=None, draft_cfg: Optional[ModelConfig] = None, *,
                  mode: str = "pard", k: int = 8, max_batch: int = 4,
                  max_len: int = 1024, temperature: float = 0.0,
-                 eos_id: Optional[int] = None, seed: int = 0):
+                 eos_id: Optional[int] = None, seed: int = 0,
+                 kv_layout: str = "paged", kv_block_size: int = 64,
+                 kv_num_blocks: Optional[int] = None):
         assert mode in ("ar", "vsd", "pard")
+        assert kv_layout in ("paged", "contiguous")
         self.mode = mode
+        self.paged = kv_layout == "paged"
         self.k = k if mode != "ar" else 1
+        if mode == "ar":
+            # the AR baseline never reads draft caches: drop the draft model
+            # so admission skips its prefill and KV accounting excludes it
+            draft_params = draft_cfg = None
         self.max_batch = max_batch
         self.max_len = max_len
         self.eos_id = eos_id
-        self.dec = SpecDecoder(target_params, target_cfg, draft_params,
-                               draft_cfg, k=self.k, max_len=max_len,
-                               temperature=temperature)
+        self.dec = SpecDecoder(
+            target_params, target_cfg, draft_params, draft_cfg, k=self.k,
+            max_len=max_len, temperature=temperature,
+            kv_block_size=kv_block_size if self.paged else 0)
         self.tc, self.dc = target_cfg, draft_cfg
         self.rng = jax.random.PRNGKey(seed)
 
-        # pools
-        self.tcache = init_caches(target_cfg, max_batch, max_len)
-        self.dcache = (init_caches(draft_cfg, max_batch, max_len)
-                       if draft_cfg is not None else None)
-        self.gen = jnp.zeros((max_batch, max_len), jnp.int32)
-        self.n = jnp.ones((max_batch,), jnp.int32) * 2   # dummy-safe
-        self.m = jnp.ones((max_batch,), jnp.int32)
-        self.done = jnp.ones((max_batch,), bool)         # empty slots = done
+        # cache pools + unified decode state
+        if self.paged:
+            nb = kv_num_blocks or kv_pool.default_num_blocks(
+                max_batch, max_len, kv_block_size)
+            self.alloc = kv_pool.BlockAllocator(nb, kv_block_size, max_batch,
+                                                max_len)
+            tcache = kv_pool.init_paged_caches(target_cfg, max_batch, nb,
+                                               kv_block_size)
+            dcache = (kv_pool.init_paged_caches(draft_cfg, max_batch, nb,
+                                                kv_block_size)
+                      if draft_cfg is not None else None)
+            tables = jnp.asarray(self.alloc.tables)
+            self._kv_per_block = (
+                kv_pool.kv_bytes_per_block(target_cfg, tcache, nb)
+                + (kv_pool.kv_bytes_per_block(draft_cfg, dcache, nb)
+                   if dcache is not None else 0))
+        else:
+            self.alloc = None
+            tcache = init_caches(target_cfg, max_batch, max_len)
+            dcache = (init_caches(draft_cfg, max_batch, max_len)
+                      if draft_cfg is not None else None)
+            tables = None
+            self._kv_per_block = 0
+        self._kv_capacity = (
+            kv_pool.kv_capacity_bytes(target_cfg, tcache)
+            + (kv_pool.kv_capacity_bytes(draft_cfg, dcache)
+               if dcache is not None else 0))
+        # contiguous rows are committed whole-pool up front, so their peak
+        # IS the capacity — consumers read this field for either layout
+        self.peak_kv_bytes_in_use = 0 if self.paged else self._kv_capacity
+
+        self.state = DecodeState(
+            gen=jnp.zeros((max_batch, max_len), jnp.int32),
+            n=jnp.ones((max_batch,), jnp.int32) * 2,   # dummy-safe
+            m=jnp.ones((max_batch,), jnp.int32),
+            done=jnp.ones((max_batch,), bool),         # empty slots = done
+            tcache=tcache, dcache=dcache, tables=tables)
+        self._tables_version = self.alloc.version if self.paged else 0
 
         # host state
         self.slots: List[Optional[Request]] = [None] * max_batch
@@ -118,88 +147,144 @@ class Engine:
 
     # ------------------------------------------------------------- public
     def submit(self, prompt, max_new: int) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        need = len(prompt) + max_new + 2 * self.k + 2
+        if len(prompt) < 2 or need > self.max_len:
+            # a raised error, not an assert: past this point an oversized
+            # request would outgrow its cache rows/blocks and silently
+            # attend garbage
+            raise ValueError(
+                f"request needs {need} cache positions (prompt="
+                f"{len(prompt)}, max_new={max_new}, k={self.k}, +2 slack) "
+                f"but max_len={self.max_len}; prompts also need >= 2 tokens")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, np.asarray(prompt, np.int32), max_new))
+        self.queue.append(Request(rid, prompt, max_new))
         return rid
 
     def run(self, max_steps: int = 100000) -> List[Completion]:
         while (self.queue or any(s is not None for s in self.slots)) \
                 and self.stats["steps"] < max_steps:
             self._admit()
+            if self.queue and all(s is None for s in self.slots):
+                # every slot (hence every block) is free and the head of the
+                # queue STILL could not admit: it can never fit — fail loudly
+                # instead of spinning on backpressure forever
+                req = self.queue[0]
+                raise RuntimeError(
+                    f"request {req.rid} (prompt={len(req.prompt)}, "
+                    f"max_new={req.max_new}) needs more KV blocks than the "
+                    f"pool holds; raise kv_num_blocks or max_len")
             self._step()
             self._harvest()
         return self.completions
 
+    def kv_capacity_bytes(self) -> int:
+        """HBM resident for the attention KV cache (target + draft)."""
+        return self._kv_capacity
+
+    def kv_bytes_in_use(self) -> int:
+        """KV bytes backing live requests. Contiguous rows are committed
+        whole-pool up front; paged usage scales with actual allocation."""
+        if not self.paged:
+            return self._kv_capacity
+        return self.alloc.blocks_in_use * self._kv_per_block
+
     # ------------------------------------------------------------ internals
+    def _sync_tables(self):
+        """Push the host block tables to the device state when stale. This
+        runs before any forward that could consume them, so released rows'
+        stale writes always route to the garbage block (kv_pool I4)."""
+        if self.paged and self._tables_version != self.alloc.version:
+            self.state = dataclasses.replace(
+                self.state, tables=jnp.asarray(self.alloc.tables))
+            self._tables_version = self.alloc.version
+
     def _prefill_fns(self, p_bucket: int):
         key = p_bucket
         if key in self._prefill_cache:
             return self._prefill_cache[key]
+        paged = self.paged
+        bs = self.dec.kv_block_size
 
-        from ..core.spec_decode import _has_ssm, gather_ssm_states
-        t_ssm = _has_ssm(self.tc)
-        d_ssm = _has_ssm(self.dc) if self.dc is not None else False
+        def one(params, cfg, slot, toks, plen, pool, tables):
+            if paged:
+                row_t = jax.lax.dynamic_index_in_dim(tables, slot, 0,
+                                                     keepdims=True)
+                cin = kv_pool.prefill_cache_view(cfg, pool, True)
+            else:
+                row_t = None
+                cin = init_caches(cfg, 1, self.max_len)
+            row = prefill_row(params, cfg, toks, plen, cin, tables=row_t,
+                              block_size=bs)
+            return kv_pool.scatter_row_caches(cfg, pool, row, slot, paged)
 
-        def one(params, cfg, toks, plen, has_ssm):
-            c = init_caches(cfg, 1, self.max_len)
-            _, cache, _ = forward(params, cfg, toks, caches=c,
-                                  cache_pos=jnp.zeros((1,), jnp.int32),
-                                  collect_ssm=has_ssm)
-            if has_ssm:
-                # padded tail tokens would corrupt SSM state: roll back to
-                # the state after the last REAL prompt token (index plen-1
-                # of the plen processed tokens)
-                idx = jnp.asarray(plen - 1, jnp.int32).reshape(1)
-                cache = gather_ssm_states(cfg, cache, idx)
-            return cache
-
-        def prefill(tp, dp, toks, plen):
-            # single-row caches; tokens right-padded to the bucket. The
-            # padded tail writes attention KV at positions >= plen — never
-            # valid (kv_len bookkeeping) — and SSM state is rolled back.
-            tcache = one(tp, self.tc, toks, plen, t_ssm)
-            dcache = None
+        def prefill(tp, dp, slot, toks, plen, tcache, dcache, tables):
+            # single-row prefill; tokens right-padded to the bucket. Padded
+            # tail KV lands at positions >= plen — never valid (kv_len
+            # bookkeeping) — and SSM state is rolled back (DESIGN.md §3).
+            tcache = one(tp, self.tc, slot, toks, plen, tcache, tables)
             if self.dc is not None:
-                dcache = one(dp, self.dc, toks, plen, d_ssm)
+                dcache = one(dp, self.dc, slot, toks, plen, dcache, tables)
             return tcache, dcache
 
-        fn = jax.jit(prefill)
+        fn = jax.jit(prefill, donate_argnums=(5, 6))
         self._prefill_cache[key] = fn
         return fn
 
     def _admit(self):
+        # phase 1 (host): claim slots and, in paged mode, KV blocks. When
+        # the pool is exhausted the queue waits — completions release blocks
+        pending = []
         for slot in range(self.max_batch):
             if self.slots[slot] is not None or not self.queue:
                 continue
-            req = self.queue.popleft()
+            req = self.queue[0]
             p = len(req.prompt)
-            assert p >= 2 and p + req.max_new + 2 * self.k + 2 <= self.max_len
-            bucket = _bucket(p - 1)
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, :p - 1] = req.prompt[:-1]
-            # NOTE: padded tail tokens write cache entries at positions
-            # >= p-1; they are re-covered by the first decode/verify write
-            # (cache_pos = p-1) or masked by kv_len — never attended.
-            fn = self._prefill_fns(bucket)
-            tr, dr = fn(self.dec.tp, self.dec.dp, jnp.asarray(toks),
-                        p - 1)
-            self.tcache = _row_insert(self.tcache, tr, slot)
-            if dr is not None:
-                self.dcache = _row_insert(self.dcache, dr, slot)
-            gen_row = np.zeros((self.max_len,), np.int32)
-            gen_row[:p] = req.prompt
-            self.gen = self.gen.at[slot].set(jnp.asarray(gen_row))
-            self.n = self.n.at[slot].set(p)
-            self.m = self.m.at[slot].set(p - 1)
-            self.done = self.done.at[slot].set(False)
+            need = p + req.max_new + 2 * self.k + 2   # validated at submit()
+            if self.paged:
+                nb = self.alloc.blocks_needed(need)
+                if not self.alloc.can_allocate(nb):
+                    break                      # memory backpressure
+                self.alloc.allocate(slot, need)
+            self.queue.popleft()
             self.slots[slot] = req
             self.slot_limit[slot] = p + req.max_new
             self.slot_submit_t[slot] = time.perf_counter()
+            pending.append((slot, req))
+        if not pending:
+            return
+        self._sync_tables()
+        if self.paged:
+            self.peak_kv_bytes_in_use = max(self.peak_kv_bytes_in_use,
+                                            self.kv_bytes_in_use())
+
+        # phase 2 (device): per-request prefill — paged admission writes
+        # directly into the slot's blocks (no full-pool row scatter)
+        for slot, req in pending:
+            p = len(req.prompt)
+            bucket = _bucket(p - 1)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :p - 1] = req.prompt[:-1]
+            fn = self._prefill_fns(bucket)
+            st = self.state
+            tcache, dcache = fn(self.dec.tp, self.dec.dp, slot,
+                                jnp.asarray(toks), p - 1, st.tcache,
+                                st.dcache, st.tables)
+            gen_row = np.zeros((self.max_len,), np.int32)
+            gen_row[:p] = req.prompt
+            self.state = dataclasses.replace(
+                st,
+                gen=st.gen.at[slot].set(jnp.asarray(gen_row)),
+                n=st.n.at[slot].set(p),
+                m=st.m.at[slot].set(p - 1),
+                done=st.done.at[slot].set(False),
+                tcache=tcache, dcache=dcache)
 
     def _step(self):
-        if bool(jnp.all(self.done)):
+        if bool(jnp.all(self.state.done)):
             return
+        self._sync_tables()
         if self.mode == "ar":
             self._step_ar()
         else:
@@ -210,37 +295,24 @@ class Engine:
         if self._spec_step is None:
             self._spec_step = jax.jit(self.dec._build_spec_step(
                 "pard" if self.mode == "pard" else "vsd"),
-                donate_argnums=(0, 4, 5))
+                donate_argnums=(0,))
         self.rng, sub = jax.random.split(self.rng)
-        (self.gen, self.n, self.m, self.tcache, self.dcache, a, hist,
-         n_draft) = self._spec_step(self.gen, self.n, self.m, self.done,
-                                    self.tcache, self.dcache, sub)
+        self.state, a, hist, n_draft = self._spec_step(self.state, sub)
         self.stats["draft_forwards"] += int(n_draft)
         self.stats["target_forwards"] += 1
-        self.stats["committed"] += int(jnp.sum(a) + jnp.sum(~self.done))
+        self.stats["committed"] += int(jnp.sum(a) +
+                                       jnp.sum(~self.state.done))
 
     def _step_ar(self):
         if self._ar_step is None:
-            def ar_step(gen, n, done, tcache):
-                last = jnp.take_along_axis(gen, (n - 1)[:, None], axis=1)
-                logits, tcache, _ = forward(
-                    self.dec.tp, self.tc, last.astype(jnp.int32),
-                    caches=tcache, cache_pos=n - 1)
-                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-                gen2 = jax.vmap(
-                    lambda g, t, p: jax.lax.dynamic_update_slice(g, t[None], (p,))
-                )(gen, nxt, n)
-                gen = jnp.where(done[:, None], gen, gen2)
-                n = jnp.where(done, n, n + 1)
-                return gen, n, tcache
-            self._ar_step = jax.jit(ar_step, donate_argnums=(3,))
-        self.gen, self.n, self.tcache = self._ar_step(
-            self.gen, self.n, self.done, self.tcache)
+            self._ar_step = jax.jit(self.dec._build_ar_step(),
+                                    donate_argnums=(0,))
+        self.state = self._ar_step(self.state)
         self.stats["target_forwards"] += 1
-        self.stats["committed"] += int(jnp.sum(~self.done))
+        self.stats["committed"] += int(jnp.sum(~self.state.done))
 
     def _harvest(self):
-        n_host = np.asarray(jax.device_get(self.n))
+        n_host = np.asarray(jax.device_get(self.state.n))
         gen_host = None
         for slot, req in enumerate(self.slots):
             if req is None:
@@ -249,12 +321,12 @@ class Engine:
             hit_eos = False
             if self.eos_id is not None:
                 if gen_host is None:
-                    gen_host = np.asarray(jax.device_get(self.gen))
+                    gen_host = np.asarray(jax.device_get(self.state.gen))
                 row = gen_host[slot, len(req.prompt):n_host[slot]]
                 hit_eos = self.eos_id in row.tolist()
             if n_host[slot] >= limit or hit_eos:
                 if gen_host is None:
-                    gen_host = np.asarray(jax.device_get(self.gen))
+                    gen_host = np.asarray(jax.device_get(self.state.gen))
                 end = min(n_host[slot], limit)
                 toks = gen_host[slot, :end].copy()
                 self.completions.append(Completion(
@@ -263,4 +335,7 @@ class Engine:
                     wall_submitted=self.slot_submit_t[slot],
                     wall_done=time.perf_counter()))
                 self.slots[slot] = None
-                self.done = self.done.at[slot].set(True)
+                self.state = dataclasses.replace(
+                    self.state, done=self.state.done.at[slot].set(True))
+                if self.paged:
+                    self.alloc.release(slot)   # O(1); blocks reusable at once

@@ -1,0 +1,243 @@
+"""Block-paged KV-cache pool — the vLLM-style layout for the serving engine.
+
+The contiguous layout allocates ``max_batch x max_len`` cache rows up front,
+so HBM footprint is decoupled from what requests actually use. This module
+decouples them (DESIGN.md §5):
+
+  * attention KV lives in a shared pool of fixed-size blocks
+    ``[num_blocks, block_size, ...]`` (per layer; scanned layers carry a
+    leading repeats dim);
+  * each slot owns a *block table* row ``[max_blocks_per_seq]`` mapping
+    absolute position ``p`` to ``(table[p // block_size], p % block_size)``;
+  * a host-side free list hands blocks out at admission and takes them back
+    in O(1) at completion. Prefill writes straight into the allocated blocks
+    through the table (copy-free admission — no full-pool row scatter);
+  * SSM / conv states are O(1) per row and stay batch-indexed.
+
+Invariants (tested in tests/test_engine.py and tests/test_kv_pool.py):
+
+  I1. Block 0 is RESERVED as the garbage block. Unallocated table entries
+      are 0, so any write past a row's allocation lands there; reads never
+      see it because validity is ``kv_index < kv_len``.
+  I2. Live blocks are owned by exactly one slot; the flattened scatter in
+      models.attention.write_cache_paged therefore never collides.
+  I3. A slot's allocation covers every position the decode loop can write:
+      ``prompt + max_new + 2K + 2`` tokens (the speculative write window).
+  I4. A released slot's table row is zeroed (on host) before its blocks can
+      be handed to another slot, so a frozen row's stale writes route to
+      the garbage block, never into a new owner's blocks.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import ssm as ssm_mod
+from ..models.config import (ATTN_CROSS, ATTN_GLOBAL, ATTN_LOCAL, ATTN_MLA,
+                             SSM, ModelConfig, scan_plan)
+
+ATTN_MIXERS = (ATTN_GLOBAL, ATTN_LOCAL, ATTN_MLA)
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    return -(-int(n_tokens) // block_size)
+
+
+def default_num_blocks(max_batch: int, max_len: int, block_size: int) -> int:
+    """Worst-case pool size (every slot filled to max_len) + garbage block.
+
+    Serving deployments pass something smaller and rely on admission
+    backpressure; this default keeps the paged engine drop-in safe.
+    """
+    return max_batch * blocks_for(max_len, block_size) + 1
+
+
+# ---------------------------------------------------------------------------
+# Pool init
+# ---------------------------------------------------------------------------
+
+def _paged_layer_cache(cfg: ModelConfig, spec, num_blocks, block_size, batch,
+                       dtype):
+    if spec.mixer in (ATTN_GLOBAL, ATTN_LOCAL):
+        hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        return {"k": jnp.zeros((num_blocks, block_size, hkv, hd), dtype),
+                "v": jnp.zeros((num_blocks, block_size, hkv, hd), dtype)}
+    if spec.mixer == ATTN_MLA:
+        width = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+        return {"ckv": jnp.zeros((num_blocks, block_size, width), dtype)}
+    if spec.mixer == SSM:
+        return ssm_mod.init_mamba2_state(cfg, batch, jnp.float32)
+    if spec.mixer == ATTN_CROSS:
+        return {}
+    raise ValueError(spec.mixer)
+
+
+def init_paged_caches(cfg: ModelConfig, batch: int, num_blocks: int,
+                      block_size: int, dtype=jnp.bfloat16):
+    """Cache pytree with the SAME structure as models.init_caches, but
+    attention leaves are shared block pools [NB, bs, ...] (no batch dim);
+    SSM states remain [batch, ...]."""
+    plan = scan_plan(cfg)
+    return {
+        "prefix": [_paged_layer_cache(cfg, s, num_blocks, block_size, batch,
+                                      dtype)
+                   for s in plan.prefix],
+        "scan": [jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (plan.n_repeats,) + x.shape).copy()
+            if hasattr(x, "shape") else x,
+            _paged_layer_cache(cfg, s, num_blocks, block_size, batch, dtype))
+            for s in plan.period],
+    }
+
+
+def prefill_cache_view(cfg: ModelConfig, pool, paged: bool):
+    """The cache tree a single-request prefill forward should run against.
+
+    Paged: attention leaves ARE the pool (the forward writes through the
+    slot's block-table row — copy-free admission), SSM leaves a fresh
+    one-row state. Contiguous: handled by the caller (init_caches(cfg, 1)).
+    """
+    assert paged
+    plan = scan_plan(cfg)
+
+    def one(spec, entry, scanned):
+        if spec.mixer != SSM:
+            return entry
+        row = ssm_mod.init_mamba2_state(cfg, 1, jnp.float32)
+        if scanned:
+            row = jax.tree.map(
+                lambda x: jnp.broadcast_to(
+                    x, (plan.n_repeats,) + x.shape).copy(), row)
+        return row
+
+    return {
+        "prefix": [one(s, pool["prefix"][i], False)
+                   for i, s in enumerate(plan.prefix)],
+        "scan": [one(s, pool["scan"][j], True)
+                 for j, s in enumerate(plan.period)],
+    }
+
+
+def scatter_row_caches(cfg: ModelConfig, pool, row, slot, paged: bool):
+    """Merge a prefill result into the engine's cache pools at ``slot``.
+
+    Paged: attention entries in ``row`` are the already-updated pools
+    (adopted as-is); only the O(1) SSM states are scattered. Contiguous:
+    every leaf is a [1, ...] row scattered at batch index ``slot`` (prefix
+    leaves carry batch at axis 0, scanned leaves at axis 1).
+    ``slot`` may be traced (dynamic_update_slice start).
+    """
+    plan = scan_plan(cfg)
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def ins_axis(axis):
+        def ins(p, r):
+            idx = [jnp.zeros((), jnp.int32)] * p.ndim
+            idx[axis] = slot
+            return jax.lax.dynamic_update_slice(p, r.astype(p.dtype),
+                                                tuple(idx))
+        return ins
+
+    def merge(spec, pool_e, row_e, axis):
+        if paged and spec.mixer in ATTN_MIXERS:
+            return row_e                       # row IS the updated pool
+        return jax.tree.map(ins_axis(axis), pool_e, row_e)
+
+    return {
+        "prefix": [merge(s, pool["prefix"][i], row["prefix"][i], 0)
+                   for i, s in enumerate(plan.prefix)],
+        "scan": [merge(s, pool["scan"][j], row["scan"][j], 1)
+                 for j, s in enumerate(plan.period)],
+    }
+
+
+# ---------------------------------------------------------------------------
+# Bytes accounting
+# ---------------------------------------------------------------------------
+
+def _attn_leaves(cfg: ModelConfig, tree):
+    plan = scan_plan(cfg)
+    out = []
+    for i, s in enumerate(plan.prefix):
+        if s.mixer in ATTN_MIXERS:
+            out += jax.tree.leaves(tree["prefix"][i])
+    for j, s in enumerate(plan.period):
+        if s.mixer in ATTN_MIXERS:
+            out += jax.tree.leaves(tree["scan"][j])
+    return out
+
+
+def kv_capacity_bytes(cfg: ModelConfig, tree) -> int:
+    """HBM resident for the attention KV leaves (either layout)."""
+    return int(sum(l.nbytes for l in _attn_leaves(cfg, tree)))
+
+
+def kv_bytes_per_block(cfg: ModelConfig, tree, num_blocks: int) -> int:
+    """Bytes one pool block costs across all attention leaves (scanned
+    leaves count each repeat, since the pool exists per repeat-layer)."""
+    return int(sum(l.nbytes // num_blocks for l in _attn_leaves(cfg, tree)))
+
+
+# ---------------------------------------------------------------------------
+# Allocator
+# ---------------------------------------------------------------------------
+
+class BlockAllocator:
+    """Host-side free-list block allocator + block-table shadow.
+
+    The device copy of ``tables`` is refreshed by the engine whenever
+    ``version`` changes (admission / release), so frozen rows' stale writes
+    always route through an up-to-date table (invariant I4).
+    """
+
+    def __init__(self, num_blocks: int, block_size: int, max_batch: int,
+                 max_len: int):
+        assert num_blocks >= 2, "need at least one block beyond the reserved 0"
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.max_blocks_per_seq = blocks_for(max_len, block_size)
+        # LIFO free list; block 0 reserved as the garbage block (I1)
+        self.free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self.tables = np.zeros((max_batch, self.max_blocks_per_seq), np.int32)
+        self.owned: Dict[int, List[int]] = {}
+        self.version = 0
+
+    # -- queries ---------------------------------------------------------
+    def blocks_needed(self, n_tokens: int) -> int:
+        return blocks_for(n_tokens, self.block_size)
+
+    def can_allocate(self, n_blocks: int) -> bool:
+        return len(self.free) >= n_blocks
+
+    @property
+    def blocks_in_use(self) -> int:
+        return sum(len(v) for v in self.owned.values())
+
+    # -- mutation --------------------------------------------------------
+    def allocate(self, slot: int, n_tokens: int) -> None:
+        assert slot not in self.owned, f"slot {slot} already allocated"
+        nb = self.blocks_needed(n_tokens)
+        if nb > self.max_blocks_per_seq:
+            # never clamp: a short allocation would break I3 and let decode
+            # attend garbage-block KV as if it were valid context
+            raise ValueError(
+                f"{n_tokens} tokens need {nb} blocks but a sequence's block "
+                f"table holds {self.max_blocks_per_seq} (max_len too small)")
+        assert self.can_allocate(nb), "allocate() without can_allocate()"
+        blocks = [self.free.pop() for _ in range(nb)]
+        self.owned[slot] = blocks
+        self.tables[slot, :] = 0
+        self.tables[slot, :nb] = blocks
+        self.version += 1
+
+    def release(self, slot: int) -> List[int]:
+        """O(1) in tokens: just returns the slot's blocks to the free list
+        and zeroes its table row (stale writes -> garbage block, I4)."""
+        blocks = self.owned.pop(slot, [])
+        self.free.extend(blocks)
+        self.tables[slot, :] = 0
+        self.version += 1
+        return blocks

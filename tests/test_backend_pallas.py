@@ -54,3 +54,34 @@ def test_decode_backend_equivalence():
     out = run()
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=2e-3, rtol=2e-3)
+
+
+def test_paged_decode_backend_equivalence():
+    """Paged-cache decode through the model forward: the Pallas paged
+    kernel (block-table indirection) must match the XLA gather path."""
+    from repro.serving import kv_pool
+    cfg = get_config("tiny-target")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab_size)
+    tables = jnp.asarray([[1, 3, 5, 7], [2, 4, 6, 8]], jnp.int32)
+
+    def run():
+        caches = kv_pool.init_paged_caches(cfg, 2, num_blocks=9, block_size=8,
+                                           dtype=jnp.float32)
+        _, caches, _ = forward(params, cfg, tokens, caches=caches,
+                               cache_pos=jnp.zeros(2, jnp.int32),
+                               block_tables=tables, kv_block_size=8,
+                               dtype=jnp.float32)
+        lg, _, _ = forward(params, cfg, tokens[:, :1], caches=caches,
+                           cache_pos=jnp.full(2, 16, jnp.int32),
+                           block_tables=tables, kv_block_size=8,
+                           dtype=jnp.float32)
+        return lg
+
+    set_attention_backend("xla")
+    ref = run()
+    set_attention_backend("pallas")
+    out = run()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-3, rtol=2e-3)

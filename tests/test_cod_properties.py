@@ -2,6 +2,10 @@
 the spec-decode invariants."""
 import numpy as np
 import pytest
+
+# optional dev dependency (requirements-dev.txt): skip cleanly, never break
+# collection of the tier-1 suite
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cod import (CodConfig, check_invariants, pack_sample,

@@ -85,6 +85,150 @@ def test_eos_stops_early(models):
     assert eos in out.tokens[len(p):].tolist()
 
 
+def test_paged_matches_contiguous(models):
+    """Acceptance parity: greedy PARD outputs must be identical between the
+    block-paged and the contiguous KV layout under the same ragged
+    batching."""
+    tc, tp, dc, dp = models
+    rng = np.random.default_rng(6)
+    prompts = _prompts(rng, 6)
+    results = {}
+    for layout in ("contiguous", "paged"):
+        eng = Engine(tp, tc, dp, dc, mode="pard", k=4, max_batch=2,
+                     max_len=256, kv_layout=layout, kv_block_size=32)
+        rids = {eng.submit(p, 12): i for i, p in enumerate(prompts)}
+        comps = eng.run()
+        assert len(comps) == len(prompts)
+        results[layout] = {rids[c.rid]: c.tokens for c in comps}
+    for i in range(len(prompts)):
+        assert np.array_equal(results["contiguous"][i], results["paged"][i])
+
+
+def test_paged_bytes_scale_with_fill(models):
+    """Short-prompt workload at max_len=1024: the paged engine's peak KV
+    bytes in use must stay under 50% of the contiguous pool (acceptance
+    criterion — HBM tracks actual fill, not max_batch x max_len)."""
+    tc, tp, dc, dp = models
+    rng = np.random.default_rng(7)
+    prompts = _prompts(rng, 5)
+    cont = Engine(tp, tc, dp, dc, mode="pard", k=4, max_batch=2,
+                  max_len=1024, kv_layout="contiguous")
+    paged = Engine(tp, tc, dp, dc, mode="pard", k=4, max_batch=2,
+                   max_len=1024, kv_layout="paged", kv_block_size=64)
+    for p in prompts:
+        cont.submit(p, 16)
+        paged.submit(p, 16)
+    ref = {c.rid: c.tokens for c in cont.run()}
+    out = {c.rid: c.tokens for c in paged.run()}
+    for rid in ref:
+        assert np.array_equal(ref[rid], out[rid])
+    assert paged.peak_kv_bytes_in_use > 0
+    assert paged.peak_kv_bytes_in_use < 0.5 * cont.kv_capacity_bytes()
+    assert paged.kv_bytes_in_use() == 0          # everything released
+
+
+def test_paged_ragged_arrival_order(models):
+    """More ragged requests than slots, arriving in one burst: every
+    completion must match its own single-request greedy reference (no
+    cross-request KV leakage through the shared pool)."""
+    tc, tp, dc, dp = models
+    rng = np.random.default_rng(8)
+    prompts = _prompts(rng, 5)
+    max_news = [9, 14, 7, 12, 10]
+    refs = {}
+    for i, (p, mn) in enumerate(zip(prompts, max_news)):
+        dec = SpecDecoder(tp, tc, dp, dc, k=4, max_len=256)
+        refs[i] = np.asarray(dec.generate_ar(jnp.asarray(p)[None], mn)[0][0])
+    eng = Engine(tp, tc, dp, dc, mode="pard", k=4, max_batch=2, max_len=256,
+                 kv_layout="paged", kv_block_size=32)
+    rids = {eng.submit(p, mn): i for i, (p, mn)
+            in enumerate(zip(prompts, max_news))}
+    comps = eng.run()
+    assert len(comps) == len(prompts)
+    for c in comps:
+        assert np.array_equal(refs[rids[c.rid]], c.tokens)
+
+
+def test_paged_eos_mid_verify_window(models):
+    """EOS produced inside a speculative verify window (mode=pard commits
+    up to K+1 tokens per step) must stop the request — and the tokens up to
+    and including EOS must still match the AR reference."""
+    tc, tp, dc, dp = models
+    rng = np.random.default_rng(9)
+    p = rng.integers(0, 512, size=6).astype(np.int32)
+    dec = SpecDecoder(tp, tc, dp, dc, k=4, max_len=256)
+    full = np.asarray(dec.generate_ar(jnp.asarray(p)[None], 16)[0][0])
+    eos = int(full[len(p) + 5])                  # mid-window position
+    eng = Engine(tp, tc, dp, dc, mode="pard", k=4, max_batch=1, max_len=256,
+                 eos_id=eos, kv_layout="paged", kv_block_size=32)
+    eng.submit(p, 16)
+    out = eng.run()[0]
+    assert out.generated <= 16
+    gen = out.tokens[len(p):]
+    assert eos in gen.tolist()
+    cut = gen.tolist().index(eos) + 1
+    assert np.array_equal(out.tokens[:len(p) + cut], full[:len(p) + cut])
+
+
+def test_paged_slot_reuse_reallocates_blocks(models):
+    """Continuous batching through a deliberately tight pool: freed slots'
+    blocks MUST be handed to later requests (the pool is too small to serve
+    them otherwise), old KV is never attended (outputs match per-request
+    references), and admission backpressure never deadlocks."""
+    tc, tp, dc, dp = models
+    rng = np.random.default_rng(10)
+    prompts = _prompts(rng, 6)
+    need_blocks = max(len(p) + 10 + 2 * 4 + 2 for p in prompts) // 32 + 1
+    # room for ~2 concurrent requests; 6 requests => reuse is forced
+    eng = Engine(tp, tc, dp, dc, mode="pard", k=4, max_batch=2, max_len=256,
+                 kv_layout="paged", kv_block_size=32,
+                 kv_num_blocks=1 + 2 * need_blocks)
+    allocs = []
+
+    def spy(slot, n, _orig=eng.alloc.allocate):
+        _orig(slot, n)
+        allocs.append(list(eng.alloc.owned[slot]))
+
+    eng.alloc.allocate = spy
+    rids = {eng.submit(p, 10): i for i, p in enumerate(prompts)}
+    comps = eng.run()
+    assert len(comps) == len(prompts)
+    seen = [b for al in allocs for b in al]
+    assert len(seen) > len(set(seen))            # some block served >1 request
+    for c in comps:
+        i = rids[c.rid]
+        dec = SpecDecoder(tp, tc, dp, dc, k=4, max_len=256)
+        ref = np.asarray(dec.generate_ar(
+            jnp.asarray(prompts[i])[None], 10)[0][0])
+        assert np.array_equal(ref, c.tokens)
+    assert eng.alloc.blocks_in_use == 0
+
+
+def test_submit_rejects_request_exceeding_max_len(models):
+    """Oversized requests must fail at submit() with a real error — past
+    admission they would outgrow their cache rows/blocks and silently
+    attend garbage."""
+    tc, tp, dc, dp = models
+    eng = Engine(tp, tc, dp, dc, mode="pard", k=4, max_batch=1, max_len=64)
+    with pytest.raises(ValueError, match="cache positions"):
+        eng.submit(np.arange(40, dtype=np.int32) % 512, 32)  # 40+32+10 > 64
+    with pytest.raises(ValueError):
+        eng.submit(np.asarray([1], np.int32), 4)             # prompt < 2
+
+
+def test_paged_oversized_request_fails_loudly(models):
+    """A request that cannot fit the pool even when it is empty must raise
+    instead of spinning on admission backpressure forever."""
+    tc, tp, dc, dp = models
+    rng = np.random.default_rng(11)
+    p = rng.integers(0, 512, size=16).astype(np.int32)
+    eng = Engine(tp, tc, dp, dc, mode="pard", k=4, max_batch=2, max_len=512,
+                 kv_layout="paged", kv_block_size=32, kv_num_blocks=2)
+    eng.submit(p, 24)                            # needs 2 blocks; pool has 1
+    with pytest.raises(RuntimeError, match="KV blocks"):
+        eng.run()
+
+
 def test_hybrid_engine(models):
     jc = get_config("jamba-1.5-large-398b-smoke")
     jp = init_params(jax.random.PRNGKey(4), jc)

@@ -58,6 +58,74 @@ def test_decode_attention(b, tq, hq, hkv, d, s):
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
 
 
+def _paged_setup(b, hkv, d, bs, mbs, key=0):
+    """A pool with rows owning interleaved (non-monotone) blocks, plus the
+    equivalent contiguous cache for cross-layout parity checks."""
+    nb = 1 + b * mbs
+    k_pages = rand(nb, bs, hkv, d, k=key + 1)
+    v_pages = rand(nb, bs, hkv, d, k=key + 2)
+    perm = np.random.default_rng(key).permutation(np.arange(1, nb))
+    tables = jnp.asarray(perm.reshape(b, mbs), jnp.int32)
+    k_cont = ref.gather_pages(k_pages, tables)
+    v_cont = ref.gather_pages(v_pages, tables)
+    return k_pages, v_pages, tables, k_cont, v_cont
+
+
+@pytest.mark.parametrize("b,tq,hq,hkv,d,bs,mbs", [
+    (2, 9, 4, 2, 64, 32, 4),     # PARD verify window (K+1 = 9)
+    (3, 1, 4, 4, 32, 16, 5),     # plain AR decode
+    (1, 8, 8, 2, 32, 64, 3),     # 2K draft window
+])
+def test_decode_attention_paged(b, tq, hq, hkv, d, bs, mbs):
+    q = rand(b, tq, hq, d, k=4)
+    kv_len = jnp.asarray([bs * mbs // 2 + 3 * i + tq for i in range(b)],
+                         jnp.int32)
+    k_pages, v_pages, tables, k_cont, v_cont = _paged_setup(b, hkv, d, bs,
+                                                            mbs)
+    q_pos = (kv_len - tq)[:, None] + jnp.arange(tq)[None, :]
+    out = ops.decode_attention_paged(q, k_pages, v_pages, tables, kv_len,
+                                     q_pos)
+    want = ref.decode_attention_paged_ref(q, k_pages, v_pages, tables,
+                                          kv_len, q_pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+    # cross-layout: the contiguous kernel on the gathered view must agree
+    cont = ops.decode_attention(q, k_cont, v_cont, kv_len, q_pos, block_k=bs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(cont), atol=2e-5)
+
+
+def test_decode_attention_paged_window_softcap():
+    b, tq, h, d, bs, mbs = 2, 3, 4, 32, 16, 6
+    q = rand(b, tq, h, d, k=7)
+    kv_len = jnp.asarray([77, 60], jnp.int32)
+    k_pages, v_pages, tables, _, _ = _paged_setup(b, h, d, bs, mbs, key=30)
+    q_pos = (kv_len - tq)[:, None] + jnp.arange(tq)[None, :]
+    out = ops.decode_attention_paged(q, k_pages, v_pages, tables, kv_len,
+                                     q_pos, window=24, softcap=30.0)
+    want = ref.decode_attention_paged_ref(q, k_pages, v_pages, tables,
+                                          kv_len, q_pos, window=24,
+                                          softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_decode_attention_paged_ignores_garbage_block():
+    """Unallocated table entries point at block 0; its contents must never
+    leak into the output (kv_len masks them)."""
+    b, tq, h, d, bs, mbs = 1, 2, 2, 16, 8, 4
+    q = rand(b, tq, h, d, k=40)
+    k_pages = rand(6, bs, h, d, k=41)
+    v_pages = rand(6, bs, h, d, k=42)
+    tables = jnp.asarray([[3, 5, 0, 0]], jnp.int32)     # 2 real blocks
+    kv_len = jnp.asarray([14], jnp.int32)
+    q_pos = (kv_len - tq)[:, None] + jnp.arange(tq)[None, :]
+    out1 = ops.decode_attention_paged(q, k_pages, v_pages, tables, kv_len,
+                                      q_pos)
+    poisoned_k = k_pages.at[0].set(1e4)
+    poisoned_v = v_pages.at[0].set(-1e4)
+    out2 = ops.decode_attention_paged(q, poisoned_k, poisoned_v, tables,
+                                      kv_len, q_pos)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=0)
+
+
 def test_decode_attention_window():
     b, tq, h, d, s = 2, 3, 4, 32, 128
     q, k, v = rand(b, tq, h, d, k=7), rand(b, s, h, d, k=8), rand(b, s, h, d, k=9)

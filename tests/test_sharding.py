@@ -27,7 +27,10 @@ MESH = FakeMesh((16, 16), ("data", "model"))
 
 
 def _leaves_with_paths(tree, prefix=""):
-    if isinstance(tree, dict):
+    if isinstance(tree, P):
+        # PartitionSpec subclasses tuple — it is a LEAF, not a container
+        yield prefix, tree
+    elif isinstance(tree, dict):
         for k, v in tree.items():
             yield from _leaves_with_paths(v, f"{prefix}/{k}")
     elif isinstance(tree, (list, tuple)):
@@ -101,8 +104,9 @@ def test_cache_specs_long_context_seq_sharding():
 def test_sharded_train_step_runs_on_host_mesh():
     """End-to-end pjit train step on the test process's devices."""
     n = jax.device_count()
-    mesh = jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # jax.sharding.AxisType landed after 0.4.x; plain make_mesh axes are
+    # already Auto-typed under the installed API
+    mesh = jax.make_mesh((n, 1), ("data", "model"))
     cfg = get_config("tiny-draft")
     from repro.training.optimizer import AdamW
     from repro.training.train_loop import Trainer
