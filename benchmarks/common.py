@@ -75,11 +75,32 @@ def timed(fn, *args, warmup: int = 1, reps: int = 1, **kw):
     return out, best
 
 
-def emit(rows, table: str):
-    """Print the required ``name,us_per_call,derived`` CSV and persist."""
-    os.makedirs(RESULTS, exist_ok=True)
+def emit(rows, table: str, persist: bool = True):
+    """Print the required ``name,us_per_call,derived`` CSV and (unless the
+    table persists its own canonical record — see update_bench_serve)
+    mirror it under benchmarks/results/."""
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if not persist:
+        return
+    os.makedirs(RESULTS, exist_ok=True)
     with open(os.path.join(RESULTS, f"bench_{table}.json"), "w") as f:
         json.dump([{"name": n, "us_per_call": u, "derived": d}
                    for n, u, d in rows], f, indent=1)
+
+
+BENCH_SERVE = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+
+def update_bench_serve(section: str, record: Dict) -> None:
+    """Merge ``record`` under ``section`` into the canonical serving
+    trajectory file, BENCH_serve.json at the repo root (the one location —
+    the gitignored benchmarks/results/ mirror is NOT written for serve
+    tables). CI uploads this file and gates on its accepted lengths."""
+    data = {}
+    if os.path.exists(BENCH_SERVE):
+        with open(BENCH_SERVE) as f:
+            data = json.load(f)
+    data[section] = record
+    with open(BENCH_SERVE, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)

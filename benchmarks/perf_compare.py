@@ -16,7 +16,6 @@ import os
 
 from repro.configs import get_config
 from repro.launch import roofline
-from repro.launch.steps import PARD_K
 
 
 def main():

@@ -54,7 +54,6 @@ def main():
         rows.append(r)
 
     rows.sort(key=lambda r: (r["arch"], r["shape"], r["multi_pod"]))
-    sep = "|" if args.md else " "
     hdr = ["arch", "shape", "mesh", "mode", "compute_s", "memory_s",
            "collective_s", "dominant", "hbm/dev", "ucr", "compile_s"]
     if args.md:

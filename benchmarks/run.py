@@ -1,18 +1,50 @@
 """Benchmark harness — one function per paper table/figure.
 
   PYTHONPATH=src python -m benchmarks.run [--only table1,table5] [--list]
+  PYTHONPATH=src python -m benchmarks.run --tree [--smoke-floor 1.8]
 
 Prints ``name,us_per_call,derived`` CSV. Requires the trained artifacts
 (``python examples/pard_adaptation_train.py``); without them it falls back
-to random weights and WARNS (timings still valid, acceptance meaningless).
+to random weights and WARNS (timings still valid, acceptance meaningless —
+except the serve_tree table, which self-drafts and stays meaningful).
+
+``--tree`` runs the tree-drafting serve benchmark (serve_tree) and
+``--smoke-floor`` turns the run into the CI regression gate: it exits
+non-zero unless every PARD mean accepted length recorded in the canonical
+BENCH_serve.json "tree" section stays at or above the floor.
 
 The roofline/dry-run numbers (deliverable e/g) are produced separately by
 ``python -m repro.launch.dryrun --all --both-meshes`` and summarised with
 ``python -m benchmarks.roofline_report``.
 """
 import argparse
+import json
 import sys
 import time
+
+
+def check_floor(floor: float) -> int:
+    """CI gate: every recorded tree/flat PARD mean accepted length must be
+    >= floor. Returns a process exit code."""
+    from . import common
+
+    with open(common.BENCH_SERVE) as f:
+        record = json.load(f)
+    tree = record.get("tree")
+    if not tree:
+        print(f"smoke-floor: no 'tree' section in {common.BENCH_SERVE} — "
+              f"run with --tree", file=sys.stderr)
+        return 2
+    failed = False
+    for name, entry in sorted(tree.items()):
+        acc = entry.get("mean_accepted")
+        if acc is None:
+            continue
+        ok = acc >= floor
+        failed |= not ok
+        print(f"smoke-floor: {name} mean_accepted={acc:.3f} "
+              f"{'>=' if ok else '< FAIL'} {floor}", file=sys.stderr)
+    return 1 if failed else 0
 
 
 def main() -> None:
@@ -20,6 +52,12 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset, e.g. table1,fig6b")
     ap.add_argument("--list", action="store_true")
+    ap.add_argument("--tree", action="store_true",
+                    help="run the tree-drafting serve benchmark (serve_tree)")
+    ap.add_argument("--smoke-floor", type=float, default=None, metavar="ACC",
+                    help="after running, fail unless every PARD mean "
+                         "accepted length in BENCH_serve.json's tree "
+                         "section is >= ACC (the CI perf regression gate)")
     args = ap.parse_args()
 
     from . import common, tables
@@ -32,12 +70,18 @@ def main() -> None:
               "examples/pard_adaptation_train.py first; using random weights",
               file=sys.stderr)
 
-    names = args.only.split(",") if args.only else list(tables.ALL)
+    names = args.only.split(",") if args.only else \
+        ([] if args.tree else list(tables.ALL))
+    if args.tree and "serve_tree" not in names:
+        names.append("serve_tree")
     t0 = time.time()
     print("name,us_per_call,derived")
     for name in names:
         tables.ALL[name]()
     print(f"# total wall: {time.time() - t0:.1f}s", file=sys.stderr)
+
+    if args.smoke_floor is not None:
+        sys.exit(check_floor(args.smoke_floor))
 
 
 if __name__ == "__main__":

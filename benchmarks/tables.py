@@ -9,7 +9,7 @@ TPS is CPU-bound here; see common.py).
 from __future__ import annotations
 
 import time
-from typing import Dict, List
+from typing import List
 
 import jax
 import jax.numpy as jnp
@@ -246,7 +246,8 @@ def fig6a() -> List:
     tp, tc = load_model("bench-target")
     _, dc = load_model("bench-draft")
     prompt = prompts(4)
-    import json, os
+    import json
+    import os
     man = json.load(open(os.path.join(common.ART, "manifest.json")))
     rows = []
     for tag in ("pard_k8_r07", "pard_k8_r05", "pard_k8_nodrop"):
@@ -289,14 +290,14 @@ def serve() -> List:
     """Serving-engine KV layouts: tokens/sec and cache HBM bytes for
     ar/vsd/pard in both the contiguous and the block-paged layout. Uses the
     tiny family (the point is the LAYOUT ratio — paged bytes track actual
-    fill — not absolute CPU throughput) and persists the trajectory to
-    BENCH_serve.json at the repo root."""
-    import json, os
+    fill — not absolute CPU throughput) and persists the trajectory to the
+    canonical BENCH_serve.json at the repo root (common.update_bench_serve;
+    the per-table results/ mirror is intentionally not written)."""
     tp, tc = load_model("tiny-target")
     dp, dc = load_model("tiny-draft")
     rng = np.random.default_rng(0)
-    reqs = [np.asarray(common.corpus().prompts(rng, 1, int(l))[0])
-            for l in rng.integers(8, 24, size=8)]
+    reqs = [np.asarray(common.corpus().prompts(rng, 1, int(n_tok))[0])
+            for n_tok in rng.integers(8, 24, size=8)]
     max_len, max_new = 1024, 24
 
     rows, record = [], {}
@@ -322,13 +323,81 @@ def serve() -> List:
             record[f"{mode}.{layout}"] = dict(
                 tokens_per_sec=round(tps, 2), kv_capacity_bytes=cap,
                 kv_peak_bytes_in_use=peak)
-    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
-    with open(out, "w") as f:
-        json.dump(record, f, indent=1, sort_keys=True)
-    emit(rows, "serve")
+    common.update_bench_serve("serve", record)
+    emit(rows, "serve", persist=False)
+    return rows
+
+
+# tree templates benchmarked by serve_tree: the degenerate chain (asserted
+# token-identical to the flat-K path) and the branching template that the
+# CI smoke gate tracks.  PARD self-drafts here (draft == target weights):
+# depth 1 always matches and the mask-chain conditioning error grows with
+# depth — exactly the regime where top-k branches pay off — so accepted
+# lengths are meaningful even without trained artifacts.
+TREE_K = 4
+TREE_TEMPLATES = {"chain-1x1x1x1": (1, 1, 1, 1), "tree-2x2x2x1": (2, 2, 2, 1)}
+
+
+def serve_tree() -> List:
+    """Tree-structured PARD drafting through the serving engine: accepted
+    length and tokens/sec per tree template vs the flat-K baseline, paged
+    KV. The degenerate single-branch template must be token-identical to
+    flat-K, and the branching template must achieve strictly higher mean
+    accepted length per verify step (both enforced here; CI gates the
+    recorded floor via ``benchmarks.run --smoke-floor``)."""
+    from repro.core.spec_decode import TreeTemplate
+    tp, tc = load_model("tiny-target")
+    rng = np.random.default_rng(0)
+    reqs = [np.asarray(common.corpus().prompts(rng, 1, int(n_tok))[0])
+            for n_tok in rng.integers(8, 24, size=6)]
+    max_len, max_new = 512, 32
+
+    def run_engine(tree):
+        eng = Engine(tp, tc, tp, tc, mode="pard", k=TREE_K, max_batch=2,
+                     max_len=max_len, kv_layout="paged", kv_block_size=64,
+                     tree=tree)
+        for r in reqs:                          # warm pass: compile steps
+            eng.submit(r, max_new)
+        eng.run()
+        eng.stats.update(accepted=0, live_steps=0)
+        for r in reqs:
+            eng.submit(r, max_new)
+        t0 = time.perf_counter()
+        comps = eng.run()
+        wall = time.perf_counter() - t0
+        toks = {c.rid: c.tokens for c in comps[len(reqs):]}
+        tps = sum(c.generated for c in comps[len(reqs):]) / wall
+        return toks, tps, eng.mean_accepted()
+
+    rows, record = [], {}
+    flat_toks, flat_tps, flat_acc = run_engine(None)
+    rows.append((f"serve_tree.flat-k{TREE_K}", 1e6 / flat_tps,
+                 f"tps={flat_tps:.1f};mean_accepted={flat_acc:.3f}"))
+    record[f"flat-k{TREE_K}"] = dict(tokens_per_sec=round(flat_tps, 2),
+                                     mean_accepted=round(flat_acc, 4))
+    for name, branching in TREE_TEMPLATES.items():
+        toks, tps, acc = run_engine(TreeTemplate.from_branching(branching))
+        rows.append((f"serve_tree.{name}", 1e6 / tps,
+                     f"tps={tps:.1f};mean_accepted={acc:.3f}"))
+        record[name] = dict(tokens_per_sec=round(tps, 2),
+                            mean_accepted=round(acc, 4),
+                            branching=list(branching))
+        if all(b == 1 for b in branching):
+            # degenerate tree == flat-K, token for token
+            same = (set(toks) == set(flat_toks) and
+                    all(np.array_equal(toks[r], flat_toks[r]) for r in toks))
+            assert same, "degenerate chain diverged from the flat-K path"
+            record[name]["token_identical_to_flat"] = True
+        else:
+            assert acc > flat_acc, (
+                f"branching template {branching} did not beat flat-K mean "
+                f"accepted length ({acc:.3f} <= {flat_acc:.3f})")
+    common.update_bench_serve("tree", record)
+    emit(rows, "serve_tree", persist=False)
     return rows
 
 
 ALL = {"table1": table1, "table2": table2, "table3": table3,
        "table4": table4, "table5": table5, "table6": table6,
-       "fig6a": fig6a, "fig6b": fig6b, "serve": serve}
+       "fig6a": fig6a, "fig6b": fig6b, "serve": serve,
+       "serve_tree": serve_tree}

@@ -17,7 +17,6 @@ import sys
 import time
 
 import jax
-import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -124,18 +123,18 @@ def main():
 
         @jax.jit
         def estep(ep, state, tokens):
-            (l, m), g = jax.value_and_grad(
+            (loss, _), g = jax.value_and_grad(
                 lambda e: eagle_loss(e, tparams, tc, tokens),
                 has_aux=True)(ep)
             ep, state, _ = opt.update(g, state, ep)
-            return ep, state, l
+            return ep, state, loss
 
         t0 = time.time()
         last = None
         for i in range(args.pard_steps):
-            ep, state, l = estep(ep, state, jnp.asarray(next(stream)))
+            ep, state, loss = estep(ep, state, jnp.asarray(next(stream)))
             if (i + 1) % 200 == 0 or i == args.pard_steps - 1:
-                last = float(l)
+                last = float(loss)
                 print({"eagle_step": i + 1, "loss": round(last, 4)})
         meta = {"loss": last, "wall_s": round(time.time() - t0, 1)}
         checkpoint.save(eagle_path, ep, metadata=meta)

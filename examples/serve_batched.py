@@ -48,14 +48,15 @@ def main():
 
     corpus = MarkovCorpus(vocab_size=tc.vocab_size, seed=0, determinism=3.0)
     rng = np.random.default_rng(0)
-    reqs = [corpus.prompts(rng, 1, int(l))[0]
-            for l in rng.integers(8, 24, size=args.requests)]
+    reqs = [corpus.prompts(rng, 1, int(n_tok))[0]
+            for n_tok in rng.integers(8, 24, size=args.requests)]
 
     outputs = {}
     for mode, dparams in [("ar", dp), ("vsd", dp), ("pard", pp)]:
         eng = Engine(tp, tc, dparams, dc, mode=mode, k=8,
                      max_batch=args.max_batch, max_len=512)
-        rids = [eng.submit(r, args.max_new) for r in reqs]
+        for r in reqs:
+            eng.submit(r, args.max_new)
         t0 = time.perf_counter()
         comps = eng.run()
         wall = time.perf_counter() - t0

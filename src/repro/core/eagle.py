@@ -17,7 +17,6 @@ pass but K passes, unlike PARD's single pass.
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -109,7 +108,6 @@ class EagleDecoder:
         from .spec_decode import _row_take, _row_write
 
         def step(gen, n, done, tcache, ecache, feat_prev):
-            b = gen.shape[0]
             # ---- draft: K sequential head passes --------------------------
             # The head's KV cache persists across iterations: entries for
             # ACCEPTED positions were computed from committed context, so the

@@ -23,6 +23,15 @@ flight at inference time.
 VSD draft: the same window advances the committed tokens, then K-1 extra
 single-token AR calls — K draft forwards/iteration vs PARD's 1 (Eq. 3 vs 4).
 
+Tree drafting (``TreeTemplate``): instead of keeping only the per-depth
+argmax chain, the SAME single draft forward populates a static top-k
+candidate tree (top-b_d tokens at depth d), and verification runs one
+target forward over the packed tree with ancestor-mask attention
+(kernels/tree_attention.py, DESIGN.md §6). Greedy verification commits the
+longest root path matching the target argmax — still exactly lossless vs
+AR — and raises accepted tokens per target forward whenever the target's
+argmax lands in the draft's top-b_d but not its top-1.
+
 Greedy (temperature 0) verification is exactly lossless vs AR decoding;
 temperature > 0 uses Leviathan speculative sampling (accept with p/q,
 resample from the clipped residual).
@@ -30,16 +39,20 @@ resample from the clipped residual).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..models import forward, init_caches
-from ..models.config import SSM, ModelConfig, scan_plan
+from ..models.attention import TreeAttnInfo, paged_flat_index
+from ..models.config import (ATTN_GLOBAL, ATTN_LOCAL, ATTN_MLA, SSM,
+                             ModelConfig, scan_plan)
 
 Array = jax.Array
+
+_ATTN_MIXERS = (ATTN_GLOBAL, ATTN_LOCAL, ATTN_MLA)
 
 
 def _row_take(x: Array, idx: Array) -> Array:
@@ -85,6 +98,19 @@ def gather_ssm_states(cfg: ModelConfig, collected, accept_idx: Array):
     return out
 
 
+def _draft_window(gen, n, m, k, mask_id):
+    """[B, 2K] PARD draft window: new committed tokens + mask chain."""
+    i = jnp.arange(2 * k)[None, :]
+    idx = m[:, None] + i
+    a = (n - m)[:, None]                          # committed, unprocessed
+    tok = jnp.take_along_axis(gen, jnp.clip(idx, 0, gen.shape[1] - 1),
+                              axis=1)
+    is_real = i < a
+    is_mask = (i >= a) & (i < a + (k - 1))
+    tok = jnp.where(is_real, tok, jnp.where(is_mask, mask_id, 0))
+    return tok.astype(jnp.int32)
+
+
 def _has_ssm(cfg: ModelConfig) -> bool:
     plan = scan_plan(cfg)
     return any(s.mixer == SSM for s in plan.prefix + plan.period)
@@ -118,6 +144,134 @@ def speculative_accept(p_full, qprob, props, rng):
     commit_tok = jax.random.categorical(
         r_res, jnp.log(resid + 1e-30)).astype(jnp.int32)
     return a, accepted, commit_tok
+
+
+# ---------------------------------------------------------------------------
+# Candidate trees — static templates for tree-structured PARD drafting
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TreeTemplate:
+    """Static top-k candidate tree for PARD tree drafting (DESIGN.md §6).
+
+    Built from per-depth branching factors: every node at depth d-1 expands
+    into one child per top-k rank c < branching[d-1] of the draft's depth-d
+    proposal distribution. PARD's mask-chain draft yields ONE distribution
+    per depth (conditioning is on the mask chain, not the sampled branch),
+    so siblings across different parents share candidate tokens — but each
+    node needs its own slot because the target's verification logits DO
+    condition on the actual path.
+
+    Slot 0 is the root (the re-processed last committed token); nodes are
+    laid out breadth-first, so a node's parent always precedes it. The whole
+    window (1 + num_nodes slots) must fit a uint32 ancestor bitmask: <= 32.
+    """
+    branching: Tuple[int, ...]
+    parent: Any          # np [S] int32; parent[0] = -1
+    depth: Any           # np [S] int32; depth[0] = 0
+    choice: Any          # np [S] int32; top-k rank at the node's depth
+    anc: Any             # np [S] uint32 packed ancestor-or-self bitmask
+
+    @staticmethod
+    def from_branching(branching) -> "TreeTemplate":
+        branching = tuple(int(x) for x in branching)
+        assert branching and all(x >= 1 for x in branching), branching
+        parent, depth, choice = [-1], [0], [0]
+        prev, slot = [0], 1
+        for d, bd in enumerate(branching, start=1):
+            new = []
+            for p in prev:
+                for c in range(bd):
+                    parent.append(p)
+                    depth.append(d)
+                    choice.append(c)
+                    new.append(slot)
+                    slot += 1
+            prev = new
+        assert slot <= 32, (
+            f"tree template needs {slot} window slots but the packed "
+            f"ancestor bitmask holds 32 (shrink the branching factors)")
+        anc = [1]
+        for s in range(1, slot):
+            anc.append(anc[parent[s]] | (1 << s))
+        return TreeTemplate(
+            branching=branching,
+            parent=np.asarray(parent, np.int32),
+            depth=np.asarray(depth, np.int32),
+            choice=np.asarray(choice, np.int32),
+            anc=np.asarray(anc, np.uint32))
+
+    @staticmethod
+    def flat(k: int) -> "TreeTemplate":
+        """Degenerate single-branch chain — token-identical to the flat-K
+        path (asserted in tests and the serve_tree benchmark)."""
+        return TreeTemplate.from_branching((1,) * k)
+
+    @property
+    def num_slots(self) -> int:
+        return len(self.parent)          # 1 + num_nodes
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.parent) - 1
+
+    @property
+    def max_depth(self) -> int:
+        return len(self.branching)
+
+    @property
+    def is_chain(self) -> bool:
+        return all(b == 1 for b in self.branching)
+
+
+def compact_tree_caches(cfg: ModelConfig, caches, src_pos, dst_start, depth,
+                        tables, block_size):
+    """Copy the winning tree path's KV onto the committed positions.
+
+    A tree-verification forward writes the window's KV at per-node cache
+    slots ``win_start + s``; the accepted path's slots are generally
+    non-contiguous. Compaction makes the committed prefix contiguous again:
+    for d = 1..depth the entry at ``src_pos[:, d-1]`` is copied to position
+    ``dst_start + d - 1`` (rejected depths carry src == dst, an identity
+    copy; sources never precede their destination, and the gather completes
+    before the scatter). Losing branches' slots land beyond the new
+    committed count and are re-covered by the next window's ``cache_pos`` —
+    the same rollback invariant as the flat path (kv_pool I4 routes frozen
+    rows' copies to the garbage block).
+
+    Touches attention leaves only; SSM states cannot appear under a tree
+    target (positional rollback is a precondition, see _build_tree_step).
+    """
+    plan = scan_plan(cfg)
+    dst_pos = dst_start[:, None] + jnp.arange(depth, dtype=jnp.int32)[None]
+
+    def move_contig(leaf):           # [B, S, ...]
+        taken = jax.vmap(lambda row, i: row[i])(leaf, src_pos)
+        zeros = (0,) * (leaf.ndim - 2)
+        return jax.vmap(lambda row, tk, p: jax.lax.dynamic_update_slice(
+            row, tk, (p,) + zeros))(leaf, taken, dst_start)
+
+    def move_paged(leaf):            # [NB, bs, ...]
+        src = paged_flat_index(tables, src_pos, block_size).reshape(-1)
+        dst = paged_flat_index(tables, dst_pos, block_size).reshape(-1)
+        pf = leaf.reshape((-1,) + leaf.shape[2:])
+        pf = pf.at[dst].set(pf[src])
+        return pf.reshape(leaf.shape)
+
+    move = move_contig if tables is None else move_paged
+
+    def one(spec, entry, scanned):
+        if spec.mixer not in _ATTN_MIXERS:
+            return entry
+        fn = jax.vmap(move) if scanned else move
+        return jax.tree.map(fn, entry)
+
+    return {
+        "prefix": [one(s, caches["prefix"][i], False)
+                   for i, s in enumerate(plan.prefix)],
+        "scan": [one(s, caches["scan"][j], True)
+                 for j, s in enumerate(plan.period)],
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -208,9 +362,26 @@ class SpecDecoder:
     def __init__(self, target_params, target_cfg: ModelConfig,
                  draft_params=None, draft_cfg: ModelConfig = None, *,
                  k: int = 8, max_len: int = 2048, temperature: float = 0.0,
-                 enc_out=None, draft_enc_out=None, kv_block_size: int = 0):
+                 enc_out=None, draft_enc_out=None, kv_block_size: int = 0,
+                 tree: Optional[TreeTemplate] = None):
         self.tp, self.tc = target_params, target_cfg
         self.dp, self.dc = draft_params, draft_cfg
+        if tree is not None:
+            if not isinstance(tree, TreeTemplate):
+                tree = TreeTemplate.from_branching(tree)
+            if temperature != 0.0:
+                raise NotImplementedError(
+                    "tree verification is greedy-only; sampled tree "
+                    "acceptance is a ROADMAP follow-up")
+            if _has_ssm(target_cfg):
+                raise NotImplementedError(
+                    "tree verification relies on positional KV rollback; "
+                    "an SSM/hybrid target cannot roll back a packed tree "
+                    "window (DESIGN.md §6)")
+            # the draft window must produce one proposal distribution per
+            # tree depth: K is the template's depth, whatever was passed
+            k = tree.max_depth
+        self.tree = tree
         self.k = k
         self.max_len = max_len
         self.temperature = temperature
@@ -224,6 +395,14 @@ class SpecDecoder:
                 "speculative decoding requires a shared tokenizer/vocab"
         self._jit_cache: Dict[str, Any] = {}
 
+    @property
+    def window_slack(self) -> int:
+        """Positions a step may touch beyond the committed count: the 2K
+        draft mask window vs the verify window (K+1 flat, num_slots for a
+        tree), +2 slack. Sizes cache rows and paged allocations (I3)."""
+        verify = self.tree.num_slots if self.tree is not None else self.k + 1
+        return max(2 * self.k, verify) + 2
+
     # -- jitted primitives ------------------------------------------------
     def _fn(self, name, builder, donate=()):
         if name not in self._jit_cache:
@@ -231,11 +410,12 @@ class SpecDecoder:
         return self._jit_cache[name]
 
     def _target_forward(self, tokens, caches, cache_pos, tables=None,
-                        collect_ssm=False):
-        return forward(self.tp, self.tc, tokens, caches=caches,
-                       cache_pos=cache_pos, enc_out=self.enc_out,
-                       collect_ssm=collect_ssm, block_tables=tables,
-                       kv_block_size=self.kv_block_size)
+                        collect_ssm=False, positions=None, tree_info=None):
+        return forward(self.tp, self.tc, tokens, positions=positions,
+                       caches=caches, cache_pos=cache_pos,
+                       enc_out=self.enc_out, collect_ssm=collect_ssm,
+                       block_tables=tables, kv_block_size=self.kv_block_size,
+                       tree_info=tree_info)
 
     def _draft_forward(self, tokens, caches, cache_pos, tables=None,
                        collect_ssm=False):
@@ -301,6 +481,23 @@ class SpecDecoder:
         stats = SpecStats(max_new, max_new * b, 0, max_new, None, 0.0, 1.0)
         return tokens, stats
 
+    def _pard_depth_logits(self, gen, n, m, dcache, tables):
+        """ONE PARD draft forward (Eq. 7): proposal logits for every depth
+        1..K. Slot A-1 (the last real token) proposes depth 1, the K-1 mask
+        slots the rest. Returns (lg [B, K, V], new draft cache)."""
+        k, dc = self.k, self.dc
+        d_has_ssm = _has_ssm(dc)
+        tok = _draft_window(gen, n, m, k, dc.mask_token_id)
+        logits, dcache, _ = self._draft_forward(
+            tok, dcache, m, tables, collect_ssm=d_has_ssm)
+        if d_has_ssm:
+            # state after the last real token (input index A-1)
+            dcache = gather_ssm_states(dc, dcache, n - m - 1)
+        a = n - m
+        sl = (a - 1)[:, None] + jnp.arange(k)[None, :]
+        lg = jax.vmap(lambda row, s: row[s])(logits, sl)   # [B, K, V]
+        return lg, dcache
+
     # ------------------------------------------------------------- shared
     def _build_spec_step(self, mode: str):
         k = self.k
@@ -310,29 +507,8 @@ class SpecDecoder:
         d_has_ssm = _has_ssm(dc)
         temp = self.temperature
 
-        def draft_window(gen, n, m):
-            """[B, 2K] window of new committed tokens + masks."""
-            b = gen.shape[0]
-            i = jnp.arange(2 * k)[None, :]
-            idx = m[:, None] + i
-            a = (n - m)[:, None]                      # committed, unprocessed
-            tok = jnp.take_along_axis(gen, jnp.clip(idx, 0, gen.shape[1] - 1),
-                                      axis=1)
-            is_real = i < a
-            is_mask = (i >= a) & (i < a + (k - 1))
-            tok = jnp.where(is_real, tok, jnp.where(is_mask, mask_id, 0))
-            return tok.astype(jnp.int32)
-
         def propose_pard(gen, n, m, dcache, tables, rng):
-            tok = draft_window(gen, n, m)
-            logits, dcache, _ = self._draft_forward(
-                tok, dcache, m, tables, collect_ssm=d_has_ssm)
-            if d_has_ssm:
-                # state after the last real token (input index A-1)
-                dcache = gather_ssm_states(dc, dcache, n - m - 1)
-            a = n - m
-            sl = (a - 1)[:, None] + jnp.arange(k)[None, :]
-            lg = jax.vmap(lambda l, s: l[s])(logits, sl)   # [B, K, V]
+            lg, dcache = self._pard_depth_logits(gen, n, m, dcache, tables)
             if temp == 0.0:
                 props = jnp.argmax(lg, axis=-1).astype(jnp.int32)
                 qprob = None
@@ -344,7 +520,7 @@ class SpecDecoder:
 
         def propose_vsd(gen, n, m, dcache, tables, rng):
             # call 1: advance committed window, propose token 1
-            tok = draft_window(gen, n, m)[:, :k + 1]        # reals only window
+            tok = _draft_window(gen, n, m, k, mask_id)[:, :k + 1]  # reals only
             logits, dcache, _ = self._draft_forward(
                 tok, dcache, m, tables, collect_ssm=d_has_ssm)
             a = n - m
@@ -354,7 +530,7 @@ class SpecDecoder:
                 # iteration restarts from this snapshot.
                 dcache = gather_ssm_states(dc, dcache, a - 1)
             snapshot = dcache
-            lg_list = [jax.vmap(lambda l, i: l[i])(logits, a - 1)]  # [B, V]
+            lg_list = [jax.vmap(lambda row, i: row[i])(logits, a - 1)]
             props = []
             rngs = jax.random.split(rng, k)
             cur_pos = n
@@ -385,8 +561,7 @@ class SpecDecoder:
         def step(state: DecodeState, rng):
             gen, n, m, done = state.gen, state.n, state.m, state.done
             tcache, dcache, tables = state.tcache, state.dcache, state.tables
-            b = gen.shape[0]
-            rng, r1, r2, r3 = jax.random.split(rng, 4)
+            rng, r1, r2, _ = jax.random.split(rng, 4)
             props, qprob, dcache, n_draft = propose(gen, n, m, dcache,
                                                     tables, r1)
 
@@ -438,16 +613,127 @@ class SpecDecoder:
 
         return step
 
+    # --------------------------------------------------------------- tree
+    def _build_tree_step(self):
+        """One greedy tree-verification step (DESIGN.md §6).
+
+        Draft: ONE PARD forward (the flat mask window) yields one proposal
+        distribution per depth; the top-b_d tokens per depth populate the
+        static template. Verify: ONE target forward over the packed tree
+        with ancestor-mask attention, logical positions root+depth. Commit:
+        the longest root path whose node tokens each equal the target's
+        argmax at their parent slot — every committed token is the target
+        argmax given its committed prefix, so the output is exactly the AR
+        greedy sequence (losslessness, tested against generate_ar). Only
+        the winning path's KV survives: compact_tree_caches moves it onto
+        the committed positions; losing branches are re-covered by the next
+        window's cache_pos like flat-K rejects.
+        """
+        tree = self.tree
+        tc, dc = self.tc, self.dc
+        assert tree is not None and self.temperature == 0.0
+        d, s = tree.max_depth, tree.num_slots
+        depth_arr = jnp.asarray(tree.depth)                        # [S]
+        anc = jnp.asarray(tree.anc)                                # [S] u32
+        parent_idx = np.asarray(tree.parent[1:], np.int32)         # [N]
+        node_depth_onehot = jnp.asarray(
+            tree.depth[1:, None] == np.arange(1, d + 1)[None, :])  # [N, D]
+        node_slot = jnp.arange(1, s, dtype=jnp.int32)              # [N]
+
+        def step(state: DecodeState, rng):
+            del rng                                  # greedy-only
+            gen, n, m, done = state.gen, state.n, state.m, state.done
+            tcache, dcache, tables = state.tcache, state.dcache, state.tables
+            b = gen.shape[0]
+
+            # draft: depth distributions -> template tokens
+            lg, dcache = self._pard_depth_logits(gen, n, m, dcache, tables)
+            toks = []
+            for di, bd in enumerate(tree.branching):
+                if bd == 1:      # match the flat path's argmax exactly
+                    toks.append(jnp.argmax(lg[:, di], axis=-1)[:, None])
+                else:
+                    toks.append(jax.lax.top_k(lg[:, di], bd)[1])
+            toks = [t.astype(jnp.int32) for t in toks]
+            props = jnp.concatenate(
+                [toks[tree.depth[si] - 1][:, tree.choice[si]:tree.choice[si] + 1]
+                 for si in range(1, s)], axis=1)                   # [B, N]
+
+            # verify: one target forward over the packed tree
+            last = jnp.take_along_axis(gen, (n - 1)[:, None], axis=1)
+            vin = jnp.concatenate([last.astype(jnp.int32), props], axis=1)
+            positions = (n - 1)[:, None] + depth_arr[None, :]
+            tinfo = TreeAttnInfo(
+                win_start=n - 1, anc=jnp.broadcast_to(anc[None, :], (b, s)))
+            logits, tcache_new, _ = self._target_forward(
+                vin, tcache, n - 1, tables, positions=positions,
+                tree_info=tinfo)
+            tgt = jnp.argmax(logits, axis=-1).astype(jnp.int32)    # [B, S]
+
+            # longest accepted path: a node survives iff its token matches
+            # the target argmax at its parent AND its parent survives.
+            # Sibling tokens are distinct (top-k ranks), so at most one
+            # node per depth survives.
+            matched = props == tgt[:, parent_idx]                  # [B, N]
+            ok = [jnp.ones((b,), bool)]
+            for si in range(1, s):
+                ok.append(matched[:, si - 1] & ok[tree.parent[si]])
+            path_ok = jnp.stack(ok, axis=1)                        # [B, S]
+            a = jnp.sum(path_ok[:, 1:], axis=1).astype(jnp.int32)  # [B]
+            best_slot = jnp.max(
+                jnp.where(path_ok, jnp.arange(s)[None, :], 0), axis=1)
+            commit_tok = _row_take(tgt, best_slot)     # correction / bonus
+
+            # depth-ordered accepted tokens and their source slots
+            pick = path_ok[:, 1:, None] & node_depth_onehot[None]  # [B,N,D]
+            tok_depth = jnp.sum(pick * props[:, :, None], axis=1)  # [B, D]
+            src_slot = jnp.sum(pick * node_slot[None, :, None], axis=1)
+            dflt = jnp.arange(1, d + 1, dtype=jnp.int32)[None, :]
+            # rejected depths and frozen rows: identity copy (src == dst)
+            src_slot = jnp.where((src_slot > 0) & ~done[:, None],
+                                 src_slot, dflt)
+
+            # committed tokens this iteration: path d_1..d_a, then commit_tok
+            j = jnp.arange(d + 1)[None, :]
+            tok_ext = jnp.concatenate([tok_depth, tok_depth[:, -1:]], axis=1)
+            vec = jnp.where(j < a[:, None], tok_ext,
+                            jnp.where(j == a[:, None], commit_tok[:, None], 0))
+            old = jax.vmap(lambda g, p: jax.lax.dynamic_slice(
+                g, (p,), (d + 1,)))(gen, n)
+            vec = jnp.where(done[:, None], old, vec)
+            gen = _row_write(gen, vec.astype(gen.dtype), n)
+
+            # only the winning path's KV survives at committed positions
+            src_pos = (n - 1)[:, None] + src_slot                  # [B, D]
+            tcache_new = compact_tree_caches(
+                tc, tcache_new, src_pos, n, d, tables, self.kv_block_size)
+
+            n_commit = jnp.where(done, 0, a + 1)
+            new_m = jnp.where(done, m, n)
+            new_n = n + n_commit
+            hist = jnp.sum(
+                jnp.where(done[:, None], 0,
+                          (a[:, None] > jnp.arange(d)[None, :])
+                          .astype(jnp.int32)), axis=0)             # [D]
+            new_state = dataclasses.replace(
+                state, gen=gen, n=new_n, m=new_m, tcache=tcache_new,
+                dcache=dcache)
+            return new_state, jnp.where(done, 0, a), hist, 1
+
+        return step
+
     def generate_spec(self, prompt: Array, max_new: int, mode: str = "pard",
                       seed: int = 0):
         assert self.dp is not None, "spec decoding requires a draft model"
+        if self.tree is not None:
+            assert mode == "pard", "tree templates require mode='pard'"
         b, p = prompt.shape
         k = self.k
         # Both prefills stop at prompt[:-1]: the verify window re-processes
         # x_{P-1} (an idempotent KV rewrite for attention — but SSM state
         # must NOT see it twice, so it is excluded here).
         assert p >= 2, "prompts must have at least 2 tokens"
-        L = p + max_new + 2 * k + 2   # room for the final (K+1)-slot write
+        L = p + max_new + self.window_slack   # room for the final window
         state = self.init_state(prompt, L)
 
         prefill_t = self._fn("sp_prefill_t", lambda t, c: prefill_row(
@@ -457,8 +743,12 @@ class SpecDecoder:
             donate=(1,))
         # donate the whole state: the steady state then updates gen + both
         # cache pools in place (no per-iteration multi-MB buffer copies)
-        step = self._fn(f"spec_step_{mode}_{self.temperature}",
-                        self._build_spec_step(mode), donate=(0,))
+        if self.tree is not None:
+            step = self._fn(f"tree_step_{self.tree.branching}",
+                            self._build_tree_step(), donate=(0,))
+        else:
+            step = self._fn(f"spec_step_{mode}_{self.temperature}",
+                            self._build_spec_step(mode), donate=(0,))
 
         state = dataclasses.replace(
             state, tcache=prefill_t(prompt[:, :-1], state.tcache),

@@ -14,7 +14,7 @@ sharded data loader: infinite iterator, per-host sharding hook, fixed shapes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

@@ -76,9 +76,9 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *, scale, causal,
 
     @pl.when(ki == nk - 1)
     def _final():
-        l = l_s[...]
-        l = jnp.where(l == 0.0, 1.0, l)               # fully-masked rows -> 0
-        o_ref[0, :, 0, :] = (acc_s[...] / l).astype(o_ref.dtype)
+        denom = l_s[...]
+        denom = jnp.where(denom == 0.0, 1.0, denom)   # fully-masked rows -> 0
+        o_ref[0, :, 0, :] = (acc_s[...] / denom).astype(o_ref.dtype)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,

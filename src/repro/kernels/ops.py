@@ -10,12 +10,12 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import decode_attention as _dec
 from . import flash_attention as _fa
 from . import pard_attention as _pard
 from . import ssd as _ssd
+from . import tree_attention as _tree
 
 
 def _interpret(flag):
@@ -87,6 +87,43 @@ def decode_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
                                        kv_len, q_pos, window=window,
                                        softcap=softcap, scale=scale,
                                        interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "softcap", "scale", "block_k", "interpret"))
+def tree_attention(q, k, v, kv_len, q_pos, win_start, anc, *, window=0,
+                   softcap=0.0, scale=None, block_k=256, interpret=None):
+    """Tree-verification attention against a contiguous cache. ``anc`` is
+    the [B, Tq] uint32 packed ancestor bitmask (bit j = window slot j
+    visible); ``win_start`` the cache index of window slot 0."""
+    interpret = _interpret(interpret)
+    d = q.shape[-1]
+    block_k = min(block_k, max(8, 1 << (k.shape[1] - 1).bit_length()))
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    k, _ = _pad_axis(k, 1, block_k)
+    v, _ = _pad_axis(v, 1, block_k)
+    return _tree.tree_attention(q, k, v, kv_len, q_pos, win_start, anc,
+                                window=window, softcap=softcap, scale=scale,
+                                block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "softcap", "scale", "interpret"))
+def tree_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
+                         win_start, anc, *, window=0, softcap=0.0, scale=None,
+                         interpret=None):
+    """Paged-pool tree verification: k/v are [NB, block, Hkv, D] pools
+    indirected by ``block_tables`` [B, MBS]; the pool's block size IS the
+    kernel's kv block (no padding), exactly like decode_attention_paged."""
+    interpret = _interpret(interpret)
+    d = q.shape[-1]
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    return _tree.tree_attention_paged(q, k_pages, v_pages, block_tables,
+                                      kv_len, q_pos, win_start, anc,
+                                      window=window, softcap=softcap,
+                                      scale=scale, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=(

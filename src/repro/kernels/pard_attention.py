@@ -66,8 +66,8 @@ def _kernel(qseg_ref, qbase_ref, kseg_ref, kbase_ref, q_ref, k_ref, v_ref,
 
     @pl.when(ki == nk - 1)
     def _final():
-        l = jnp.where(l_s[...] == 0.0, 1.0, l_s[...])
-        o_ref[0, :, 0, :] = (acc_s[...] / l).astype(o_ref.dtype)
+        denom = jnp.where(l_s[...] == 0.0, 1.0, l_s[...])
+        o_ref[0, :, 0, :] = (acc_s[...] / denom).astype(o_ref.dtype)
 
 
 def pard_attention(q, k, v, segment, base, *, scale=None, softcap=0.0,

@@ -7,15 +7,11 @@ jnp) so the kernels are validated against exactly what the model computes.
 """
 from __future__ import annotations
 
-import math
-from typing import Optional
-
-import jax
 import jax.numpy as jnp
 
-from ..models.attention import (NEG_INF, PardMaskInfo, attend, gather_pages,
-                                pard_mask)
-from ..models.ssm import ssd_scan_chunked, ssd_scan_ref
+from ..models.attention import (PardMaskInfo, TreeAttnInfo, attend,
+                                gather_pages)
+from ..models.ssm import ssd_scan_ref
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
@@ -54,6 +50,37 @@ def decode_attention_paged_ref(q, k_pages, v_pages, block_tables, kv_len,
     v = gather_pages(v_pages, block_tables)
     return decode_attention_ref(q, k, v, kv_len, q_pos, window=window,
                                 softcap=softcap, scale=scale)
+
+
+def tree_attention_ref(q, k, v, kv_len, q_pos, win_start, anc, *, window=0,
+                       softcap=0.0, scale=None):
+    """Tree-verification attention: the packed candidate tree window against
+    a long cache (DESIGN.md §6). Masking comes from models.attention's
+    TreeAttnInfo (packed ancestor bitmask inside the window, plain context
+    visibility before it) so the kernel validates against exactly what the
+    model computes.
+
+    q: [B,Tq,Hq,D]; k,v: [B,S,Hkv,D]; kv_len: [B]; q_pos: [B,Tq] logical
+    positions; win_start: [B] cache index of window slot 0; anc: [B,Tq]
+    uint32 ancestor bitmasks.
+    """
+    b = q.shape[0]
+    s = k.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    info = TreeAttnInfo(jnp.asarray(win_start), jnp.asarray(anc))
+    return attend(q, k, v, q_pos, kv_pos, kv_len, causal=True, window=window,
+                  attn_softcap=softcap, scale=scale, tree_info=info)
+
+
+def tree_attention_paged_ref(q, k_pages, v_pages, block_tables, kv_len,
+                             q_pos, win_start, anc, *, window=0, softcap=0.0,
+                             scale=None):
+    """Paged-pool tree-verification oracle: gather each row's blocks into a
+    contiguous view and defer to the contiguous reference."""
+    k = gather_pages(k_pages, block_tables)
+    v = gather_pages(v_pages, block_tables)
+    return tree_attention_ref(q, k, v, kv_len, q_pos, win_start, anc,
+                              window=window, softcap=softcap, scale=scale)
 
 
 def pard_attention_ref(q, k, v, segment, base, *, scale=None, softcap=0.0):

@@ -42,9 +42,9 @@ def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, s0_ref, y_ref, sf_ref, s_s,
 
     dtA = dt * A                                       # [L]
     cum = jnp.cumsum(dtA)                              # [L]
-    l = x.shape[0]
-    i = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
-    j = jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    seq = x.shape[0]
+    i = jax.lax.broadcasted_iota(jnp.int32, (seq, seq), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (seq, seq), 1)
     w = jnp.where(i >= j, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
     cb = jnp.dot(C, B.T, preferred_element_type=jnp.float32)   # [L, L]
     gate = w * cb

@@ -1,35 +1,30 @@
-"""Speculative-verify / decode attention — Pallas TPU kernel.
+"""Tree-verification attention — Pallas TPU kernel.
 
-The PARD serving hot path: a small query block (1 AR token or the K+1
-verification window) attends to a long KV cache. This is the kernel the
-paper's Table 6 bandwidth argument lives in: per iteration the draft+target
-weights stream once, and the KV cache stream dominates — so the kernel's job
-is to keep the cache read perfectly sequential and do the online softmax in
-VMEM.
+Speculative *tree* verification (DESIGN.md §6): one target forward scores a
+packed candidate tree of draft tokens instead of a single chain. The query
+block holds the verify window ``[root | tree nodes]`` (root = re-processed
+last committed token); its KV is written at consecutive cache slots
+``win_start .. win_start + Tq - 1`` even though nodes on different branches
+share logical (RoPE) positions. Plain causal masking is therefore wrong
+inside the window — node i may only attend its ancestors — so the kernel
+carries a packed per-query ancestor bitmask alongside the causal rule:
 
-Grid: (batch, kv_head, num_kv_blocks). ALL queries for one kv head — the
-(K+1) positions x G grouped q heads — are flattened into one [Tq*G, D] tile
-that stays resident in VMEM across the whole cache sweep (Tq*G <= a few
-hundred rows), while K/V blocks stream through. Per-row validity comes from
-(kv_len, q_pos) scalars, prefetched to SMEM-like VMEM blocks.
+  * cache slot  < win_start             -> committed context: always allowed
+    (optionally sliding-window limited against the query's logical position);
+  * cache slot == win_start + j (j<Tq)  -> allowed iff bit j of ``anc[row]``
+    is set (bit 0 = root; a node's mask is its parent's mask | its own bit);
+  * everything is bounded by ``kv_index < kv_len`` as usual.
 
-Blocks past kv_len are skipped entirely (pl.when on the block index), so the
-swept bytes scale with the *actual* cache fill, not the allocated max_len.
+Window sizes are <= 32 slots, so one uint32 bitmask per query row packs the
+whole tree. Ancestors sit at most ``max_depth`` logical positions behind the
+query, far inside any realistic sliding window, so the window test applies
+to context keys only.
 
-Two cache layouts share ONE kernel body:
-
-  * contiguous — k/v are [B, S, Hkv, D]; grid step ki streams block ki of
-    row b's buffer;
-  * paged — k/v are a pool of fixed-size blocks [NB, block, Hkv, D] plus a
-    per-row block table [B, MBS]. The table is scalar-prefetched
-    (PrefetchScalarGridSpec) so the BlockSpec index_map can resolve the
-    indirection *before* the DMA: grid step ki streams pool block
-    table[b, ki], which holds row b's absolute positions
-    [ki*block, (ki+1)*block). Unallocated entries point at the reserved
-    garbage block 0 and are skipped by the kv_len guard anyway.
-
-The kernel's masking logic is identical in both cases because a sequence
-block index ki maps to the same absolute position range either way.
+Like kernels/decode_attention.py, ONE kernel body serves both cache layouts:
+contiguous ``[B, S, Hkv, D]`` rows, and the block-paged pool where the
+scalar-prefetched block table resolves the pool indirection in the BlockSpec
+index_map before the DMA. Blocks past ``kv_len`` are skipped, so swept bytes
+track the actual cache fill.
 """
 from __future__ import annotations
 
@@ -43,8 +38,8 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(qpos_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s,
-            *, scale, window, softcap, block_k, tq, g):
+def _kernel(qpos_ref, kvlen_ref, winstart_ref, anc_ref, q_ref, k_ref, v_ref,
+            o_ref, m_s, l_s, acc_s, *, scale, window, softcap, block_k, tq, g):
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -68,14 +63,21 @@ def _kernel(qpos_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s,
         if softcap:
             s = jnp.tanh(s / softcap) * softcap
 
-        # rows are (q position i, group member): validity depends only on i
-        qp = qpos_ref[0, :]                            # [tq]
+        # rows are (window slot i, group member): the mask depends only on i
+        qp = qpos_ref[0, :]                            # [tq] logical q pos
         qp_rows = jnp.repeat(qp, g)[:, None]           # [tq*g, 1] — static
+        anc_rows = jnp.repeat(anc_ref[0, :], g)[:, None]  # [tq*g, 1] uint32
         k_pos = k_start + jax.lax.broadcasted_iota(
             jnp.int32, (tq * g, block_k), 1)
-        mask = (k_pos < kv_len) & (k_pos <= qp_rows)
+        ws = winstart_ref[0]
+        ctx = k_pos < ws                               # committed context
         if window:
-            mask &= k_pos > qp_rows - window
+            ctx &= k_pos > qp_rows - window
+        j = k_pos - ws                                 # window slot index
+        in_win = (j >= 0) & (j < tq)
+        bit = (anc_rows >> jnp.clip(j, 0, tq - 1).astype(jnp.uint32)
+               ) & jnp.uint32(1)
+        mask = (k_pos < kv_len) & (ctx | (in_win & (bit == 1)))
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_s[...]
@@ -94,17 +96,18 @@ def _kernel(qpos_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s,
             tq, g * acc_s.shape[-1]).astype(o_ref.dtype)
 
 
-def decode_attention(q, k, v, kv_len, q_pos, *, window=0, softcap=0.0,
-                     scale=None, block_k=256, interpret=False):
-    """q: [B, Tq, Hq, D] (Tq small); k, v: [B, S, Hkv, D];
-    kv_len: [B] int32 valid cache entries; q_pos: [B, Tq] absolute."""
+def tree_attention(q, k, v, kv_len, q_pos, win_start, anc, *, window=0,
+                   softcap=0.0, scale=None, block_k=256, interpret=False):
+    """q: [B, Tq, Hq, D] — the packed verify window; k, v: [B, S, Hkv, D];
+    kv_len: [B]; q_pos: [B, Tq] logical positions (root pos + depth);
+    win_start: [B] cache index of window slot 0; anc: [B, Tq] uint32
+    ancestor bitmasks (bit j = window slot j visible)."""
     b, tq, hq, d = q.shape
     s_len, hkv = k.shape[1], k.shape[2]
     g = hq // hkv
     if scale is None:
         scale = 1.0 / (d ** 0.5)
 
-    # group q heads by their kv head: [B, Tq, Hkv, G, D]
     qg = q.reshape(b, tq, hkv, g, d)
     grid = (b, hkv, pl.cdiv(s_len, block_k))
 
@@ -117,6 +120,8 @@ def decode_attention(q, k, v, kv_len, q_pos, *, window=0, softcap=0.0,
         in_specs=[
             pl.BlockSpec((1, tq), lambda bi, h, ki: (bi, 0)),       # q_pos
             pl.BlockSpec((1,), lambda bi, h, ki: (bi,)),            # kv_len
+            pl.BlockSpec((1,), lambda bi, h, ki: (bi,)),            # win_start
+            pl.BlockSpec((1, tq), lambda bi, h, ki: (bi, 0)),       # anc
             pl.BlockSpec((1, tq, 1, g, d),
                          lambda bi, h, ki: (bi, 0, h, 0, 0)),       # q
             pl.BlockSpec((1, block_k, 1, d),
@@ -133,26 +138,28 @@ def decode_attention(q, k, v, kv_len, q_pos, *, window=0, softcap=0.0,
             pltpu.VMEM((tq * g, d), jnp.float32),
         ],
         interpret=interpret,
-    )(q_pos.astype(jnp.int32), kv_len.astype(jnp.int32), qg, k, v)
+    )(q_pos.astype(jnp.int32), kv_len.astype(jnp.int32),
+      win_start.astype(jnp.int32), anc.astype(jnp.uint32), qg, k, v)
     return out.reshape(b, tq, hq, d)
 
 
-def _paged_kernel(bt_ref, qpos_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_s, l_s, acc_s, **kw):
+def _paged_kernel(bt_ref, qpos_ref, kvlen_ref, winstart_ref, anc_ref, q_ref,
+                  k_ref, v_ref, o_ref, m_s, l_s, acc_s, **kw):
     # bt_ref (the scalar-prefetched block table) is consumed only by the
     # BlockSpec index_maps; the compute body is the contiguous kernel's.
-    _kernel(qpos_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s,
-            **kw)
+    _kernel(qpos_ref, kvlen_ref, winstart_ref, anc_ref, q_ref, k_ref, v_ref,
+            o_ref, m_s, l_s, acc_s, **kw)
 
 
-def decode_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
-                           *, window=0, softcap=0.0, scale=None,
-                           interpret=False):
-    """Paged-pool decode/verify attention.
+def tree_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
+                         win_start, anc, *, window=0, softcap=0.0, scale=None,
+                         interpret=False):
+    """Paged-pool tree-verification attention.
 
     q: [B, Tq, Hq, D]; k_pages, v_pages: [NB, block, Hkv, D] shared pools;
     block_tables: [B, MBS] int32 (block 0 = reserved garbage block);
-    kv_len: [B] int32 valid entries; q_pos: [B, Tq] absolute positions.
+    kv_len: [B]; q_pos: [B, Tq] logical positions; win_start: [B];
+    anc: [B, Tq] uint32 ancestor bitmasks.
     """
     b, tq, hq, d = q.shape
     block, hkv = k_pages.shape[1], k_pages.shape[2]
@@ -171,6 +178,8 @@ def decode_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
         in_specs=[
             pl.BlockSpec((1, tq), lambda bi, h, ki, bt: (bi, 0)),   # q_pos
             pl.BlockSpec((1,), lambda bi, h, ki, bt: (bi,)),        # kv_len
+            pl.BlockSpec((1,), lambda bi, h, ki, bt: (bi,)),        # win_start
+            pl.BlockSpec((1, tq), lambda bi, h, ki, bt: (bi, 0)),   # anc
             pl.BlockSpec((1, tq, 1, g, d),
                          lambda bi, h, ki, bt: (bi, 0, h, 0, 0)),   # q
             pl.BlockSpec((1, block, 1, d),
@@ -192,5 +201,6 @@ def decode_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
         out_shape=jax.ShapeDtypeStruct((b, tq, hkv, g * d), q.dtype),
         interpret=interpret,
     )(block_tables.astype(jnp.int32), q_pos.astype(jnp.int32),
-      kv_len.astype(jnp.int32), qg, k_pages, v_pages)
+      kv_len.astype(jnp.int32), win_start.astype(jnp.int32),
+      anc.astype(jnp.uint32), qg, k_pages, v_pages)
     return out.reshape(b, tq, hq, d)

@@ -18,7 +18,6 @@ Usage:
   python -m repro.launch.dryrun --all --both-meshes --out benchmarks/results
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback
@@ -31,11 +30,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import ASSIGNED, get_config
 from repro.launch import roofline
 from repro.launch.mesh import make_production_mesh
-from repro.launch.steps import (PARD_K, SHAPES, cache_shapes, input_specs,
-                                make_decode_step, make_prefill_step,
-                                make_train_step, make_verify_step,
-                                opt_state_shapes, param_shapes)
-from repro.sharding.specs import cache_specs, data_spec, param_specs, to_named
+from repro.launch.steps import (SHAPES, input_specs, make_decode_step,
+                                make_prefill_step, make_train_step,
+                                make_verify_step, opt_state_shapes,
+                                param_shapes)
+from repro.sharding.specs import cache_specs, data_spec, param_specs
 from repro.training.optimizer import AdamW
 
 # long_500k policy (DESIGN.md §4): runs natively for SSM/hybrid; gemma2 runs

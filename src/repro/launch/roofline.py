@@ -21,7 +21,6 @@ from __future__ import annotations
 import re
 from typing import Any, Dict
 
-from ..configs import get_config
 from ..models.config import MLP_MOE, ModelConfig, layer_plan
 from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 

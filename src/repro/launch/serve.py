@@ -15,6 +15,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.spec_decode import TreeTemplate
 from repro.data.pipeline import MarkovCorpus
 from repro.models import init_params
 from repro.serving.engine import Engine
@@ -28,6 +29,10 @@ def main():
     ap.add_argument("--target-ckpt", default=None)
     ap.add_argument("--draft-ckpt", default=None)
     ap.add_argument("--mode", default="pard", choices=["ar", "vsd", "pard"])
+    ap.add_argument("--tree", default=None, metavar="B1,B2,...",
+                    help="tree-structured PARD drafting: per-depth branching "
+                         "factors of the candidate tree (e.g. 2,2,2,1); "
+                         "overrides --k with the tree depth")
     ap.add_argument("--k", type=int, default=8)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=48)
@@ -60,11 +65,17 @@ def main():
         if args.draft_ckpt:
             dp = checkpoint.restore(args.draft_ckpt, dp)
 
+    tree = None
+    if args.tree is not None:
+        assert args.mode == "pard", "--tree requires --mode pard"
+        tree = TreeTemplate.from_branching(
+            int(x) for x in args.tree.split(","))
+
     eng = Engine(tp, tc, dp, dc, mode=args.mode, k=args.k,
                  max_batch=args.max_batch, max_len=args.max_len,
                  temperature=args.temperature, seed=args.seed,
                  kv_layout=args.kv_layout, kv_block_size=args.kv_block_size,
-                 kv_num_blocks=args.kv_num_blocks)
+                 kv_num_blocks=args.kv_num_blocks, tree=tree)
 
     corpus = MarkovCorpus(vocab_size=tc.vocab_size, seed=0, determinism=2.0)
     rng = np.random.default_rng(args.seed)
@@ -75,9 +86,12 @@ def main():
     wall = time.perf_counter() - t0
 
     total = sum(c.generated for c in comps)
-    print(f"\nmode={args.mode} requests={len(comps)} "
+    label = args.mode if tree is None else \
+        f"{args.mode}[tree {args.tree}]"
+    print(f"\nmode={label} requests={len(comps)} "
           f"generated={total} tokens wall={wall:.2f}s "
-          f"throughput={total / wall:.1f} tok/s")
+          f"throughput={total / wall:.1f} tok/s "
+          f"mean_accepted={eng.mean_accepted():.2f}")
     lats = sorted(c.wall_done - c.wall_submitted for c in comps)
     print(f"latency p50={lats[len(lats) // 2]:.2f}s p max={lats[-1]:.2f}s")
     print(f"kv layout={args.kv_layout} "

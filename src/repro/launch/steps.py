@@ -14,7 +14,7 @@ Every input is a ShapeDtypeStruct (``input_specs``) — nothing allocates.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -9,11 +9,8 @@ device(s). ``--mesh data,model`` shards over the host mesh when more than
 one device is available.
 """
 import argparse
-import os
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config

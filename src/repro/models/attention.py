@@ -26,8 +26,7 @@ because validity is still ``kv_index < kv_len``.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -76,6 +75,43 @@ class PardMaskInfo(NamedTuple):
     base: Array     # [B, T] int32
 
 
+class TreeAttnInfo(NamedTuple):
+    """Packed candidate-tree metadata for speculative tree verification
+    (DESIGN.md §6). The verify window's KV occupies consecutive cache slots
+    ``win_start .. win_start + Tq - 1`` even though sibling branches share
+    logical positions, so within-window visibility is an ancestor relation,
+    not a positional one.
+
+    win_start: [B] int32 — cache index of window slot 0 (the re-processed
+               last committed token; == the verify forward's ``cache_pos``).
+               Cache entries below it are committed context, always visible.
+    anc:       [B, Tq] uint32 — per query slot s, bit j set iff window slot
+               j is an ancestor-or-self of s (bit 0 = the root). Windows are
+               <= 32 slots, so one uint32 packs the whole tree.
+    """
+    win_start: Array
+    anc: Array
+
+
+def tree_allowed(q_pos, kv_pos, tree_info: TreeAttnInfo, window=0):
+    """Boolean [B, Tq, Tk] visibility under tree verification. Context keys
+    (cache index < win_start) obey the optional sliding window against the
+    query's *logical* position; window keys obey the ancestor bitmask
+    (ancestors are <= max_depth logical positions back — inside any
+    realistic sliding window, so the window test applies to context only)."""
+    tq = q_pos.shape[1]
+    ws = tree_info.win_start.astype(jnp.int32)[:, None, None]    # [B,1,1]
+    kvp = kv_pos[:, None, :]                                     # [B,1,Tk]
+    ctx = kvp < ws
+    if window:
+        ctx &= kvp > (q_pos[:, :, None] - window)
+    j = kvp - ws
+    in_win = (j >= 0) & (j < tq)
+    bits = (tree_info.anc.astype(jnp.uint32)[:, :, None]
+            >> jnp.clip(j, 0, tq - 1).astype(jnp.uint32)) & jnp.uint32(1)
+    return ctx | (in_win & (bits == 1))
+
+
 def pard_mask(q_seg, q_base, k_seg, k_base):
     """Boolean [.., Tq, Tk] PARD training mask from metadata (broadcasts)."""
     qs, qb = q_seg[..., :, None], q_base[..., :, None]
@@ -88,7 +124,8 @@ def pard_mask(q_seg, q_base, k_seg, k_base):
 
 
 def attend(q, k, v, q_pos, kv_pos, kv_len, *, causal=True, window=0,
-           attn_softcap=0.0, scale=None, mask_info=None, kv_mask_info=None):
+           attn_softcap=0.0, scale=None, mask_info=None, kv_mask_info=None,
+           tree_info=None):
     """Masked multi-head attention core (pure jnp reference path).
 
     q:      [B, Tq, Hq, Dk]
@@ -96,6 +133,9 @@ def attend(q, k, v, q_pos, kv_pos, kv_len, *, causal=True, window=0,
     q_pos:  [B, Tq] absolute positions of queries
     kv_pos: [B, Tk] absolute positions of keys
     kv_len: [B] or scalar — number of valid cache entries (Tk used)
+    tree_info: optional TreeAttnInfo — tree-verification masking (ancestor
+            bitmask inside the window, plain context visibility before it)
+            replacing the causal rule for the speculative verify window
     """
     b, tq, hq, dk = q.shape
     hkv = k.shape[2]
@@ -103,6 +143,13 @@ def attend(q, k, v, q_pos, kv_pos, kv_len, *, causal=True, window=0,
     if scale is None:
         scale = 1.0 / math.sqrt(dk)
 
+    if _pallas_ok(q, k, mask_info, scale) and tree_info is not None:
+        from ..kernels import ops
+        kv_len_arr = jnp.broadcast_to(jnp.asarray(kv_len), (b,)).astype(jnp.int32)
+        return ops.tree_attention(q, k, v, kv_len_arr, q_pos,
+                                  tree_info.win_start, tree_info.anc,
+                                  window=window, softcap=attn_softcap,
+                                  scale=scale)
     if _pallas_ok(q, k, mask_info, scale) and causal:
         from ..kernels import ops
         kv_len_arr = jnp.broadcast_to(jnp.asarray(kv_len), (b,)).astype(jnp.int32)
@@ -123,6 +170,8 @@ def attend(q, k, v, q_pos, kv_pos, kv_len, *, causal=True, window=0,
         allowed = pard_mask(mask_info.segment, mask_info.base,
                             (kv_mask_info or mask_info).segment,
                             (kv_mask_info or mask_info).base)      # [B,Tq,Tk]
+    elif tree_info is not None:
+        allowed = tree_allowed(q_pos, kv_pos, tree_info, window=window)
     else:
         allowed = jnp.ones((b, tq, k.shape[1]), bool)
         if causal:
@@ -196,17 +245,23 @@ def write_cache_paged(pages, new, cache_pos, block_tables, block_size):
     block 0, whose contents are never attended.
     """
     b, t = new.shape[0], new.shape[1]
-    bs = block_size
-    pos = cache_pos[:, None] + jnp.arange(t)[None, :]            # [B, T]
-    ent = pos // bs
+    flat = paged_flat_index(block_tables, cache_pos[:, None]
+                            + jnp.arange(t)[None, :], block_size).reshape(-1)
+    pf = pages.reshape((-1,) + pages.shape[2:])
+    pf = pf.at[flat].set(new.reshape((-1,) + new.shape[2:]).astype(pages.dtype))
+    return pf.reshape(pages.shape)
+
+
+def paged_flat_index(block_tables, pos, block_size):
+    """Map absolute positions [B, T] to flat pool-entry indices through the
+    per-row block tables. Positions past a row's table resolve to the
+    reserved garbage block 0 (never attended: reads are bounded by kv_len)."""
+    ent = pos // block_size
     mbs = block_tables.shape[1]
     blk = jnp.take_along_axis(block_tables, jnp.clip(ent, 0, mbs - 1),
                               axis=1)                            # [B, T]
     blk = jnp.where(ent >= mbs, 0, blk)      # past the table -> garbage block
-    flat = (blk * bs + pos % bs).reshape(-1)
-    pf = pages.reshape((-1,) + pages.shape[2:])
-    pf = pf.at[flat].set(new.reshape((-1,) + new.shape[2:]).astype(pages.dtype))
-    return pf.reshape(pages.shape)
+    return blk * block_size + pos % block_size
 
 
 def gather_pages(pages, block_tables):
@@ -230,7 +285,8 @@ _PAGED_KERNEL_MAX_TQ = 32
 
 
 def _paged_attend(q, k_pages, v_pages, block_tables, q_pos, kv_len, *,
-                  causal=True, window=0, attn_softcap=0.0, scale=None):
+                  causal=True, window=0, attn_softcap=0.0, scale=None,
+                  tree_info=None):
     """Attention against a block-paged KV pool.
 
     Uses the Pallas paged decode kernel for small query windows on the
@@ -248,6 +304,11 @@ def _paged_attend(q, k_pages, v_pages, block_tables, q_pos, kv_len, *,
             and tq <= _PAGED_KERNEL_MAX_TQ):
         from ..kernels import ops
         kv_len_arr = jnp.broadcast_to(jnp.asarray(kv_len), (b,)).astype(jnp.int32)
+        if tree_info is not None:
+            return ops.tree_attention_paged(
+                q, k_pages, v_pages, block_tables, kv_len_arr, q_pos,
+                tree_info.win_start, tree_info.anc, window=window,
+                softcap=attn_softcap, scale=scale)
         return ops.decode_attention_paged(
             q, k_pages, v_pages, block_tables, kv_len_arr, q_pos,
             window=window, softcap=attn_softcap, scale=scale)
@@ -256,12 +317,13 @@ def _paged_attend(q, k_pages, v_pages, block_tables, q_pos, kv_len, *,
     s = k.shape[1]
     kv_pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
     return attend(q, k, v, q_pos, kv_pos, kv_len, causal=causal,
-                  window=window, attn_softcap=attn_softcap, scale=scale)
+                  window=window, attn_softcap=attn_softcap, scale=scale,
+                  tree_info=tree_info)
 
 
 def gqa_apply(params, cfg, x, positions, *, layer_window=0, cache=None,
               cache_pos=None, mask_info=None, causal=True, use_rope=True,
-              block_tables=None, kv_block_size=0):
+              block_tables=None, kv_block_size=0, tree_info=None):
     """Self attention. Returns (y, new_cache)."""
     b, t, _ = x.shape
     q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(x.dtype))
@@ -293,7 +355,8 @@ def gqa_apply(params, cfg, x, positions, *, layer_window=0, cache=None,
         out = _paged_attend(q, new_k, new_v, block_tables, positions,
                             cache_pos + t, causal=causal,
                             window=layer_window,
-                            attn_softcap=cfg.attn_softcap, scale=scale)
+                            attn_softcap=cfg.attn_softcap, scale=scale,
+                            tree_info=tree_info)
     else:
         new_k = _write_cache(cache["k"], k, cache_pos)
         new_v = _write_cache(cache["v"], v, cache_pos)
@@ -303,7 +366,7 @@ def gqa_apply(params, cfg, x, positions, *, layer_window=0, cache=None,
         kv_len = cache_pos + t
         out = attend(q, new_k, new_v, positions, kv_pos, kv_len, causal=causal,
                      window=layer_window, attn_softcap=cfg.attn_softcap,
-                     scale=scale)
+                     scale=scale, tree_info=tree_info)
     y = jnp.einsum("bthk,hkd->btd", out, params["wo"].astype(x.dtype))
     return y, new_cache
 
@@ -382,7 +445,8 @@ def _rms(x, scale, eps):
 
 
 def mla_apply(params, cfg, x, positions, *, cache=None, cache_pos=None,
-              mask_info=None, block_tables=None, kv_block_size=0):
+              mask_info=None, block_tables=None, kv_block_size=0,
+              tree_info=None):
     b, t, _ = x.shape
     h = cfg.n_heads
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
@@ -440,6 +504,7 @@ def mla_apply(params, cfg, x, positions, *, cache=None, cache_pos=None,
     scale = 1.0 / math.sqrt(dn + dr)
 
     out = attend(qfull, k, v, positions, kv_pos, kv_len, causal=True,
-                 scale=scale, mask_info=mask_info if cache is None else None)
+                 scale=scale, mask_info=mask_info if cache is None else None,
+                 tree_info=tree_info if cache is not None else None)
     y = jnp.einsum("bthk,hkd->btd", out, params["wo"].astype(x.dtype))
     return y, new_cache

@@ -20,7 +20,6 @@ tokens only (see serving/engine.py).
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -107,8 +106,8 @@ def ssd_chunk_body(x, dt, A, B, C, S_in):
     # Mask INSIDE the exp: masked (j>i) entries have positive diff that can
     # overflow to inf, and grad-of-where would then produce NaN cotangents.
     diff = cum[:, :, None, :] - cum[:, None, :, :]         # [b,i,j,h]
-    l = x.shape[1]
-    causal = jnp.tril(jnp.ones((l, l), bool))
+    seq = x.shape[1]
+    causal = jnp.tril(jnp.ones((seq, seq), bool))
     w = jnp.exp(jnp.where(causal[None, :, :, None], diff, -1e30))
     cb = jnp.einsum("bin,bjn->bij", C.astype(jnp.float32), B.astype(jnp.float32))
     gate = w * cb[..., None]                               # [b,i,j,h]

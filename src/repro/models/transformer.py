@@ -13,8 +13,7 @@ Public entry points:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -139,7 +138,8 @@ def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
 
 def _apply_layer(lp, cfg: ModelConfig, spec: LayerSpec, x, positions, *,
                  cache=None, cache_pos=None, mask_info=None, enc_out=None,
-                 collect_ssm=False, block_tables=None, kv_block_size=0):
+                 collect_ssm=False, block_tables=None, kv_block_size=0,
+                 tree_info=None):
     _, norm = L.make_norm(cfg)
     aux = {}
     h = norm(lp["norm1"], x)
@@ -149,13 +149,15 @@ def _apply_layer(lp, cfg: ModelConfig, spec: LayerSpec, x, positions, *,
         y, new_cache = attn.gqa_apply(
             lp["mixer"], cfg, h, positions, layer_window=window, cache=cache,
             cache_pos=cache_pos, mask_info=mask_info, use_rope=cfg.use_rope,
-            block_tables=block_tables, kv_block_size=kv_block_size)
+            block_tables=block_tables, kv_block_size=kv_block_size,
+            tree_info=tree_info)
     elif spec.mixer == ATTN_MLA:
         y, new_cache = attn.mla_apply(lp["mixer"], cfg, h, positions,
                                       cache=cache, cache_pos=cache_pos,
                                       mask_info=mask_info,
                                       block_tables=block_tables,
-                                      kv_block_size=kv_block_size)
+                                      kv_block_size=kv_block_size,
+                                      tree_info=tree_info)
     elif spec.mixer == ATTN_CROSS:
         y = attn.cross_attn_apply(lp["mixer"], cfg, h, enc_out)
         new_cache = cache
@@ -220,7 +222,8 @@ def encode(params, cfg: ModelConfig, frontend_embed: Array) -> Array:
 def forward(params, cfg: ModelConfig, tokens: Array, positions=None, *,
             mask_info=None, enc_out=None, caches=None, cache_pos=None,
             collect_ssm=False, remat: bool = False, dtype=jnp.bfloat16,
-            last_only: bool = False, block_tables=None, kv_block_size=0):
+            last_only: bool = False, block_tables=None, kv_block_size=0,
+            tree_info=None):
     """Run the decoder stack.
 
     tokens:       [B, T] int32
@@ -233,6 +236,9 @@ def forward(params, cfg: ModelConfig, tokens: Array, positions=None, *,
                   KV layout (attention leaves are [NB, block, ...] pools);
                   SSM states stay batch-indexed either way
     kv_block_size: tokens per KV block (static; required with block_tables)
+    tree_info:    optional attention.TreeAttnInfo — the tokens are a packed
+                  speculative candidate tree; pass explicit depth-based
+                  ``positions`` alongside (DESIGN.md §6)
 
     Returns (logits [B, T, padded_vocab], new_caches, aux).
     """
@@ -256,7 +262,8 @@ def forward(params, cfg: ModelConfig, tokens: Array, positions=None, *,
                             cache_pos=cache_pos, mask_info=mask_info,
                             enc_out=enc_out, collect_ssm=collect_ssm,
                             block_tables=block_tables,
-                            kv_block_size=kv_block_size)
+                            kv_block_size=kv_block_size,
+                            tree_info=tree_info)
 
     # ---- prefix layers (unrolled) ----
     for i, spec in enumerate(plan.prefix):

@@ -20,7 +20,11 @@ Design (all fixed shapes, jit-once):
   * decode: ONE jitted speculative step advances all active slots together;
     finished slots free immediately and new requests admit on the next tick
     (continuous batching);
-  * modes: "ar" (AR+ baseline), "vsd", "pard" — same engine, same pool.
+  * modes: "ar" (AR+ baseline), "vsd", "pard" — same engine, same pool;
+    passing ``tree=`` (a core.spec_decode.TreeTemplate or a branching list)
+    upgrades "pard" to tree-structured drafting with ancestor-mask
+    verification (DESIGN.md §6) — allocation slack and the decode step come
+    from the same SpecDecoder, so paged KV invariants are unchanged.
 
 SSM/hybrid targets work unchanged: the spec step's collect_ssm rollback is
 per-row, SSM states stay batch-indexed in both KV layouts, and prefill
@@ -73,9 +77,11 @@ class Engine:
                  max_len: int = 1024, temperature: float = 0.0,
                  eos_id: Optional[int] = None, seed: int = 0,
                  kv_layout: str = "paged", kv_block_size: int = 64,
-                 kv_num_blocks: Optional[int] = None):
+                 kv_num_blocks: Optional[int] = None, tree=None):
         assert mode in ("ar", "vsd", "pard")
         assert kv_layout in ("paged", "contiguous")
+        assert tree is None or mode == "pard", \
+            "tree templates apply to the PARD draft path only"
         self.mode = mode
         self.paged = kv_layout == "paged"
         self.k = k if mode != "ar" else 1
@@ -89,7 +95,9 @@ class Engine:
         self.dec = SpecDecoder(
             target_params, target_cfg, draft_params, draft_cfg, k=self.k,
             max_len=max_len, temperature=temperature,
-            kv_block_size=kv_block_size if self.paged else 0)
+            kv_block_size=kv_block_size if self.paged else 0,
+            tree=tree if mode == "pard" else None)
+        self.k = self.dec.k          # a tree template overrides k (== depth)
         self.tc, self.dc = target_cfg, draft_cfg
         self.rng = jax.random.PRNGKey(seed)
 
@@ -142,21 +150,22 @@ class Engine:
         self._spec_step = None
         self._ar_step = None
         self._prefill_cache: Dict[Any, Any] = {}
-        self.stats = dict(steps=0, committed=0, draft_forwards=0,
-                          target_forwards=0)
+        self.stats = dict(steps=0, committed=0, accepted=0, live_steps=0,
+                          draft_forwards=0, target_forwards=0)
 
     # ------------------------------------------------------------- public
     def submit(self, prompt, max_new: int) -> int:
         prompt = np.asarray(prompt, np.int32)
-        need = len(prompt) + max_new + 2 * self.k + 2
+        need = len(prompt) + max_new + self.dec.window_slack
         if len(prompt) < 2 or need > self.max_len:
             # a raised error, not an assert: past this point an oversized
             # request would outgrow its cache rows/blocks and silently
             # attend garbage
             raise ValueError(
                 f"request needs {need} cache positions (prompt="
-                f"{len(prompt)}, max_new={max_new}, k={self.k}, +2 slack) "
-                f"but max_len={self.max_len}; prompts also need >= 2 tokens")
+                f"{len(prompt)}, max_new={max_new}, window slack="
+                f"{self.dec.window_slack}) but max_len={self.max_len}; "
+                f"prompts also need >= 2 tokens")
         rid = self._next_rid
         self._next_rid += 1
         self.queue.append(Request(rid, prompt, max_new))
@@ -241,7 +250,8 @@ class Engine:
                 continue
             req = self.queue[0]
             p = len(req.prompt)
-            need = p + req.max_new + 2 * self.k + 2   # validated at submit()
+            # validated at submit(); covers draft + verify windows (I3)
+            need = p + req.max_new + self.dec.window_slack
             if self.paged:
                 nb = self.alloc.blocks_needed(need)
                 if not self.alloc.can_allocate(nb):
@@ -293,15 +303,28 @@ class Engine:
 
     def _step_spec(self):
         if self._spec_step is None:
-            self._spec_step = jax.jit(self.dec._build_spec_step(
-                "pard" if self.mode == "pard" else "vsd"),
-                donate_argnums=(0,))
+            if self.dec.tree is not None:
+                builder = self.dec._build_tree_step()
+            else:
+                builder = self.dec._build_spec_step(
+                    "pard" if self.mode == "pard" else "vsd")
+            self._spec_step = jax.jit(builder, donate_argnums=(0,))
         self.rng, sub = jax.random.split(self.rng)
+        live = int(jnp.sum(~self.state.done))
         self.state, a, hist, n_draft = self._spec_step(self.state, sub)
         self.stats["draft_forwards"] += int(n_draft)
         self.stats["target_forwards"] += 1
+        self.stats["accepted"] += int(jnp.sum(a))
+        self.stats["live_steps"] += live
         self.stats["committed"] += int(jnp.sum(a) +
                                        jnp.sum(~self.state.done))
+
+    def mean_accepted(self) -> float:
+        """Mean committed tokens per live row per verify step (a + 1) —
+        the tree/flat drafting quality metric gated in CI."""
+        if not self.stats["live_steps"]:
+            return 0.0
+        return 1.0 + self.stats["accepted"] / self.stats["live_steps"]
 
     def _step_ar(self):
         if self._ar_step is None:

@@ -29,7 +29,7 @@ Invariants (tested in tests/test_engine.py and tests/test_kv_pool.py):
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -172,13 +172,14 @@ def _attn_leaves(cfg: ModelConfig, tree):
 
 def kv_capacity_bytes(cfg: ModelConfig, tree) -> int:
     """HBM resident for the attention KV leaves (either layout)."""
-    return int(sum(l.nbytes for l in _attn_leaves(cfg, tree)))
+    return int(sum(leaf.nbytes for leaf in _attn_leaves(cfg, tree)))
 
 
 def kv_bytes_per_block(cfg: ModelConfig, tree, num_blocks: int) -> int:
     """Bytes one pool block costs across all attention leaves (scanned
     leaves count each repeat, since the pool exists per repeat-layer)."""
-    return int(sum(l.nbytes // num_blocks for l in _attn_leaves(cfg, tree)))
+    return int(sum(leaf.nbytes // num_blocks
+                   for leaf in _attn_leaves(cfg, tree)))
 
 
 # ---------------------------------------------------------------------------

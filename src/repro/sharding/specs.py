@@ -12,7 +12,7 @@ EXPERIMENTS.md §Dry-run for the honest accounting).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np

@@ -6,7 +6,7 @@ train loop composes the same way a production stack would.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +28,9 @@ class AdamW:
     clip_norm: float = 1.0
 
     def init(self, params) -> AdamWState:
-        z = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        def z():
+            return jax.tree.map(
+                lambda p: jnp.zeros_like(p, jnp.float32), params)
         return AdamWState(jnp.zeros((), jnp.int32), z(), z())
 
     def _lr(self, step):

@@ -7,9 +7,8 @@ with batch data-parallel over ("pod","data"); on CPU it is a plain jit.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-from typing import Any, Callable, Dict, Iterator, Optional
+from typing import Any, Dict, Iterator, Optional
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +17,7 @@ import numpy as np
 from ..core.adaptation import ar_loss, pard_adaptation_loss
 from ..core.cod import CodConfig, pack_batch
 from ..models.config import ModelConfig
-from .optimizer import AdamW, AdamWState, cosine_schedule
+from .optimizer import AdamW, AdamWState
 
 
 @dataclasses.dataclass

@@ -3,7 +3,6 @@ temperature-mode engine, launcher-level pieces."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.models import init_params
@@ -39,24 +38,23 @@ def test_eagle_loss_decreases():
 
     @jax.jit
     def step(ep, state):
-        (l, _), g = jax.value_and_grad(
+        (loss, _), g = jax.value_and_grad(
             lambda e: eagle_loss(e, tp, tc, tokens), has_aux=True)(ep)
         ep, state, _ = opt.update(g, state, ep)
-        return ep, state, l
+        return ep, state, loss
 
     first = None
     for i in range(25):
-        ep, state, l = step(ep, state)
+        ep, state, loss = step(ep, state)
         if first is None:
-            first = float(l)
-    assert float(l) < first
+            first = float(loss)
+    assert float(loss) < first
 
 
 def test_moe_grouped_dispatch_matches_dense_reference():
     """The grouped one-hot dispatch must equal the direct per-token
     computation sum_k gate_k * expert_{idx_k}(x) when nothing is dropped."""
     from repro.models.layers import init_moe, moe_apply
-    import dataclasses
     cfg = get_config("granite-moe-3b-a800m").reduced()
     params = init_moe(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model),

@@ -21,8 +21,8 @@ def models():
 
 
 def _prompts(rng, n, vocab=512):
-    return [rng.integers(0, vocab, size=int(l)).astype(np.int32)
-            for l in rng.integers(4, 14, size=n)]
+    return [rng.integers(0, vocab, size=int(n_tok)).astype(np.int32)
+            for n_tok in rng.integers(4, 14, size=n)]
 
 
 def test_single_request_matches_specdecoder(models):

@@ -8,8 +8,7 @@ whatever devices the test process has.
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.launch.steps import cache_shapes, param_shapes

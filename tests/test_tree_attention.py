@@ -1,0 +1,141 @@
+"""Tree-verification attention kernel: Pallas-vs-oracle parity on random
+ancestor masks (both cache layouts), degenerate-chain equivalence with the
+causal decode kernel, and garbage-block isolation for the paged variant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.spec_decode import TreeTemplate
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(43)
+
+
+def rand(*shape, k=0, dtype=jnp.float32):
+    return jax.random.normal(jax.random.fold_in(KEY, k), shape, jnp.float32
+                             ).astype(dtype)
+
+
+def random_anc(rng, b, tq):
+    """Random — not necessarily tree-shaped — ancestor bitmasks. The kernel
+    contract is the bitmask semantics, so parity must hold for arbitrary
+    masks; self-visibility (bit s of slot s) keeps softmax rows non-empty."""
+    bits = rng.integers(0, 2, size=(b, tq, tq)).astype(np.uint64)
+    anc = np.zeros((b, tq), np.uint32)
+    for s in range(tq):
+        bits[:, s, s] = 1
+        anc[:, s] = sum(bits[:, s, j].astype(np.uint32) << np.uint32(j)
+                        for j in range(tq))
+    return jnp.asarray(anc)
+
+
+def chain_anc(b, tq):
+    tmpl = TreeTemplate.flat(tq - 1)
+    return jnp.broadcast_to(jnp.asarray(tmpl.anc)[None, :], (b, tq))
+
+
+@pytest.mark.parametrize("b,tq,hq,hkv,d,s", [
+    (2, 9, 4, 2, 64, 256), (1, 15, 8, 2, 32, 128), (3, 5, 4, 4, 32, 96),
+])
+def test_tree_attention_random_masks(b, tq, hq, hkv, d, s):
+    rng = np.random.default_rng(b * 100 + tq)
+    q = rand(b, tq, hq, d, k=1)
+    k = rand(b, s, hkv, d, k=2)
+    v = rand(b, s, hkv, d, k=3)
+    win_start = jnp.asarray([s // 2 - 3 * i for i in range(b)], jnp.int32)
+    kv_len = win_start + tq
+    q_pos = win_start[:, None] + jnp.arange(tq)[None, :]
+    anc = random_anc(rng, b, tq)
+    out = ops.tree_attention(q, k, v, kv_len, q_pos, win_start, anc,
+                             block_k=64)
+    want = ref.tree_attention_ref(q, k, v, kv_len, q_pos, win_start, anc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_tree_attention_window_softcap():
+    b, tq, h, d, s = 2, 7, 4, 32, 128
+    rng = np.random.default_rng(5)
+    q, k, v = rand(b, tq, h, d, k=4), rand(b, s, h, d, k=5), rand(b, s, h, d, k=6)
+    win_start = jnp.asarray([90, 70], jnp.int32)
+    kv_len = win_start + tq
+    q_pos = win_start[:, None] + jnp.arange(tq)[None, :]
+    anc = random_anc(rng, b, tq)
+    out = ops.tree_attention(q, k, v, kv_len, q_pos, win_start, anc,
+                             window=32, softcap=30.0, block_k=32)
+    want = ref.tree_attention_ref(q, k, v, kv_len, q_pos, win_start, anc,
+                                  window=32, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_tree_chain_equals_causal_decode():
+    """A degenerate single-branch template's ancestor masks reproduce plain
+    causal attention: the tree kernel must agree with the decode kernel."""
+    b, tq, h, d, s = 2, 6, 4, 32, 128
+    q, k, v = rand(b, tq, h, d, k=7), rand(b, s, h, d, k=8), rand(b, s, h, d, k=9)
+    win_start = jnp.asarray([80, 65], jnp.int32)
+    kv_len = win_start + tq
+    q_pos = win_start[:, None] + jnp.arange(tq)[None, :]
+    anc = chain_anc(b, tq)
+    out = ops.tree_attention(q, k, v, kv_len, q_pos, win_start, anc,
+                             block_k=32)
+    want = ops.decode_attention(q, k, v, kv_len, q_pos, block_k=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def _paged_setup(b, hkv, d, bs, mbs, key=0):
+    nb = 1 + b * mbs
+    k_pages = rand(nb, bs, hkv, d, k=key + 1)
+    v_pages = rand(nb, bs, hkv, d, k=key + 2)
+    perm = np.random.default_rng(key).permutation(np.arange(1, nb))
+    tables = jnp.asarray(perm.reshape(b, mbs), jnp.int32)
+    return k_pages, v_pages, tables
+
+
+@pytest.mark.parametrize("b,tq,hq,hkv,d,bs,mbs", [
+    (2, 9, 4, 2, 64, 32, 4),     # small tree verify window
+    (1, 22, 8, 2, 32, 64, 3),    # [3,2,1,1]-template-sized window
+    (3, 5, 4, 4, 32, 16, 5),
+])
+def test_tree_attention_paged_random_masks(b, tq, hq, hkv, d, bs, mbs):
+    rng = np.random.default_rng(tq)
+    q = rand(b, tq, hq, d, k=10)
+    win_start = jnp.asarray([bs * mbs // 2 - 5 * i - tq for i in range(b)],
+                            jnp.int32)
+    kv_len = win_start + tq
+    q_pos = win_start[:, None] + jnp.arange(tq)[None, :]
+    anc = random_anc(rng, b, tq)
+    k_pages, v_pages, tables = _paged_setup(b, hkv, d, bs, mbs)
+    out = ops.tree_attention_paged(q, k_pages, v_pages, tables, kv_len,
+                                   q_pos, win_start, anc)
+    want = ref.tree_attention_paged_ref(q, k_pages, v_pages, tables, kv_len,
+                                        q_pos, win_start, anc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+    # cross-layout: the contiguous kernel on the gathered view must agree
+    k_cont = ref.gather_pages(k_pages, tables)
+    v_cont = ref.gather_pages(v_pages, tables)
+    cont = ops.tree_attention(q, k_cont, v_cont, kv_len, q_pos, win_start,
+                              anc, block_k=bs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(cont), atol=2e-5)
+
+
+def test_tree_attention_paged_ignores_garbage_block():
+    """Unallocated table entries point at block 0; its contents must never
+    leak into the output (kv_len masks them)."""
+    b, tq, h, d, bs, mbs = 1, 4, 2, 16, 8, 4
+    rng = np.random.default_rng(3)
+    q = rand(b, tq, h, d, k=20)
+    k_pages = rand(6, bs, h, d, k=21)
+    v_pages = rand(6, bs, h, d, k=22)
+    tables = jnp.asarray([[3, 5, 0, 0]], jnp.int32)     # 2 real blocks
+    win_start = jnp.asarray([10], jnp.int32)
+    kv_len = win_start + tq
+    q_pos = win_start[:, None] + jnp.arange(tq)[None, :]
+    anc = random_anc(rng, b, tq)
+    out1 = ops.tree_attention_paged(q, k_pages, v_pages, tables, kv_len,
+                                    q_pos, win_start, anc)
+    poisoned_k = k_pages.at[0].set(1e4)
+    poisoned_v = v_pages.at[0].set(-1e4)
+    out2 = ops.tree_attention_paged(q, poisoned_k, poisoned_v, tables,
+                                    kv_len, q_pos, win_start, anc)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=0)
