@@ -2,16 +2,21 @@
 
   PYTHONPATH=src python -m benchmarks.run [--only table1,table5] [--list]
   PYTHONPATH=src python -m benchmarks.run --tree [--smoke-floor 1.8]
+  PYTHONPATH=src python -m benchmarks.run --tree --temperature 0.8 \
+      [--smoke-floor 1.3]
 
 Prints ``name,us_per_call,derived`` CSV. Requires the trained artifacts
 (``python examples/pard_adaptation_train.py``); without them it falls back
 to random weights and WARNS (timings still valid, acceptance meaningless —
 except the serve_tree table, which self-drafts and stays meaningful).
 
-``--tree`` runs the tree-drafting serve benchmark (serve_tree) and
-``--smoke-floor`` turns the run into the CI regression gate: it exits
-non-zero unless every PARD mean accepted length recorded in the canonical
-BENCH_serve.json "tree" section stays at or above the floor.
+``--tree`` runs the tree-drafting serve benchmark (serve_tree);
+``--temperature`` > 0 switches it to sampled (multi-round rejection
+sampling) acceptance, recorded under BENCH_serve.json's "tree_sampled"
+section. ``--smoke-floor`` turns the run into the CI regression gate: it
+exits non-zero with a one-line diagnostic naming the failing mode/metric
+unless every PARD mean accepted length recorded in the section that this
+run wrote ("tree" or "tree_sampled") stays at or above the floor.
 
 The roofline/dry-run numbers (deliverable e/g) are produced separately by
 ``python -m repro.launch.dryrun --all --both-meshes`` and summarised with
@@ -23,17 +28,20 @@ import sys
 import time
 
 
-def check_floor(floor: float) -> int:
-    """CI gate: every recorded tree/flat PARD mean accepted length must be
-    >= floor. Returns a process exit code."""
+def check_floor(floor: float, section: str = "tree") -> int:
+    """CI gate: every recorded PARD mean accepted length in ``section``
+    must be >= floor. Prints one diagnostic line per entry naming the
+    mode and metric; returns a process exit code."""
     from . import common
 
     with open(common.BENCH_SERVE) as f:
         record = json.load(f)
-    tree = record.get("tree")
+    tree = record.get(section)
     if not tree:
-        print(f"smoke-floor: no 'tree' section in {common.BENCH_SERVE} — "
-              f"run with --tree", file=sys.stderr)
+        print(f"smoke-floor: no '{section}' section in {common.BENCH_SERVE}"
+              f" — run with --tree"
+              f"{' --temperature 0.8' if section != 'tree' else ''}",
+              file=sys.stderr)
         return 2
     failed = False
     for name, entry in sorted(tree.items()):
@@ -42,7 +50,7 @@ def check_floor(floor: float) -> int:
             continue
         ok = acc >= floor
         failed |= not ok
-        print(f"smoke-floor: {name} mean_accepted={acc:.3f} "
+        print(f"smoke-floor: {section}.{name} mean_accepted={acc:.3f} "
               f"{'>=' if ok else '< FAIL'} {floor}", file=sys.stderr)
     return 1 if failed else 0
 
@@ -54,10 +62,13 @@ def main() -> None:
     ap.add_argument("--list", action="store_true")
     ap.add_argument("--tree", action="store_true",
                     help="run the tree-drafting serve benchmark (serve_tree)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="serve_tree sampling temperature (0 = greedy; > 0 "
+                         "records the 'tree_sampled' BENCH_serve section)")
     ap.add_argument("--smoke-floor", type=float, default=None, metavar="ACC",
                     help="after running, fail unless every PARD mean "
-                         "accepted length in BENCH_serve.json's tree "
-                         "section is >= ACC (the CI perf regression gate)")
+                         "accepted length in the BENCH_serve.json section "
+                         "this run wrote is >= ACC (the CI perf gate)")
     args = ap.parse_args()
 
     from . import common, tables
@@ -77,11 +88,23 @@ def main() -> None:
     t0 = time.time()
     print("name,us_per_call,derived")
     for name in names:
-        tables.ALL[name]()
+        try:
+            if name == "serve_tree":
+                tables.serve_tree(temperature=args.temperature)
+            else:
+                tables.ALL[name]()
+        except AssertionError as e:
+            if args.smoke_floor is not None:
+                # the CI gate wants a one-line diagnostic naming the failing
+                # mode/metric, not a bare assert traceback
+                print(f"smoke-floor: {name} FAILED: {e}", file=sys.stderr)
+                sys.exit(1)
+            raise
     print(f"# total wall: {time.time() - t0:.1f}s", file=sys.stderr)
 
     if args.smoke_floor is not None:
-        sys.exit(check_floor(args.smoke_floor))
+        section = "tree_sampled" if args.temperature > 0 else "tree"
+        sys.exit(check_floor(args.smoke_floor, section))
 
 
 if __name__ == "__main__":

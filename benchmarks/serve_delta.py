@@ -1,0 +1,65 @@
+"""Tokens/sec delta between two BENCH_serve.json trajectories.
+
+  python -m benchmarks.serve_delta PREVIOUS.json CURRENT.json
+
+Prints a GitHub-flavoured markdown table (one row per section.mode) to
+stdout — the bench-smoke CI job appends it to the job summary after
+``gh run download``-ing the previous ``bench-serve`` artifact from main.
+Only the sections bench-smoke actually regenerates (``benchmarks.run
+--tree [--temperature]`` rewrites "tree"/"tree_sampled") are tabulated:
+other sections in the file are committed dev-machine numbers, and showing
+them here would present a repo-file diff as a CI-measured perf delta.
+Tolerates an absent/corrupt previous file (first run on a repo, expired
+artifact): prints a note and exits 0 so the job never fails on missing
+history.
+"""
+import json
+import sys
+
+# the sections the bench-smoke job re-measures in CI (see ci.yml)
+CI_SECTIONS = ("tree", "tree_sampled")
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print("usage: python -m benchmarks.serve_delta PREV.json CUR.json",
+              file=sys.stderr)
+        return 2
+    prev, cur = load(sys.argv[1]), load(sys.argv[2])
+    if cur is None:
+        print(f"serve-delta: no current trajectory at {sys.argv[2]}",
+              file=sys.stderr)
+        return 2
+    print("### Serving tokens/sec vs previous main artifact\n")
+    if prev is None:
+        print(f"_no previous `bench-serve` artifact at `{sys.argv[1]}` — "
+              f"delta skipped (first run or expired artifact)_")
+        return 0
+    print("| benchmark | previous tok/s | current tok/s | delta |")
+    print("|---|---:|---:|---:|")
+    for section in CI_SECTIONS:
+        for mode in sorted(cur.get(section, {})):
+            c = cur[section][mode].get("tokens_per_sec")
+            if c is None:
+                continue
+            p = prev.get(section, {}).get(mode, {}).get("tokens_per_sec")
+            if p is None:
+                print(f"| {section}.{mode} | — | {c:.1f} | new |")
+            elif p > 0:
+                pct = 100.0 * (c - p) / p
+                print(f"| {section}.{mode} | {p:.1f} | {c:.1f} | {pct:+.1f}% |")
+            else:
+                print(f"| {section}.{mode} | {p:.1f} | {c:.1f} | n/a |")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

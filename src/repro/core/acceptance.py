@@ -1,0 +1,296 @@
+"""Token acceptance for speculative decoding — ONE module for every verifier.
+
+Both the flat chain (``SpecDecoder._build_spec_step``) and the packed
+candidate tree (``_build_tree_step``) decide what to commit here, in four
+rules that pair up as (greedy, sampled) x (chain, tree):
+
+  * ``greedy_chain_accept``  — longest prefix matching the target argmax.
+  * ``leviathan_accept``     — Leviathan speculative sampling: accept draft
+    token x with min(1, p(x)/q(x)); on the first reject, commit a token from
+    the clipped residual norm(max(p - q, 0)). Exact for temperature > 0.
+  * ``greedy_tree_accept``   — longest root path whose node tokens match the
+    target argmax at their parent slot (DESIGN.md §6).
+  * ``sampled_tree_accept``  — multi-round (SpecInfer-style) recursive
+    rejection sampling over sibling candidates: at each depth, try the
+    surviving node's children in order; accept child token x with
+    min(1, r(x)/q(x)) where r starts at the target distribution p and, after
+    every rejected sibling, becomes the renormalised clipped residual
+    norm(max(r - q, 0)). If all siblings reject, the correction token is
+    sampled from the final residual; a fully accepted path samples the bonus
+    token from p at its deepest node. Renormalising each round is what makes
+    the induction exact: conditioned on a rejection, the remaining rounds
+    are speculative sampling targeting the residual, so every committed
+    token is distributed exactly as the target's own sampling distribution
+    (tested in tests/test_sampled_tree.py, gated statistically in CI).
+
+Sampling state is per ROW: every function takes ``keys [B, 2]`` (one PRNG
+key per batch row) so a request's sampling trajectory depends only on its
+own key and step count — never on batch composition or KV layout. That is
+the seeded-determinism contract the engine relies on to mix greedy and
+sampled requests in one batch (DecodeState.temp / DecodeState.rngs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+_EPS = 1e-9
+_LOG_EPS = 1e-30
+
+
+# ---------------------------------------------------------------------------
+# Per-row PRNG plumbing
+# ---------------------------------------------------------------------------
+
+def make_row_keys(seed: int, ids) -> Array:
+    """[B, 2] uint32 — one independent PRNG key per row, derived from a
+    shared seed and a per-row id (the batch index in ``generate_*``, the
+    request id in the serving engine)."""
+    base = jax.random.PRNGKey(seed)
+    ids = jnp.asarray(ids, jnp.uint32)
+    return jax.vmap(lambda i: jax.random.fold_in(base, i))(ids)
+
+
+def split_row_keys(keys: Array):
+    """keys [B, 2] -> (next_keys, use_keys): each row's key advances one
+    step; ``use_keys`` seeds this step's draws, ``next_keys`` is stored."""
+    both = jax.vmap(lambda k: jax.random.split(k, 2))(keys)   # [B, 2, 2]
+    return both[:, 0], both[:, 1]
+
+
+def fold_row_keys(keys: Array, tag: int) -> Array:
+    """Derive an independent per-row stream ``tag`` from ``keys``."""
+    return jax.vmap(lambda k: jax.random.fold_in(k, tag))(keys)
+
+
+def row_uniform(keys: Array) -> Array:
+    return jax.vmap(lambda k: jax.random.uniform(k, ()))(keys)
+
+
+def row_categorical(keys: Array, logits: Array) -> Array:
+    """keys [B, 2], logits [B, V] -> [B] int32 (independent per row)."""
+    return jax.vmap(lambda k, lg: jax.random.categorical(k, lg))(
+        keys, logits).astype(jnp.int32)
+
+
+def _row_take(x: Array, idx: Array) -> Array:
+    """x: [B, T, ...], idx: [B] -> [B, ...]."""
+    return jax.vmap(lambda r, i: jax.lax.dynamic_index_in_dim(r, i, 0, False))(x, idx)
+
+
+def scale_logits(logits: Array, temp: Array) -> Array:
+    """logits / temp with PER-ROW temperature, the one place the greedy-row
+    guard lives: rows with temp == 0 divide by 1 instead (their scaled
+    logits are never used — the greedy rules decide those rows — but NaNs
+    must not be produced)."""
+    t = jnp.where(temp > 0, temp, 1.0).astype(jnp.float32)
+    t = t.reshape(t.shape + (1,) * (logits.ndim - 1))
+    return logits.astype(jnp.float32) / t
+
+
+def temp_softmax(logits: Array, temp: Array) -> Array:
+    """softmax(logits / temp) with per-row temperature (see scale_logits)."""
+    return jax.nn.softmax(scale_logits(logits, temp), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Flat chain
+# ---------------------------------------------------------------------------
+
+def greedy_chain_accept(logits: Array, props: Array):
+    """Greedy flat verification: longest draft prefix matching the target
+    argmax. logits [B, K+1, V] at each verify slot, props [B, K].
+    Returns (a [B], accepted [B, K], commit_tok [B])."""
+    k = props.shape[1]
+    tgt = jnp.argmax(logits[:, :k], axis=-1).astype(jnp.int32)
+    accepted = jnp.cumprod((props == tgt).astype(jnp.int32), axis=1)
+    a = jnp.sum(accepted, axis=1)
+    all_argmax = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return a, accepted, _row_take(all_argmax, a)     # correction / bonus
+
+
+def leviathan_accept(p_full: Array, qprob: Array, props: Array, keys: Array):
+    """Leviathan speculative sampling (the flat T > 0 acceptance rule).
+
+    p_full: [B, K+1, V] target probabilities at each verify position
+    qprob:  [B, K, V]   draft proposal distributions
+    props:  [B, K]      proposed tokens
+    keys:   [B, 2]      per-row PRNG keys (this step's draw)
+    Returns (a [B], accepted [B, K], commit_tok [B]) — the correction token
+    comes from the clipped residual at the first reject; when a == K the
+    padded q row is 0 so the residual reduces to the target distribution
+    (bonus sampling) automatically. The induced distribution of every
+    committed token equals the target's own sampling distribution (tested
+    in tests/test_spec_decode.py).
+    """
+    b, k = props.shape
+    k_acc = fold_row_keys(keys, 0)
+    k_res = fold_row_keys(keys, 1)
+    p_at = jnp.take_along_axis(p_full[:, :k], props[..., None], axis=-1)[..., 0]
+    q_at = jnp.take_along_axis(qprob, props[..., None], axis=-1)[..., 0]
+    u = jax.vmap(lambda kk: jax.random.uniform(kk, (k,)))(k_acc)
+    ok = (u * q_at < p_at).astype(jnp.int32)
+    accepted = jnp.cumprod(ok, axis=1)
+    a = jnp.sum(accepted, axis=1)
+    q_ext = jnp.concatenate([qprob, jnp.zeros_like(qprob[:, :1])], axis=1)
+    resid = jnp.maximum(_row_take(p_full, a) - _row_take(q_ext, a), 0.0)
+    resid = resid / jnp.maximum(jnp.sum(resid, axis=-1, keepdims=True), _EPS)
+    commit_tok = row_categorical(k_res, jnp.log(resid + _LOG_EPS))
+    return a, accepted, commit_tok
+
+
+def speculative_accept(p_full: Array, qprob: Array, props: Array, rng):
+    """Single-key convenience wrapper around ``leviathan_accept`` (rows draw
+    from splits of one key; kept for callers without per-row state)."""
+    keys = jax.random.split(rng, props.shape[0])
+    return leviathan_accept(p_full, qprob, props, keys)
+
+
+# ---------------------------------------------------------------------------
+# Packed candidate tree
+# ---------------------------------------------------------------------------
+
+def tree_child_map(tree) -> np.ndarray:
+    """[S, max_b] int32 — window slot of parent s's child at sibling rank c
+    (0 where absent; slot 0 is the root and never a child). Host-side,
+    static per template."""
+    cm = np.zeros((tree.num_slots, max(tree.branching)), np.int32)
+    for t in range(1, tree.num_slots):
+        cm[tree.parent[t], tree.choice[t]] = t
+    return cm
+
+
+def greedy_tree_accept(tree, logits: Array, props: Array):
+    """Greedy tree verification (DESIGN.md §6): a node survives iff its
+    token equals the target argmax at its parent slot AND its parent
+    survives; sibling tokens are distinct top-k ranks, so at most one node
+    per depth survives.
+
+    logits [B, S, V] at each window slot, props [B, N] node tokens.
+    Returns (a [B], tok_depth [B, D], src_slot [B, D] — accepted node's
+    window slot per depth, 0 where rejected —, commit_tok [B],
+    rank [B, D] — accepted sibling rank per depth, -1 where rejected).
+    """
+    b = props.shape[0]
+    d, s = tree.max_depth, tree.num_slots
+    parent_idx = np.asarray(tree.parent[1:], np.int32)             # [N]
+    node_depth_onehot = jnp.asarray(
+        tree.depth[1:, None] == np.arange(1, d + 1)[None, :])      # [N, D]
+    node_slot = jnp.arange(1, s, dtype=jnp.int32)                  # [N]
+    choice = jnp.asarray(tree.choice)                              # [S]
+
+    tgt = jnp.argmax(logits, axis=-1).astype(jnp.int32)            # [B, S]
+    matched = props == tgt[:, parent_idx]                          # [B, N]
+    ok = [jnp.ones((b,), bool)]
+    for si in range(1, s):
+        ok.append(matched[:, si - 1] & ok[tree.parent[si]])
+    path_ok = jnp.stack(ok, axis=1)                                # [B, S]
+    a = jnp.sum(path_ok[:, 1:], axis=1).astype(jnp.int32)          # [B]
+    best_slot = jnp.max(
+        jnp.where(path_ok, jnp.arange(s)[None, :], 0), axis=1)
+    commit_tok = _row_take(tgt, best_slot)         # correction / bonus
+
+    pick = path_ok[:, 1:, None] & node_depth_onehot[None]          # [B,N,D]
+    tok_depth = jnp.sum(pick * props[:, :, None], axis=1)          # [B, D]
+    src_slot = jnp.sum(pick * node_slot[None, :, None], axis=1)    # [B, D]
+    rank = jnp.where(src_slot > 0, choice[src_slot], -1)
+    return a, tok_depth.astype(jnp.int32), src_slot.astype(jnp.int32), \
+        commit_tok, rank.astype(jnp.int32)
+
+
+def sampled_tree_accept(tree, p_full: Array, q_depth: Array, props: Array,
+                        keys: Array):
+    """Multi-round recursive rejection sampling over the candidate tree.
+
+    At each depth the surviving node's children are tried in sibling order;
+    round c accepts child token x with probability min(1, r(x)/q_d(x)),
+    where r is the target distribution at the surviving node, renormalised
+    after every rejected sibling to norm(max(r - q_d, 0)). Children must be
+    i.i.d. samples from q_d (the draft's depth-d proposal distribution) —
+    that, plus the renormalisation, makes every committed token exactly
+    target-distributed (see module docstring).
+
+    tree:    TreeTemplate (static host metadata)
+    p_full:  [B, S, V] target probabilities at each window slot (temp-scaled)
+    q_depth: [B, D, V] draft proposal distribution per depth (temp-scaled)
+    props:   [B, N]    node tokens (i.i.d. per node from its depth's q)
+    keys:    [B, 2]    per-row PRNG keys (this step's acceptance draws;
+             independent of the stream that sampled ``props``)
+    Returns (a, tok_depth, src_slot, commit_tok, rank) shaped exactly like
+    ``greedy_tree_accept`` so the step can select per row between them.
+    """
+    b = props.shape[0]
+    d_max = tree.max_depth
+    cm = jnp.asarray(tree_child_map(tree))                         # [S, mb]
+
+    cur = jnp.zeros((b,), jnp.int32)          # surviving slot (root first)
+    alive = jnp.ones((b,), bool)
+    a = jnp.zeros((b,), jnp.int32)
+    commit = jnp.zeros((b,), jnp.int32)
+    toks, slots, ranks = [], [], []
+    ctr = 0
+    for d in range(1, d_max + 1):
+        q_d = q_depth[:, d - 1]                                    # [B, V]
+        r = _row_take(p_full, cur)                                 # [B, V]
+        found = jnp.zeros((b,), bool)
+        sel_slot = jnp.zeros((b,), jnp.int32)
+        sel_tok = jnp.zeros((b,), jnp.int32)
+        sel_rank = jnp.full((b,), -1, jnp.int32)
+        for c in range(tree.branching[d - 1]):
+            slot_c = cm[cur, c]                                    # [B]
+            x = jnp.take_along_axis(
+                props, jnp.maximum(slot_c - 1, 0)[:, None], axis=1)[:, 0]
+            qx = jnp.take_along_axis(q_d, x[:, None], axis=1)[:, 0]
+            rx = jnp.take_along_axis(r, x[:, None], axis=1)[:, 0]
+            u = row_uniform(fold_row_keys(keys, ctr))
+            ctr += 1
+            acc = (u * qx < rx) & alive & ~found
+            sel_slot = jnp.where(acc, slot_c, sel_slot)
+            sel_tok = jnp.where(acc, x, sel_tok)
+            sel_rank = jnp.where(acc, c, sel_rank)
+            found = found | acc
+            # renormalised clipped residual for the next round (rows that
+            # accepted stop updating; their r is never read again)
+            nr = jnp.maximum(r - q_d, 0.0)
+            nr = nr / jnp.maximum(jnp.sum(nr, axis=-1, keepdims=True), _EPS)
+            r = jnp.where(found[:, None], r, nr)
+        # all siblings rejected: the correction token comes from the final
+        # residual, and the row stops here
+        corr = row_categorical(fold_row_keys(keys, ctr),
+                                jnp.log(r + _LOG_EPS))
+        ctr += 1
+        die = alive & ~found
+        commit = jnp.where(die, corr, commit)
+        a = a + (alive & found)
+        cur = jnp.where(found, sel_slot, cur)
+        toks.append(jnp.where(alive & found, sel_tok, 0))
+        slots.append(jnp.where(alive & found, sel_slot, 0))
+        ranks.append(jnp.where(alive, sel_rank, -1))
+        alive = alive & found
+    # fully accepted path: bonus token from the target distribution at the
+    # deepest accepted node
+    bonus = row_categorical(fold_row_keys(keys, ctr),
+                             jnp.log(_row_take(p_full, cur) + _LOG_EPS))
+    commit = jnp.where(alive, bonus, commit)
+    return a, jnp.stack(toks, axis=1), jnp.stack(slots, axis=1), commit, \
+        jnp.stack(ranks, axis=1)
+
+
+def sample_tree_props(tree, scaled_logits: Array, keys: Array) -> Array:
+    """i.i.d. draft candidates for ``sampled_tree_accept``: node s at depth
+    d draws from softmax(scaled_logits[:, d-1]) under its own per-(row,
+    node) key. scaled_logits [B, D, V] (already temperature-divided);
+    keys [B, 2]. Returns props [B, N] int32."""
+    node_depth = np.asarray(tree.depth[1:], np.int32)
+
+    def row(k, lg_row):                         # lg_row [D, V]
+        out = []
+        for i, nd in enumerate(node_depth):
+            out.append(jax.random.categorical(
+                jax.random.fold_in(k, i), lg_row[nd - 1]))
+        return jnp.stack(out)
+
+    return jax.vmap(row)(keys, scaled_logits).astype(jnp.int32)

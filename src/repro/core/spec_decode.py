@@ -32,9 +32,15 @@ longest root path matching the target argmax — still exactly lossless vs
 AR — and raises accepted tokens per target forward whenever the target's
 argmax lands in the draft's top-b_d but not its top-1.
 
-Greedy (temperature 0) verification is exactly lossless vs AR decoding;
-temperature > 0 uses Leviathan speculative sampling (accept with p/q,
-resample from the clipped residual).
+Greedy (temperature 0) verification is exactly lossless vs AR decoding.
+Temperature > 0 is PER ROW (``DecodeState.temp``; one batch mixes greedy
+and sampled requests): the flat chain uses Leviathan speculative sampling
+and the tree uses multi-round recursive rejection sampling over sibling
+candidates — both in core/acceptance.py, both provably committing tokens
+from the target model's own sampling distribution. Sampling draws come from
+per-row PRNG keys (``DecodeState.rngs``), so a request's output depends
+only on its own seed and step count, never on batch composition or KV
+layout (the seeded-determinism tests in tests/test_sampled_tree.py).
 """
 from __future__ import annotations
 
@@ -49,15 +55,14 @@ from ..models import forward, init_caches
 from ..models.attention import TreeAttnInfo, paged_flat_index
 from ..models.config import (ATTN_GLOBAL, ATTN_LOCAL, ATTN_MLA, SSM,
                              ModelConfig, scan_plan)
+from . import acceptance
+
+# re-exported: the flat T>0 acceptance rule lives in core/acceptance.py now
+speculative_accept = acceptance.speculative_accept
 
 Array = jax.Array
 
 _ATTN_MIXERS = (ATTN_GLOBAL, ATTN_LOCAL, ATTN_MLA)
-
-
-def _row_take(x: Array, idx: Array) -> Array:
-    """x: [B, T, ...], idx: [B] -> [B, ...]."""
-    return jax.vmap(lambda r, i: jax.lax.dynamic_index_in_dim(r, i, 0, False))(x, idx)
 
 
 def _row_write(buf: Array, vec: Array, pos: Array) -> Array:
@@ -111,39 +116,24 @@ def _draft_window(gen, n, m, k, mask_id):
     return tok.astype(jnp.int32)
 
 
+def _pick_next(logits: Array, temp: Array, keys: Array) -> Array:
+    """[B, V] logits -> [B] next token: argmax for temp == 0 rows, a sample
+    from softmax(logits / temp) under the row's own key otherwise. The
+    sampling branch only executes when some row actually samples, so
+    all-greedy batches pay nothing for it."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def samp():
+        s = acceptance.row_categorical(
+            keys, acceptance.scale_logits(logits, temp))
+        return jnp.where(temp > 0, s, greedy)
+
+    return jax.lax.cond(jnp.any(temp > 0), samp, lambda: greedy)
+
+
 def _has_ssm(cfg: ModelConfig) -> bool:
     plan = scan_plan(cfg)
     return any(s.mixer == SSM for s in plan.prefix + plan.period)
-
-
-def speculative_accept(p_full, qprob, props, rng):
-    """Leviathan speculative sampling (the T>0 acceptance rule).
-
-    p_full: [B, K+1, V] target probabilities at each verify position
-    qprob:  [B, K, V]   draft proposal distributions
-    props:  [B, K]      proposed tokens
-    Returns (a [B] number accepted, commit_tok [B] the correction/bonus
-    token). The induced distribution of every committed token equals the
-    target's own sampling distribution (tested in tests/test_spec_decode).
-    """
-    b, k = props.shape
-    r_acc, r_res = jax.random.split(rng)
-    p_at = jnp.take_along_axis(p_full[:, :k], props[..., None], axis=-1)[..., 0]
-    q_at = jnp.take_along_axis(qprob, props[..., None], axis=-1)[..., 0]
-    u = jax.random.uniform(r_acc, p_at.shape)
-    ok = (u * q_at < p_at).astype(jnp.int32)
-    accepted = jnp.cumprod(ok, axis=1)
-    a = jnp.sum(accepted, axis=1)
-    # residual at the first reject; when a == K the padded q row is 0 so the
-    # residual reduces to the target dist (bonus sampling) automatically
-    q_ext = jnp.concatenate([qprob, jnp.zeros_like(qprob[:, :1])], axis=1)
-    p_a = _row_take(p_full, a)
-    q_a = _row_take(q_ext, a)
-    resid = jnp.maximum(p_a - q_a, 0.0)
-    resid = resid / jnp.maximum(jnp.sum(resid, axis=-1, keepdims=True), 1e-9)
-    commit_tok = jax.random.categorical(
-        r_res, jnp.log(resid + 1e-30)).astype(jnp.int32)
-    return a, accepted, commit_tok
 
 
 # ---------------------------------------------------------------------------
@@ -230,7 +220,10 @@ def compact_tree_caches(cfg: ModelConfig, caches, src_pos, dst_start, depth,
 
     A tree-verification forward writes the window's KV at per-node cache
     slots ``win_start + s``; the accepted path's slots are generally
-    non-contiguous. Compaction makes the committed prefix contiguous again:
+    non-contiguous — whether greedy argmax-matching or multi-round sampled
+    acceptance picked it (``src_pos`` is acceptance-agnostic: slot of the
+    accepted node per depth, identity copy for rejected depths).
+    Compaction makes the committed prefix contiguous again:
     for d = 1..depth the entry at ``src_pos[:, d-1]`` is copied to position
     ``dst_start + d - 1`` (rejected depths carry src == dst, an identity
     copy; sources never precede their destination, and the gather completes
@@ -296,6 +289,12 @@ class DecodeState:
       tables [B, MBS] block tables for the paged KV layout, or None for
                      contiguous (DESIGN.md §5); shared by target and draft
                      since both cache the same absolute positions.
+      temp   [B]     per-row sampling temperature (0 = greedy; one batch
+                     mixes greedy and sampled requests)
+      rngs   [B, 2]  per-row PRNG keys — each step splits every row's key
+                     once, so a row's sampling stream depends only on its
+                     own seed and its step count (seeded determinism across
+                     batch compositions and KV layouts).
     """
     gen: Array
     n: Array
@@ -304,6 +303,8 @@ class DecodeState:
     tcache: Any
     dcache: Any = None
     tables: Optional[Array] = None
+    temp: Optional[Array] = None
+    rngs: Optional[Array] = None
 
 
 # every field is pytree data (derived from the dataclass so new fields can
@@ -349,6 +350,8 @@ class SpecStats:
     accept_hist: Any          # [K] — how often draft position j was accepted
     acceptance_rate: float    # mean accepted drafts / K per iteration
     mean_accepted: float      # mean committed tokens per iteration (a+1)
+    round_hist: Any = None    # [max_b] — accepts per sibling rank (tree:
+    #                           multi-round rounds / top-k ranks; chain: [1])
 
 
 class SpecDecoder:
@@ -369,10 +372,6 @@ class SpecDecoder:
         if tree is not None:
             if not isinstance(tree, TreeTemplate):
                 tree = TreeTemplate.from_branching(tree)
-            if temperature != 0.0:
-                raise NotImplementedError(
-                    "tree verification is greedy-only; sampled tree "
-                    "acceptance is a ROADMAP follow-up")
             if _has_ssm(target_cfg):
                 raise NotImplementedError(
                     "tree verification relies on positional KV rollback; "
@@ -426,26 +425,31 @@ class SpecDecoder:
 
     # ----------------------------------------------------------------- AR
     def _build_ar_step(self):
-        """One greedy AR decode step over a DecodeState (the AR+ baseline
-        and the engine's mode="ar" — one shared implementation)."""
+        """One AR decode step over a DecodeState (the AR+ baseline and the
+        engine's mode="ar" — one shared implementation). Rows with
+        ``state.temp == 0`` commit the argmax; rows with temp > 0 sample
+        from softmax(logits / temp) under their own PRNG key."""
         def step(state: DecodeState) -> DecodeState:
-            gen, n, done = state.gen, state.n, state.done
+            gen, n, done, temp = state.gen, state.n, state.done, state.temp
+            next_keys, use = acceptance.split_row_keys(state.rngs)
             last = jnp.take_along_axis(gen, (n - 1)[:, None], axis=1)
             logits, tcache, _ = self._target_forward(
                 last.astype(jnp.int32), state.tcache, n - 1, state.tables)
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            nxt = _pick_next(logits[:, -1], temp, use)
             gen2 = jax.vmap(
                 lambda g, t, p: jax.lax.dynamic_update_slice(g, t[None], (p,))
             )(gen, nxt, n)
             gen = jnp.where(done[:, None], gen, gen2)
             n = jnp.where(done, n, n + 1)
-            return dataclasses.replace(state, gen=gen, n=n, tcache=tcache)
+            return dataclasses.replace(state, gen=gen, n=n, tcache=tcache,
+                                       rngs=next_keys)
         return step
 
     def init_state(self, prompt: Array, gen_len: int,
-                   with_draft: bool = True) -> DecodeState:
+                   with_draft: bool = True, seed: int = 0) -> DecodeState:
         """Contiguous-layout DecodeState for a uniform-length batch (the
-        engine builds its own paged state from serving.kv_pool)."""
+        engine builds its own paged state from serving.kv_pool). Row b's
+        PRNG key derives from (seed, b)."""
         b, p = prompt.shape
         gen = jnp.zeros((b, gen_len), jnp.int32)
         gen = gen.at[:, :p].set(prompt)
@@ -454,27 +458,31 @@ class SpecDecoder:
             m=jnp.full((b,), p - 1, jnp.int32), done=jnp.zeros((b,), bool),
             tcache=init_caches(self.tc, b, self.max_len),
             dcache=(init_caches(self.dc, b, self.max_len)
-                    if with_draft and self.dc is not None else None))
+                    if with_draft and self.dc is not None else None),
+            temp=jnp.full((b,), self.temperature, jnp.float32),
+            rngs=acceptance.make_row_keys(seed, np.arange(b)))
 
-    def generate_ar(self, prompt: Array, max_new: int):
+    def generate_ar(self, prompt: Array, max_new: int, seed: int = 0):
         b, p = prompt.shape
-        state = self.init_state(prompt, p + max_new + 1, with_draft=False)
+        state = self.init_state(prompt, p + max_new + 1, with_draft=False,
+                                seed=seed)
 
         # AR prefill covers the WHOLE prompt: its last logits commit the
         # first new token, so exactly max_new forwards produce max_new
         # tokens (unlike spec prefills, which stop at prompt[:-1] and let
         # the first verify window re-read x_{P-1})
-        def pre(toks, c):
+        def pre(toks, c, temp, keys):
             logits, c, _ = self._target_forward(
                 toks, c, jnp.zeros((toks.shape[0],), jnp.int32))
-            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), c
+            return _pick_next(logits[:, -1], temp, keys), c
         prefill = self._fn("ar_prefill", pre, donate=(1,))
         step = self._fn("ar_step", self._build_ar_step(), donate=(0,))
 
-        first, tcache = prefill(prompt, state.tcache)
+        next_keys, use = acceptance.split_row_keys(state.rngs)
+        first, tcache = prefill(prompt, state.tcache, state.temp, use)
         state = dataclasses.replace(
             state, gen=state.gen.at[:, p].set(first),
-            n=state.n + 1, tcache=tcache)
+            n=state.n + 1, tcache=tcache, rngs=next_keys)
         for _ in range(max_new - 1):
             state = step(state)
         tokens = state.gen[:, :p + max_new]
@@ -505,20 +513,21 @@ class SpecDecoder:
         mask_id = dc.mask_token_id
         t_has_ssm = _has_ssm(tc)
         d_has_ssm = _has_ssm(dc)
-        temp = self.temperature
 
-        def propose_pard(gen, n, m, dcache, tables, rng):
+        def propose_pard(gen, n, m, dcache, tables, temp, dkeys):
             lg, dcache = self._pard_depth_logits(gen, n, m, dcache, tables)
-            if temp == 0.0:
-                props = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-                qprob = None
-            else:
-                lg = lg.astype(jnp.float32) / temp
-                props = jax.random.categorical(rng, lg).astype(jnp.int32)
-                qprob = jax.nn.softmax(lg, axis=-1)
-            return props, qprob, dcache, 1                  # 1 draft forward
+            scaled = acceptance.scale_logits(lg, temp)      # [B, K, V]
+            greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
 
-        def propose_vsd(gen, n, m, dcache, tables, rng):
+            def samp():
+                s = jax.vmap(lambda kk, row: jax.random.categorical(kk, row))(
+                    dkeys, scaled).astype(jnp.int32)        # [B, K]
+                return jnp.where((temp > 0)[:, None], s, greedy)
+
+            props = jax.lax.cond(jnp.any(temp > 0), samp, lambda: greedy)
+            return props, scaled, dcache, 1                 # 1 draft forward
+
+        def propose_vsd(gen, n, m, dcache, tables, temp, dkeys):
             # call 1: advance committed window, propose token 1
             tok = _draft_window(gen, n, m, k, mask_id)[:, :k + 1]  # reals only
             logits, dcache, _ = self._draft_forward(
@@ -532,15 +541,11 @@ class SpecDecoder:
             snapshot = dcache
             lg_list = [jax.vmap(lambda row, i: row[i])(logits, a - 1)]
             props = []
-            rngs = jax.random.split(rng, k)
             cur_pos = n
             for j in range(k - 1 + 1):
                 lgj = lg_list[-1]
-                if temp == 0.0:
-                    pj = jnp.argmax(lgj, axis=-1).astype(jnp.int32)
-                else:
-                    pj = jax.random.categorical(
-                        rngs[j], lgj.astype(jnp.float32) / temp).astype(jnp.int32)
+                pj = _pick_next(lgj, temp,
+                                acceptance.fold_row_keys(dkeys, j))
                 props.append(pj)
                 if j == k - 1:
                     break
@@ -549,21 +554,21 @@ class SpecDecoder:
                 cur_pos = cur_pos + 1
                 lg_list.append(lgn[:, 0])
             props = jnp.stack(props, axis=1)                # [B, K]
-            if temp == 0.0:
-                qprob = None
-            else:
-                qprob = jax.nn.softmax(
-                    jnp.stack(lg_list, axis=1).astype(jnp.float32) / temp, axis=-1)
-            return props, qprob, snapshot, k                # K draft forwards
+            scaled = acceptance.scale_logits(
+                jnp.stack(lg_list, axis=1), temp)           # [B, K, V]
+            return props, scaled, snapshot, k               # K draft forwards
 
         propose = propose_pard if mode == "pard" else propose_vsd
 
-        def step(state: DecodeState, rng):
+        def step(state: DecodeState):
             gen, n, m, done = state.gen, state.n, state.m, state.done
             tcache, dcache, tables = state.tcache, state.dcache, state.tables
-            rng, r1, r2, _ = jax.random.split(rng, 4)
-            props, qprob, dcache, n_draft = propose(gen, n, m, dcache,
-                                                    tables, r1)
+            temp = state.temp
+            next_keys, use = acceptance.split_row_keys(state.rngs)
+            dkeys = acceptance.fold_row_keys(use, 0)
+            akeys = acceptance.fold_row_keys(use, 1)
+            props, scaled_q, dcache, n_draft = propose(gen, n, m, dcache,
+                                                       tables, temp, dkeys)
 
             # verify window: [last committed, d_1..d_K]
             last = jnp.take_along_axis(gen, (n - 1)[:, None], axis=1)
@@ -571,18 +576,27 @@ class SpecDecoder:
             logits, tcache_new, _ = self._target_forward(
                 vin, tcache, n - 1, tables, collect_ssm=t_has_ssm)
 
-            if temp == 0.0:
-                tgt = jnp.argmax(logits[:, :k], axis=-1).astype(jnp.int32)
-                match = (props == tgt).astype(jnp.int32)
-                accepted = jnp.cumprod(match, axis=1)        # [B, K]
-                a = jnp.sum(accepted, axis=1)                # [B]
-                all_argmax = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                commit_tok = _row_take(all_argmax, a)        # correction/bonus
-            else:
-                p_full = jax.nn.softmax(
-                    logits.astype(jnp.float32) / temp, axis=-1)  # [B, K+1, V]
-                a, accepted, commit_tok = speculative_accept(
-                    p_full, qprob, props, r2)
+            # acceptance (core/acceptance.py): greedy rule for temp == 0
+            # rows, Leviathan sampling for temp > 0 rows — row-selected so
+            # one batch mixes both; the sampled branch (softmaxes + accept
+            # draws) only executes when some row actually samples
+            a_g, acc_g, commit_g = acceptance.greedy_chain_accept(
+                logits, props)
+
+            def samp_accept():
+                qprob = jax.nn.softmax(scaled_q, axis=-1)    # [B, K, V]
+                p_full = acceptance.temp_softmax(logits, temp)
+                return acceptance.leviathan_accept(p_full, qprob, props,
+                                                   akeys)
+
+            a_s, acc_s, commit_s = jax.lax.cond(
+                jnp.any(temp > 0), samp_accept,
+                lambda: (jnp.zeros_like(a_g), jnp.zeros_like(acc_g),
+                         jnp.zeros_like(commit_g)))
+            sampled = temp > 0
+            a = jnp.where(sampled, a_s, a_g)
+            accepted = jnp.where(sampled[:, None], acc_s, acc_g)
+            commit_tok = jnp.where(sampled, commit_s, commit_g)
 
             # committed tokens this iteration: d_1..d_a, then commit_tok
             j = jnp.arange(k + 1)[None, :]
@@ -606,45 +620,52 @@ class SpecDecoder:
             # at positions < n and never read beyond; safe to keep new buffers.
             acc_hist = jnp.sum(
                 jnp.where(done[:, None], 0, accepted), axis=0)  # [K]
+            # chain = one sibling per depth: round 0 holds every accept
+            round_hist = jnp.sum(jnp.where(done, 0, a))[None].astype(jnp.int32)
             new_state = dataclasses.replace(
                 state, gen=gen, n=new_n, m=new_m, tcache=tcache_new,
-                dcache=dcache)
-            return new_state, jnp.where(done, 0, a), acc_hist, n_draft
+                dcache=dcache, rngs=next_keys)
+            return new_state, jnp.where(done, 0, a), acc_hist, round_hist, \
+                n_draft
 
         return step
 
     # --------------------------------------------------------------- tree
     def _build_tree_step(self):
-        """One greedy tree-verification step (DESIGN.md §6).
+        """One tree-verification step (DESIGN.md §6).
 
         Draft: ONE PARD forward (the flat mask window) yields one proposal
-        distribution per depth; the top-b_d tokens per depth populate the
-        static template. Verify: ONE target forward over the packed tree
-        with ancestor-mask attention, logical positions root+depth. Commit:
-        the longest root path whose node tokens each equal the target's
-        argmax at their parent slot — every committed token is the target
-        argmax given its committed prefix, so the output is exactly the AR
-        greedy sequence (losslessness, tested against generate_ar). Only
-        the winning path's KV survives: compact_tree_caches moves it onto
-        the committed positions; losing branches are re-covered by the next
-        window's cache_pos like flat-K rejects.
+        distribution per depth. Greedy rows (state.temp == 0) populate the
+        static template with the top-b_d tokens per depth; sampled rows
+        draw every node i.i.d. from its depth's softmax(logits / temp) and
+        the packed window records (token, q) per node. Verify: ONE target
+        forward over the packed tree with ancestor-mask attention, logical
+        positions root+depth. Commit (core/acceptance.py, row-selected):
+        greedy rows keep the longest root path matching the target argmax —
+        exactly the AR greedy sequence — while sampled rows run multi-round
+        recursive rejection sampling over each surviving node's children,
+        committing tokens distributed exactly as the target model's own
+        sampling distribution. Only the winning path's KV survives:
+        compact_tree_caches moves it onto the committed positions; losing
+        branches are re-covered by the next window's cache_pos like flat-K
+        rejects.
         """
         tree = self.tree
         tc, dc = self.tc, self.dc
-        assert tree is not None and self.temperature == 0.0
+        assert tree is not None
         d, s = tree.max_depth, tree.num_slots
+        max_b = max(tree.branching)
         depth_arr = jnp.asarray(tree.depth)                        # [S]
         anc = jnp.asarray(tree.anc)                                # [S] u32
-        parent_idx = np.asarray(tree.parent[1:], np.int32)         # [N]
-        node_depth_onehot = jnp.asarray(
-            tree.depth[1:, None] == np.arange(1, d + 1)[None, :])  # [N, D]
-        node_slot = jnp.arange(1, s, dtype=jnp.int32)              # [N]
 
-        def step(state: DecodeState, rng):
-            del rng                                  # greedy-only
+        def step(state: DecodeState):
             gen, n, m, done = state.gen, state.n, state.m, state.done
             tcache, dcache, tables = state.tcache, state.dcache, state.tables
+            temp = state.temp
             b = gen.shape[0]
+            next_keys, use = acceptance.split_row_keys(state.rngs)
+            dkeys = acceptance.fold_row_keys(use, 0)
+            akeys = acceptance.fold_row_keys(use, 1)
 
             # draft: depth distributions -> template tokens
             lg, dcache = self._pard_depth_logits(gen, n, m, dcache, tables)
@@ -655,9 +676,20 @@ class SpecDecoder:
                 else:
                     toks.append(jax.lax.top_k(lg[:, di], bd)[1])
             toks = [t.astype(jnp.int32) for t in toks]
-            props = jnp.concatenate(
+            props_g = jnp.concatenate(
                 [toks[tree.depth[si] - 1][:, tree.choice[si]:tree.choice[si] + 1]
                  for si in range(1, s)], axis=1)                   # [B, N]
+            # sampled rows: i.i.d. candidates per node (multi-round
+            # acceptance requires sibling draws from q, not top-k); the
+            # per-node draws only execute when some row actually samples
+            scaled = acceptance.scale_logits(lg, temp)             # [B,D,V]
+            any_sampled = jnp.any(temp > 0)
+            props_s = jax.lax.cond(
+                any_sampled,
+                lambda: acceptance.sample_tree_props(tree, scaled, dkeys),
+                lambda: props_g)
+            sampled = temp > 0
+            props = jnp.where(sampled[:, None], props_s, props_g)
 
             # verify: one target forward over the packed tree
             last = jnp.take_along_axis(gen, (n - 1)[:, None], axis=1)
@@ -668,26 +700,29 @@ class SpecDecoder:
             logits, tcache_new, _ = self._target_forward(
                 vin, tcache, n - 1, tables, positions=positions,
                 tree_info=tinfo)
-            tgt = jnp.argmax(logits, axis=-1).astype(jnp.int32)    # [B, S]
 
-            # longest accepted path: a node survives iff its token matches
-            # the target argmax at its parent AND its parent survives.
-            # Sibling tokens are distinct (top-k ranks), so at most one
-            # node per depth survives.
-            matched = props == tgt[:, parent_idx]                  # [B, N]
-            ok = [jnp.ones((b,), bool)]
-            for si in range(1, s):
-                ok.append(matched[:, si - 1] & ok[tree.parent[si]])
-            path_ok = jnp.stack(ok, axis=1)                        # [B, S]
-            a = jnp.sum(path_ok[:, 1:], axis=1).astype(jnp.int32)  # [B]
-            best_slot = jnp.max(
-                jnp.where(path_ok, jnp.arange(s)[None, :], 0), axis=1)
-            commit_tok = _row_take(tgt, best_slot)     # correction / bonus
+            # acceptance (core/acceptance.py), row-selected greedy/sampled;
+            # the multi-round machinery only executes when a row samples
+            a_g, tok_g, slot_g, commit_g, rank_g = \
+                acceptance.greedy_tree_accept(tree, logits, props)
 
-            # depth-ordered accepted tokens and their source slots
-            pick = path_ok[:, 1:, None] & node_depth_onehot[None]  # [B,N,D]
-            tok_depth = jnp.sum(pick * props[:, :, None], axis=1)  # [B, D]
-            src_slot = jnp.sum(pick * node_slot[None, :, None], axis=1)
+            def samp_accept():
+                p_full = acceptance.temp_softmax(logits, temp)   # [B, S, V]
+                q_depth = jax.nn.softmax(scaled, axis=-1)        # [B, D, V]
+                return acceptance.sampled_tree_accept(
+                    tree, p_full, q_depth, props, akeys)
+
+            a_s, tok_s, slot_s, commit_s, rank_s = jax.lax.cond(
+                any_sampled, samp_accept,
+                lambda: (jnp.zeros_like(a_g), jnp.zeros_like(tok_g),
+                         jnp.zeros_like(slot_g), jnp.zeros_like(commit_g),
+                         jnp.full_like(rank_g, -1)))
+            a = jnp.where(sampled, a_s, a_g)
+            tok_depth = jnp.where(sampled[:, None], tok_s, tok_g)
+            src_slot = jnp.where(sampled[:, None], slot_s, slot_g)
+            commit_tok = jnp.where(sampled, commit_s, commit_g)
+            rank = jnp.where(sampled[:, None], rank_s, rank_g)  # [B, D]
+
             dflt = jnp.arange(1, d + 1, dtype=jnp.int32)[None, :]
             # rejected depths and frozen rows: identity copy (src == dst)
             src_slot = jnp.where((src_slot > 0) & ~done[:, None],
@@ -715,10 +750,16 @@ class SpecDecoder:
                 jnp.where(done[:, None], 0,
                           (a[:, None] > jnp.arange(d)[None, :])
                           .astype(jnp.int32)), axis=0)             # [D]
+            # per-round accept counts: which sibling rank won at each
+            # accepted depth (rank == -1 where the depth rejected)
+            valid = (rank >= 0) & ~done[:, None]                   # [B, D]
+            round_hist = jnp.sum(
+                (rank[:, :, None] == jnp.arange(max_b)[None, None, :])
+                & valid[:, :, None], axis=(0, 1)).astype(jnp.int32)
             new_state = dataclasses.replace(
                 state, gen=gen, n=new_n, m=new_m, tcache=tcache_new,
-                dcache=dcache)
-            return new_state, jnp.where(done, 0, a), hist, 1
+                dcache=dcache, rngs=next_keys)
+            return new_state, jnp.where(done, 0, a), hist, round_hist, 1
 
         return step
 
@@ -734,7 +775,7 @@ class SpecDecoder:
         # must NOT see it twice, so it is excluded here).
         assert p >= 2, "prompts must have at least 2 tokens"
         L = p + max_new + self.window_slack   # room for the final window
-        state = self.init_state(prompt, L)
+        state = self.init_state(prompt, L, seed=seed)
 
         prefill_t = self._fn("sp_prefill_t", lambda t, c: prefill_row(
             self.tp, self.tc, t, None, c, enc_out=self.enc_out), donate=(1,))
@@ -747,27 +788,27 @@ class SpecDecoder:
             step = self._fn(f"tree_step_{self.tree.branching}",
                             self._build_tree_step(), donate=(0,))
         else:
-            step = self._fn(f"spec_step_{mode}_{self.temperature}",
+            step = self._fn(f"spec_step_{mode}",
                             self._build_spec_step(mode), donate=(0,))
 
         state = dataclasses.replace(
             state, tcache=prefill_t(prompt[:, :-1], state.tcache),
             dcache=prefill_d(prompt[:, :-1], state.dcache))
-        rng = jax.random.PRNGKey(seed)
 
         iters, draft_calls, target_calls = 0, 0, 0
         acc_hist = jnp.zeros((k,), jnp.int32)
+        round_hist = None
         acc_total, live_iters = 0, 0
         target_n = p + max_new
         while True:
             live = int(jnp.sum(~state.done))
-            rng, sub = jax.random.split(rng)
-            state, a, hist, n_draft = step(state, sub)
+            state, a, hist, rhist, n_draft = step(state)
             iters += 1
             live_iters += live
             draft_calls += n_draft
             target_calls += 1
             acc_hist = acc_hist + hist
+            round_hist = rhist if round_hist is None else round_hist + rhist
             acc_total += int(jnp.sum(a))
             state = dataclasses.replace(state, done=state.n >= target_n)
             if bool(jnp.all(state.done)) or iters > max_new + 2:
@@ -784,5 +825,6 @@ class SpecDecoder:
             accept_hist=jax.device_get(acc_hist),
             acceptance_rate=acc_total / (live_iters * k),
             mean_accepted=acc_total / live_iters + 1.0,
+            round_hist=jax.device_get(round_hist),
         )
         return tokens, stats

@@ -39,7 +39,13 @@ def main():
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=512)
     ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy); works with "
+                         "--tree via multi-round sibling acceptance")
+    ap.add_argument("--greedy-requests", type=int, default=0, metavar="N",
+                    help="submit the first N requests with temperature 0 "
+                         "(the rest use --temperature): one batch mixes "
+                         "greedy and sampled rows")
     ap.add_argument("--seed", type=int, default=0)
     layout = ap.add_mutually_exclusive_group()
     layout.add_argument("--paged", dest="kv_layout", action="store_const",
@@ -80,14 +86,22 @@ def main():
     corpus = MarkovCorpus(vocab_size=tc.vocab_size, seed=0, determinism=2.0)
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
-    for _ in range(args.requests):
-        eng.submit(corpus.prompts(rng, 1, args.prompt_len)[0], args.max_new)
+    for i in range(args.requests):
+        # per-request temperature: the first --greedy-requests rows decode
+        # greedily even when the engine default samples (mixed batches)
+        temp = 0.0 if i < args.greedy_requests else None
+        eng.submit(corpus.prompts(rng, 1, args.prompt_len)[0], args.max_new,
+                   temperature=temp)
     comps = eng.run()
     wall = time.perf_counter() - t0
 
     total = sum(c.generated for c in comps)
     label = args.mode if tree is None else \
         f"{args.mode}[tree {args.tree}]"
+    if args.temperature:
+        label += f"[T={args.temperature}" + (
+            f",greedy×{args.greedy_requests}]" if args.greedy_requests
+            else "]")
     print(f"\nmode={label} requests={len(comps)} "
           f"generated={total} tokens wall={wall:.2f}s "
           f"throughput={total / wall:.1f} tok/s "

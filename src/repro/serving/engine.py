@@ -24,7 +24,14 @@ Design (all fixed shapes, jit-once):
     passing ``tree=`` (a core.spec_decode.TreeTemplate or a branching list)
     upgrades "pard" to tree-structured drafting with ancestor-mask
     verification (DESIGN.md §6) — allocation slack and the decode step come
-    from the same SpecDecoder, so paged KV invariants are unchanged.
+    from the same SpecDecoder, so paged KV invariants are unchanged;
+  * sampling is per REQUEST: ``submit(..., temperature=)`` overrides the
+    engine default, so one batch mixes greedy (exact argmax) and sampled
+    rows — every mode including tree drafting, whose multi-round sibling
+    acceptance (core/acceptance.py) preserves the target distribution
+    exactly. Each request draws from its own (seed, rid) PRNG key, so
+    sampled output is deterministic per request across batch compositions
+    and KV layouts.
 
 SSM/hybrid targets work unchanged: the spec step's collect_ssm rollback is
 per-row, SSM states stay batch-indexed in both KV layouts, and prefill
@@ -41,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import acceptance
 from ..core.spec_decode import DecodeState, SpecDecoder, prefill_row
 from ..models import init_caches
 from ..models.config import ModelConfig
@@ -52,6 +60,7 @@ class Request:
     rid: int
     prompt: np.ndarray          # 1-D int32
     max_new: int
+    temperature: Optional[float] = None   # None = the engine default
 
 
 @dataclasses.dataclass
@@ -92,6 +101,7 @@ class Engine:
         self.max_batch = max_batch
         self.max_len = max_len
         self.eos_id = eos_id
+        self.temperature = temperature   # default for submit(temperature=None)
         self.dec = SpecDecoder(
             target_params, target_cfg, draft_params, draft_cfg, k=self.k,
             max_len=max_len, temperature=temperature,
@@ -99,7 +109,10 @@ class Engine:
             tree=tree if mode == "pard" else None)
         self.k = self.dec.k          # a tree template overrides k (== depth)
         self.tc, self.dc = target_cfg, draft_cfg
-        self.rng = jax.random.PRNGKey(seed)
+        # per-request sampling keys derive from (seed, rid) at admission, so
+        # a request's sampled trajectory is independent of batch composition
+        # and KV layout (seeded determinism)
+        self._rng_base = jax.random.PRNGKey(seed)
 
         # cache pools + unified decode state
         if self.paged:
@@ -137,7 +150,9 @@ class Engine:
             n=jnp.ones((max_batch,), jnp.int32) * 2,   # dummy-safe
             m=jnp.ones((max_batch,), jnp.int32),
             done=jnp.ones((max_batch,), bool),         # empty slots = done
-            tcache=tcache, dcache=dcache, tables=tables)
+            tcache=tcache, dcache=dcache, tables=tables,
+            temp=jnp.zeros((max_batch,), jnp.float32),
+            rngs=acceptance.make_row_keys(seed, np.arange(max_batch)))
         self._tables_version = self.alloc.version if self.paged else 0
 
         # host state
@@ -151,10 +166,15 @@ class Engine:
         self._ar_step = None
         self._prefill_cache: Dict[Any, Any] = {}
         self.stats = dict(steps=0, committed=0, accepted=0, live_steps=0,
-                          draft_forwards=0, target_forwards=0)
+                          draft_forwards=0, target_forwards=0,
+                          round_hist=None)
 
     # ------------------------------------------------------------- public
-    def submit(self, prompt, max_new: int) -> int:
+    def submit(self, prompt, max_new: int,
+               temperature: Optional[float] = None) -> int:
+        """Queue a request. ``temperature`` overrides the engine default for
+        this request only (0 = greedy) — one batch mixes greedy and sampled
+        rows, each sampling under its own (seed, rid)-derived key."""
         prompt = np.asarray(prompt, np.int32)
         need = len(prompt) + max_new + self.dec.window_slack
         if len(prompt) < 2 or need > self.max_len:
@@ -168,7 +188,7 @@ class Engine:
                 f"prompts also need >= 2 tokens")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, prompt, max_new))
+        self.queue.append(Request(rid, prompt, max_new, temperature))
         return rid
 
     def run(self, max_steps: int = 100000) -> List[Completion]:
@@ -283,12 +303,17 @@ class Engine:
                                 st.dcache, st.tables)
             gen_row = np.zeros((self.max_len,), np.int32)
             gen_row[:p] = req.prompt
+            t = self.temperature if req.temperature is None \
+                else req.temperature
             self.state = dataclasses.replace(
                 st,
                 gen=st.gen.at[slot].set(jnp.asarray(gen_row)),
                 n=st.n.at[slot].set(p),
                 m=st.m.at[slot].set(p - 1),
                 done=st.done.at[slot].set(False),
+                temp=st.temp.at[slot].set(float(t)),
+                rngs=st.rngs.at[slot].set(
+                    jax.random.fold_in(self._rng_base, req.rid)),
                 tcache=tcache, dcache=dcache)
 
     def _step(self):
@@ -309,13 +334,15 @@ class Engine:
                 builder = self.dec._build_spec_step(
                     "pard" if self.mode == "pard" else "vsd")
             self._spec_step = jax.jit(builder, donate_argnums=(0,))
-        self.rng, sub = jax.random.split(self.rng)
         live = int(jnp.sum(~self.state.done))
-        self.state, a, hist, n_draft = self._spec_step(self.state, sub)
+        self.state, a, hist, rhist, n_draft = self._spec_step(self.state)
         self.stats["draft_forwards"] += int(n_draft)
         self.stats["target_forwards"] += 1
         self.stats["accepted"] += int(jnp.sum(a))
         self.stats["live_steps"] += live
+        rh = np.asarray(jax.device_get(rhist))
+        self.stats["round_hist"] = rh if self.stats["round_hist"] is None \
+            else self.stats["round_hist"] + rh
         self.stats["committed"] += int(jnp.sum(a) +
                                        jnp.sum(~self.state.done))
 
@@ -358,7 +385,11 @@ class Engine:
                     wall_submitted=self.slot_submit_t[slot],
                     wall_done=time.perf_counter()))
                 self.slots[slot] = None
+                # temp resets with the slot: a retired sampled request must
+                # not keep forcing later all-greedy batches onto the
+                # sampled lax.cond branch (jnp.any(temp > 0))
                 self.state = dataclasses.replace(
-                    self.state, done=self.state.done.at[slot].set(True))
+                    self.state, done=self.state.done.at[slot].set(True),
+                    temp=self.state.temp.at[slot].set(0.0))
                 if self.paged:
                     self.alloc.release(slot)   # O(1); blocks reusable at once

@@ -1,0 +1,239 @@
+"""Sampled (temperature > 0) tree acceptance: multi-round sibling rejection
+sampling distribution preservation, per-request temperature mixing, seeded
+determinism across calls / KV layouts, per-round accept accounting, and the
+slow statistical CI gate comparing committed-token frequencies against AR
+sampling (the ``sampled-gate`` job runs ``-m slow``)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import acceptance
+from repro.core.spec_decode import SpecDecoder, TreeTemplate
+from repro.models import forward, init_params
+from repro.serving.engine import Engine
+
+TEMP = 0.8
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    tc = get_config("tiny-target")
+    dc = get_config("tiny-draft")
+    tp = init_params(jax.random.PRNGKey(0), tc)
+    dp = init_params(jax.random.PRNGKey(1), dc)
+    return tc, tp, dc, dp
+
+
+def _prompt(vocab, b=2, p=8, seed=2):
+    return jax.random.randint(jax.random.PRNGKey(seed), (b, p), 0, vocab)
+
+
+def _ragged_prompts(n, seed=12):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 512, size=int(t)).astype(np.int32)
+            for t in rng.integers(4, 14, size=n)]
+
+
+@pytest.mark.parametrize("branching", [(3,), (2, 2)])
+def test_multi_round_accept_preserves_distribution(branching):
+    """The RRS identity at the acceptance-function level: for ANY draft q,
+    the first committed token of ``sampled_tree_accept`` is distributed
+    exactly as the target p — the accept rounds, the renormalised residual
+    and the correction sample must all agree for this to hold."""
+    V = 8
+    key = jax.random.PRNGKey(0)
+    p = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (V,)) * 1.5)
+    q = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 2), (V,)) * 1.5)
+    tree = TreeTemplate.from_branching(branching)
+    s, d = tree.num_slots, tree.max_depth
+
+    @jax.jit
+    def one(rng):
+        r1, r2 = jax.random.split(rng)
+        props = jax.random.categorical(
+            r1, jnp.log(q), shape=(1, tree.num_nodes)).astype(jnp.int32)
+        a, toks, _, commit, _ = acceptance.sampled_tree_accept(
+            tree, jnp.broadcast_to(p, (1, s, V)),
+            jnp.broadcast_to(q, (1, d, V)), props, r2[None])
+        return jnp.where(a[0] >= 1, toks[0, 0], commit[0])
+
+    trials = 4000
+    firsts = np.asarray(jax.vmap(one)(
+        jax.random.split(jax.random.PRNGKey(7), trials)))
+    emp = np.bincount(firsts, minlength=V) / trials
+    tv = 0.5 * np.abs(emp - np.asarray(p)).sum()
+    assert tv < 0.05, f"TV distance {tv} (emp={emp}, p={np.asarray(p)})"
+
+
+def test_sampled_tree_seeded_determinism(tiny):
+    """Same seed + same prompt => bit-identical sampled-tree output across
+    two generate_spec calls; a different seed must change something."""
+    tc, tp, dc, dp = tiny
+    dec = SpecDecoder(tp, tc, dp, dc, max_len=256, temperature=TEMP,
+                      tree=TreeTemplate.from_branching((2, 2, 2, 1)))
+    prompt = _prompt(tc.vocab_size)
+    out1, st1 = dec.generate_spec(prompt, 24, mode="pard", seed=3)
+    out2, _ = dec.generate_spec(prompt, 24, mode="pard", seed=3)
+    out3, _ = dec.generate_spec(prompt, 24, mode="pard", seed=4)
+    assert bool(jnp.all(out1 == out2))
+    assert not bool(jnp.all(out1 == out3))
+    assert st1.tokens_generated == 24 * prompt.shape[0]
+    # sampled tokens never escape the real vocab into the padded tail
+    assert int(jnp.max(out1)) < tc.vocab_size
+
+
+def test_sampled_tree_layouts_agree(tiny):
+    """Sampled tree decoding commits identical tokens under the contiguous
+    and block-paged KV layouts: per-request (seed, rid) keys make the
+    sampling trajectory independent of the cache layout."""
+    tc, tp, dc, dp = tiny
+    prompts = _ragged_prompts(4)
+    results = {}
+    for layout in ("contiguous", "paged"):
+        eng = Engine(tp, tc, tp, tc, mode="pard", max_batch=2, max_len=256,
+                     temperature=TEMP, seed=7, kv_layout=layout,
+                     kv_block_size=32,
+                     tree=TreeTemplate.from_branching((2, 2, 2, 1)))
+        rids = {eng.submit(p, 12): i for i, p in enumerate(prompts)}
+        results[layout] = {rids[c.rid]: c.tokens for c in eng.run()}
+    for i in range(len(prompts)):
+        assert np.array_equal(results["contiguous"][i], results["paged"][i])
+
+
+def test_mixed_batch_greedy_rows_exact(tiny):
+    """One batch mixes greedy and sampled requests: greedy rows must stay
+    token-identical to their AR reference even while batched with sampled
+    rows (per-row acceptance selection), and sampled rows must actually
+    sample (differ from the greedy AR sequence)."""
+    tc, tp, dc, dp = tiny
+    prompts = _ragged_prompts(4)
+    refs = {}
+    for i, p in enumerate(prompts):
+        dec = SpecDecoder(tp, tc, tp, tc, k=4, max_len=256)
+        refs[i] = np.asarray(dec.generate_ar(jnp.asarray(p)[None], 12)[0][0])
+    eng = Engine(tp, tc, tp, tc, mode="pard", max_batch=2, max_len=256,
+                 temperature=TEMP, seed=7, kv_layout="paged",
+                 kv_block_size=32,
+                 tree=TreeTemplate.from_branching((2, 2, 2, 1)))
+    rids = {}
+    for i, p in enumerate(prompts):
+        t = 0.0 if i % 2 == 0 else None        # None = engine default (0.8)
+        rids[eng.submit(p, 12, temperature=t)] = i
+    comps = {rids[c.rid]: c.tokens for c in eng.run()}
+    for i in range(len(prompts)):
+        if i % 2 == 0:
+            assert np.array_equal(refs[i], comps[i])
+    assert any(not np.array_equal(refs[i], comps[i])
+               for i in range(len(prompts)) if i % 2 == 1)
+
+
+def test_flat_spec_per_request_temperature(tiny):
+    """The flat (non-tree) PARD path honours per-request temperature too:
+    greedy rows exact vs AR, sampled rows deterministic per seed."""
+    tc, tp, dc, dp = tiny
+    prompts = _ragged_prompts(3, seed=5)
+    refs = [np.asarray(SpecDecoder(tp, tc, tp, tc, k=4, max_len=256)
+                       .generate_ar(jnp.asarray(p)[None], 10)[0][0])
+            for p in prompts]
+
+    def run():
+        eng = Engine(tp, tc, tp, tc, mode="pard", k=4, max_batch=2,
+                     max_len=256, temperature=TEMP, seed=9,
+                     kv_layout="paged", kv_block_size=32)
+        rids = {}
+        for i, p in enumerate(prompts):
+            t = 0.0 if i == 0 else None
+            rids[eng.submit(p, 10, temperature=t)] = i
+        return {rids[c.rid]: c.tokens for c in eng.run()}
+
+    first, second = run(), run()
+    assert np.array_equal(refs[0], first[0])           # greedy row exact
+    for i in range(len(prompts)):                      # seeded determinism
+        assert np.array_equal(first[i], second[i])
+    assert not np.array_equal(refs[1], first[1])       # sampled row samples
+
+
+def test_round_hist_accounting(tiny):
+    """Per-round accept counts: every accepted depth is attributed to
+    exactly one sibling rank, so round_hist sums to the total accepted
+    tokens (greedy and sampled alike)."""
+    tc, tp, _, _ = tiny
+    for temp in (0.0, TEMP):
+        dec = SpecDecoder(tp, tc, tp, tc, max_len=512, temperature=temp,
+                          tree=TreeTemplate.from_branching((2, 2, 2, 1)))
+        prompt = _prompt(tc.vocab_size, b=4, p=10)
+        _, stats = dec.generate_spec(prompt, 40, mode="pard")
+        assert stats.round_hist.shape == (2,)          # max branching
+        assert int(stats.round_hist.sum()) == int(
+            np.asarray(stats.accept_hist).sum())
+        assert int(stats.round_hist.sum()) > 0         # self-draft accepts
+
+
+@pytest.mark.slow
+def test_sampled_tree_matches_ar_distribution(tiny):
+    """The statistical CI gate: N seeded sampled-tree runs on the tiny
+    config vs AR sampling with the same seeds. Two checks (thresholds
+    calibrated so a correct implementation passes with wide margin while a
+    greedy-only or unnormalised-residual implementation fails):
+
+      * pooled committed-token TV distance tree-vs-AR < 0.5 (fair runs
+        measure ~0.32 — the two-empirical-histogram noise floor at this
+        sample count — while a greedy tree measures ~0.91);
+      * first-committed-token chi-squared against the EXACT target
+        distribution, 10 probability-quantile buckets per row, summed over
+        rows: < 68.0 = chi2_0.999(dof=36). Correct runs measure ~31 (the
+        AR control is asserted under the same threshold, so a miscalibrated
+        threshold flags itself); a greedy tree measures ~1750.
+    """
+    tc, tp, dc, dp = tiny
+    B, P, NEW, SEEDS = 4, 8, 8, 40
+    prompt = _prompt(tc.vocab_size, b=B, p=P)
+    tree_dec = SpecDecoder(tp, tc, dp, dc, max_len=256, temperature=TEMP,
+                           tree=TreeTemplate.from_branching((2, 2, 2, 1)))
+    ar_dec = SpecDecoder(tp, tc, dp, dc, k=4, max_len=256, temperature=TEMP)
+
+    logits, _, _ = forward(tp, tc, prompt)
+    p_exact = np.asarray(jax.nn.softmax(
+        logits[:, -1].astype(jnp.float32) / TEMP, axis=-1))
+    V = p_exact.shape[-1]                       # padded vocab
+
+    tree_tok, ar_tok = [], []
+    first_tree = np.zeros((B, V))
+    first_ar = np.zeros((B, V))
+    for s in range(SEEDS):
+        out = np.asarray(
+            tree_dec.generate_spec(prompt, NEW, mode="pard", seed=s)[0])
+        tree_tok.append(out[:, P:])
+        np.add.at(first_tree, (np.arange(B), out[:, P]), 1)
+        out = np.asarray(ar_dec.generate_ar(prompt, NEW, seed=s)[0])
+        ar_tok.append(out[:, P:])
+        np.add.at(first_ar, (np.arange(B), out[:, P]), 1)
+
+    def hist(arr):
+        h = np.bincount(np.asarray(arr).ravel(), minlength=V).astype(float)
+        return h / h.sum()
+
+    tv = 0.5 * np.abs(hist(np.concatenate(tree_tok))
+                      - hist(np.concatenate(ar_tok))).sum()
+    assert tv < 0.5, f"pooled committed-token TV {tv:.3f} >= 0.5"
+
+    def chi2(firsts, nb=10):
+        tot = 0.0
+        for b in range(B):
+            order = np.argsort(-p_exact[b])
+            bucket = np.minimum(
+                (np.cumsum(p_exact[b][order]) * nb).astype(int), nb - 1)
+            bid = np.zeros(V, int)
+            bid[order] = bucket
+            obs = np.zeros(nb)
+            exp = np.zeros(nb)
+            np.add.at(obs, bid, firsts[b])
+            np.add.at(exp, bid, p_exact[b] * SEEDS)
+            tot += float((((obs - exp) ** 2) / np.maximum(exp, 1e-9)).sum())
+        return tot
+
+    c_tree, c_ar = chi2(first_tree), chi2(first_ar)
+    assert c_ar < 68.0, f"AR control chi2 {c_ar:.1f} — threshold miscalibrated"
+    assert c_tree < 68.0, f"sampled-tree first-token chi2 {c_tree:.1f} >= 68"

@@ -46,11 +46,13 @@ def test_template_too_large_rejected():
         TreeTemplate.from_branching((4, 3, 1, 1))      # 41 slots > 32
 
 
-def test_tree_rejects_sampling_and_ssm(tiny):
+def test_tree_rejects_ssm(tiny):
+    """Sampled (temperature > 0) trees are supported now — only SSM targets
+    still reject (no positional rollback for a packed window)."""
     tc, tp, dc, dp = tiny
-    with pytest.raises(NotImplementedError, match="greedy"):
-        SpecDecoder(tp, tc, dp, dc, temperature=0.7,
-                    tree=TreeTemplate.flat(4))
+    dec = SpecDecoder(tp, tc, dp, dc, temperature=0.7,
+                      tree=TreeTemplate.flat(4))
+    assert dec.tree is not None and dec.temperature == 0.7
     sc = get_config("tiny-ssm")
     sp = init_params(jax.random.PRNGKey(3), sc)
     with pytest.raises(NotImplementedError, match="SSM"):
