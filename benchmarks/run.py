@@ -38,10 +38,10 @@ def check_floor(floor: float, section: str = "tree") -> int:
         record = json.load(f)
     tree = record.get(section)
     if not tree:
+        flag = {"tree": "--tree", "tree_sampled": "--tree --temperature 0.8",
+                "tree_adaptive": "--adaptive-tree"}.get(section, "--tree")
         print(f"smoke-floor: no '{section}' section in {common.BENCH_SERVE}"
-              f" — run with --tree"
-              f"{' --temperature 0.8' if section != 'tree' else ''}",
-              file=sys.stderr)
+              f" — run with {flag}", file=sys.stderr)
         return 2
     failed = False
     for name, entry in sorted(tree.items()):
@@ -62,6 +62,11 @@ def main() -> None:
     ap.add_argument("--list", action="store_true")
     ap.add_argument("--tree", action="store_true",
                     help="run the tree-drafting serve benchmark (serve_tree)")
+    ap.add_argument("--adaptive-tree", action="store_true",
+                    help="run the adaptive-template serve benchmark "
+                         "(serve_adaptive; records the 'tree_adaptive' "
+                         "BENCH_serve section and asserts the controller "
+                         "matches the static (2,2,2,1) baseline)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="serve_tree sampling temperature (0 = greedy; > 0 "
                          "records the 'tree_sampled' BENCH_serve section)")
@@ -82,9 +87,11 @@ def main() -> None:
               file=sys.stderr)
 
     names = args.only.split(",") if args.only else \
-        ([] if args.tree else list(tables.ALL))
+        ([] if args.tree or args.adaptive_tree else list(tables.ALL))
     if args.tree and "serve_tree" not in names:
         names.append("serve_tree")
+    if args.adaptive_tree and "serve_adaptive" not in names:
+        names.append("serve_adaptive")
     t0 = time.time()
     print("name,us_per_call,derived")
     for name in names:
@@ -103,7 +110,10 @@ def main() -> None:
     print(f"# total wall: {time.time() - t0:.1f}s", file=sys.stderr)
 
     if args.smoke_floor is not None:
-        section = "tree_sampled" if args.temperature > 0 else "tree"
+        if args.adaptive_tree:
+            section = "tree_adaptive"
+        else:
+            section = "tree_sampled" if args.temperature > 0 else "tree"
         sys.exit(check_floor(args.smoke_floor, section))
 
 

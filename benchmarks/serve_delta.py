@@ -17,7 +17,7 @@ import json
 import sys
 
 # the sections the bench-smoke job re-measures in CI (see ci.yml)
-CI_SECTIONS = ("tree", "tree_sampled")
+CI_SECTIONS = ("tree", "tree_sampled", "tree_adaptive")
 
 
 def load(path):

@@ -410,7 +410,73 @@ def serve_tree(temperature: float = 0.0) -> List:
     return rows
 
 
+def serve_adaptive() -> List:
+    """Adaptive per-request tree templates (DESIGN.md §7) vs the static
+    (2,2,2,1) template that the CI smoke gate tracks: the same ragged
+    self-draft workload through the paged engine, once pinned to the static
+    tree and once with the acceptance-statistics controller selecting and
+    reshaping per request from the default chain/balanced/wide bank. The
+    run is fully deterministic (greedy, fixed seeds), and the controller
+    must END UP no worse than the static shape — asserted here, with both
+    mean accepted lengths recorded under BENCH_serve.json's
+    "tree_adaptive" section so ``benchmarks.run --adaptive-tree
+    --smoke-floor`` can gate the absolute level and serve_delta.py reports
+    the tokens/sec trend."""
+    from repro.core.spec_decode import TemplateBank, TreeTemplate
+    tp, tc = load_model("tiny-target")
+    rng = np.random.default_rng(0)
+    reqs = [np.asarray(common.corpus().prompts(rng, 1, int(n_tok))[0])
+            for n_tok in rng.integers(8, 24, size=8)]
+    max_len, max_new = 512, 32
+
+    def run_engine(tree, adaptive):
+        eng = Engine(tp, tc, tp, tc, mode="pard", k=TREE_K, max_batch=2,
+                     max_len=max_len, kv_layout="paged", kv_block_size=64,
+                     tree=tree, adaptive_tree=adaptive)
+        for r in reqs:                          # warm pass: compile steps
+            eng.submit(r, max_new)
+        eng.run()
+        # every recorded stat must cover the TIMED pass only (the warm
+        # pass still seeds the controller's global EWMA, as serving would)
+        eng.stats.update(accepted=0, live_steps=0, tree_switches=0,
+                         tree_hist=np.zeros_like(eng.stats["tree_hist"]))
+        for r in reqs:
+            eng.submit(r, max_new)
+        t0 = time.perf_counter()
+        comps = eng.run()
+        wall = time.perf_counter() - t0
+        tps = sum(c.generated for c in comps[len(reqs):]) / wall
+        return tps, eng.mean_accepted(), eng
+
+    rows, record = [], {}
+    s_tps, s_acc, _ = run_engine(
+        TreeTemplate.from_branching((2, 2, 2, 1)), False)
+    rows.append(("serve_adaptive.static-2x2x2x1", 1e6 / s_tps,
+                 f"tps={s_tps:.1f};mean_accepted={s_acc:.3f}"))
+    record["static-2x2x2x1"] = dict(tokens_per_sec=round(s_tps, 2),
+                                    mean_accepted=round(s_acc, 4))
+
+    bank = TemplateBank.default(TREE_K)
+    a_tps, a_acc, eng = run_engine(bank, True)
+    hist = [int(h) for h in eng.stats["tree_hist"]]
+    rows.append(("serve_adaptive.adaptive", 1e6 / a_tps,
+                 f"tps={a_tps:.1f};mean_accepted={a_acc:.3f};"
+                 f"switches={eng.stats['tree_switches']};"
+                 f"hist={'/'.join(map(str, hist))}"))
+    record["adaptive"] = dict(
+        tokens_per_sec=round(a_tps, 2), mean_accepted=round(a_acc, 4),
+        bank=[list(t.branching) for t in bank.templates],
+        live_steps_per_template=hist,
+        switches=int(eng.stats["tree_switches"]))
+    assert a_acc >= s_acc, (
+        f"adaptive tree mean accepted fell below the static (2,2,2,1) "
+        f"baseline ({a_acc:.3f} < {s_acc:.3f})")
+    common.update_bench_serve("tree_adaptive", record)
+    emit(rows, "serve_adaptive", persist=False)
+    return rows
+
+
 ALL = {"table1": table1, "table2": table2, "table3": table3,
        "table4": table4, "table5": table5, "table6": table6,
        "fig6a": fig6a, "fig6b": fig6b, "serve": serve,
-       "serve_tree": serve_tree}
+       "serve_tree": serve_tree, "serve_adaptive": serve_adaptive}

@@ -163,47 +163,73 @@ def tree_child_map(tree) -> np.ndarray:
     return cm
 
 
-def greedy_tree_accept(tree, logits: Array, props: Array):
-    """Greedy tree verification (DESIGN.md §6): a node survives iff its
-    token equals the target argmax at its parent slot AND its parent
-    survives; sibling tokens are distinct top-k ranks, so at most one node
-    per depth survives.
+def _bcast_rows(arr, b):
+    """Template metadata [S, ...] -> per-row [B, S, ...]."""
+    a = jnp.asarray(arr)
+    return jnp.broadcast_to(a[None], (b,) + a.shape)
 
-    logits [B, S, V] at each window slot, props [B, N] node tokens.
+
+def greedy_tree_accept_rows(logits: Array, props: Array, parent: Array,
+                            depth: Array, choice: Array, anc: Array,
+                            nslots: Array, d_max: int):
+    """Greedy tree verification with a PER-ROW template (DESIGN.md §7): a
+    node survives iff its token equals the target argmax at its parent slot
+    AND its parent survives; sibling tokens are distinct top-k ranks, so at
+    most one node per depth survives. Survival is evaluated through the
+    packed ancestor bitmask — slot s survives iff every ancestor-or-self
+    bit is also a "matched" bit — so rows with different tree shapes share
+    one fully vectorised decision.
+
+    logits [B, S, V] at each window slot; props [B, S-1] node tokens;
+    parent / depth / choice [B, S] int32 and anc [B, S] uint32 are the
+    row's template metadata (padded slots past ``nslots[b]`` carry zeros
+    and can never be accepted); d_max is the static bank depth.
     Returns (a [B], tok_depth [B, D], src_slot [B, D] — accepted node's
     window slot per depth, 0 where rejected —, commit_tok [B],
     rank [B, D] — accepted sibling rank per depth, -1 where rejected).
     """
-    b = props.shape[0]
-    d, s = tree.max_depth, tree.num_slots
-    parent_idx = np.asarray(tree.parent[1:], np.int32)             # [N]
-    node_depth_onehot = jnp.asarray(
-        tree.depth[1:, None] == np.arange(1, d + 1)[None, :])      # [N, D]
-    node_slot = jnp.arange(1, s, dtype=jnp.int32)                  # [N]
-    choice = jnp.asarray(tree.choice)                              # [S]
-
+    s = anc.shape[1]
+    slot_ids = jnp.arange(s, dtype=jnp.int32)
     tgt = jnp.argmax(logits, axis=-1).astype(jnp.int32)            # [B, S]
-    matched = props == tgt[:, parent_idx]                          # [B, N]
-    ok = [jnp.ones((b,), bool)]
-    for si in range(1, s):
-        ok.append(matched[:, si - 1] & ok[tree.parent[si]])
-    path_ok = jnp.stack(ok, axis=1)                                # [B, S]
-    a = jnp.sum(path_ok[:, 1:], axis=1).astype(jnp.int32)          # [B]
-    best_slot = jnp.max(
-        jnp.where(path_ok, jnp.arange(s)[None, :], 0), axis=1)
+    # node tokens must match the target argmax at their PARENT slot
+    par_tok = jnp.take_along_axis(tgt, jnp.maximum(parent[:, 1:], 0), axis=1)
+    node_valid = slot_ids[None, 1:] < nslots[:, None]
+    matched = (props == par_tok) & node_valid                      # [B, N]
+    bits = jnp.sum(
+        jnp.where(matched,
+                  jnp.uint32(1) << slot_ids[1:].astype(jnp.uint32)[None],
+                  jnp.uint32(0)), axis=1) | jnp.uint32(1)          # [B]
+    path_ok = ((anc & ~bits[:, None]) == 0) \
+        & (slot_ids[None] < nslots[:, None])                       # [B, S]
+    a = jnp.sum(path_ok[:, 1:], axis=1).astype(jnp.int32)
+    best_slot = jnp.max(jnp.where(path_ok, slot_ids[None], 0), axis=1)
     commit_tok = _row_take(tgt, best_slot)         # correction / bonus
 
-    pick = path_ok[:, 1:, None] & node_depth_onehot[None]          # [B,N,D]
+    darange = jnp.arange(1, d_max + 1, dtype=jnp.int32)
+    pick = path_ok[:, 1:, None] & (depth[:, 1:, None] == darange[None, None])
     tok_depth = jnp.sum(pick * props[:, :, None], axis=1)          # [B, D]
-    src_slot = jnp.sum(pick * node_slot[None, :, None], axis=1)    # [B, D]
-    rank = jnp.where(src_slot > 0, choice[src_slot], -1)
+    src_slot = jnp.sum(pick * slot_ids[None, 1:, None], axis=1)    # [B, D]
+    rank = jnp.where(src_slot > 0,
+                     jnp.take_along_axis(choice, src_slot, axis=1), -1)
     return a, tok_depth.astype(jnp.int32), src_slot.astype(jnp.int32), \
         commit_tok, rank.astype(jnp.int32)
 
 
-def sampled_tree_accept(tree, p_full: Array, q_depth: Array, props: Array,
-                        keys: Array):
-    """Multi-round recursive rejection sampling over the candidate tree.
+def greedy_tree_accept(tree, logits: Array, props: Array):
+    """Single-template convenience wrapper around the per-row rule (every
+    row shares ``tree``). Kept for callers without a template bank."""
+    b = props.shape[0]
+    nslots = jnp.full((b,), tree.num_slots, jnp.int32)
+    return greedy_tree_accept_rows(
+        logits, props, _bcast_rows(tree.parent, b),
+        _bcast_rows(tree.depth, b), _bcast_rows(tree.choice, b),
+        _bcast_rows(tree.anc, b), nslots, tree.max_depth)
+
+
+def sampled_tree_accept_rows(p_full: Array, q_depth: Array, props: Array,
+                             child_map: Array, keys: Array, d_max: int,
+                             max_b: int):
+    """Multi-round recursive rejection sampling with a PER-ROW template.
 
     At each depth the surviving node's children are tried in sibling order;
     round c accepts child token x with probability min(1, r(x)/q_d(x)),
@@ -211,21 +237,22 @@ def sampled_tree_accept(tree, p_full: Array, q_depth: Array, props: Array,
     after every rejected sibling to norm(max(r - q_d, 0)). Children must be
     i.i.d. samples from q_d (the draft's depth-d proposal distribution) —
     that, plus the renormalisation, makes every committed token exactly
-    target-distributed (see module docstring).
+    target-distributed (see module docstring). Rows whose template offers
+    fewer than ``max_b`` siblings at a depth simply skip the extra rounds
+    (no accept, no residual update — exactness is per offered round, so a
+    masked round leaves the induction untouched); a row whose surviving
+    node has no children at all commits a token from the unmodified target
+    distribution, which coincides with the bonus draw.
 
-    tree:    TreeTemplate (static host metadata)
-    p_full:  [B, S, V] target probabilities at each window slot (temp-scaled)
-    q_depth: [B, D, V] draft proposal distribution per depth (temp-scaled)
-    props:   [B, N]    node tokens (i.i.d. per node from its depth's q)
-    keys:    [B, 2]    per-row PRNG keys (this step's acceptance draws;
-             independent of the stream that sampled ``props``)
+    p_full:    [B, S, V]     target probabilities per window slot (scaled)
+    q_depth:   [B, D, V]     draft proposal distribution per depth (scaled)
+    props:     [B, S-1]      node tokens (i.i.d. per node from its depth's q)
+    child_map: [B, S, max_b] window slot of cur's child at rank c (0=absent)
+    keys:      [B, 2]        per-row PRNG keys (this step's draws)
     Returns (a, tok_depth, src_slot, commit_tok, rank) shaped exactly like
-    ``greedy_tree_accept`` so the step can select per row between them.
+    ``greedy_tree_accept_rows`` so the step can select per row between them.
     """
     b = props.shape[0]
-    d_max = tree.max_depth
-    cm = jnp.asarray(tree_child_map(tree))                         # [S, mb]
-
     cur = jnp.zeros((b,), jnp.int32)          # surviving slot (root first)
     alive = jnp.ones((b,), bool)
     a = jnp.zeros((b,), jnp.int32)
@@ -235,28 +262,30 @@ def sampled_tree_accept(tree, p_full: Array, q_depth: Array, props: Array,
     for d in range(1, d_max + 1):
         q_d = q_depth[:, d - 1]                                    # [B, V]
         r = _row_take(p_full, cur)                                 # [B, V]
+        cm_cur = _row_take(child_map, cur)                         # [B, mb]
         found = jnp.zeros((b,), bool)
         sel_slot = jnp.zeros((b,), jnp.int32)
         sel_tok = jnp.zeros((b,), jnp.int32)
         sel_rank = jnp.full((b,), -1, jnp.int32)
-        for c in range(tree.branching[d - 1]):
-            slot_c = cm[cur, c]                                    # [B]
+        for c in range(max_b):
+            slot_c = cm_cur[:, c]                                  # [B]
+            has = slot_c > 0           # row offers a rank-c sibling here
             x = jnp.take_along_axis(
                 props, jnp.maximum(slot_c - 1, 0)[:, None], axis=1)[:, 0]
             qx = jnp.take_along_axis(q_d, x[:, None], axis=1)[:, 0]
             rx = jnp.take_along_axis(r, x[:, None], axis=1)[:, 0]
             u = row_uniform(fold_row_keys(keys, ctr))
             ctr += 1
-            acc = (u * qx < rx) & alive & ~found
+            acc = (u * qx < rx) & alive & ~found & has
             sel_slot = jnp.where(acc, slot_c, sel_slot)
             sel_tok = jnp.where(acc, x, sel_tok)
             sel_rank = jnp.where(acc, c, sel_rank)
             found = found | acc
             # renormalised clipped residual for the next round (rows that
-            # accepted stop updating; their r is never read again)
+            # accepted — or were not offered this round — stop updating)
             nr = jnp.maximum(r - q_d, 0.0)
             nr = nr / jnp.maximum(jnp.sum(nr, axis=-1, keepdims=True), _EPS)
-            r = jnp.where(found[:, None], r, nr)
+            r = jnp.where((found | ~has)[:, None], r, nr)
         # all siblings rejected: the correction token comes from the final
         # residual, and the row stops here
         corr = row_categorical(fold_row_keys(keys, ctr),
@@ -279,18 +308,32 @@ def sampled_tree_accept(tree, p_full: Array, q_depth: Array, props: Array,
         jnp.stack(ranks, axis=1)
 
 
+def sampled_tree_accept(tree, p_full: Array, q_depth: Array, props: Array,
+                        keys: Array):
+    """Single-template convenience wrapper around the per-row rule (every
+    row shares ``tree``). Kept for callers without a template bank."""
+    b = props.shape[0]
+    cm = _bcast_rows(tree_child_map(tree), b)
+    return sampled_tree_accept_rows(p_full, q_depth, props, cm, keys,
+                                    tree.max_depth, max(tree.branching))
+
+
+def sample_tree_props_rows(scaled_logits: Array, node_depth: Array,
+                           keys: Array) -> Array:
+    """i.i.d. draft candidates for ``sampled_tree_accept_rows``: node i
+    draws from softmax(scaled_logits[:, node_depth[b, i] - 1]) under its
+    own per-(row, node) key. scaled_logits [B, D, V] (already
+    temperature-divided); node_depth [B, N] int32 (padded slots carry 0 and
+    draw an unused depth-1 sample); keys [B, 2]. Returns props [B, N]."""
+    out = []
+    for i in range(node_depth.shape[1]):
+        lg = _row_take(scaled_logits, jnp.maximum(node_depth[:, i] - 1, 0))
+        out.append(row_categorical(fold_row_keys(keys, i), lg))
+    return jnp.stack(out, axis=1)
+
+
 def sample_tree_props(tree, scaled_logits: Array, keys: Array) -> Array:
-    """i.i.d. draft candidates for ``sampled_tree_accept``: node s at depth
-    d draws from softmax(scaled_logits[:, d-1]) under its own per-(row,
-    node) key. scaled_logits [B, D, V] (already temperature-divided);
-    keys [B, 2]. Returns props [B, N] int32."""
-    node_depth = np.asarray(tree.depth[1:], np.int32)
-
-    def row(k, lg_row):                         # lg_row [D, V]
-        out = []
-        for i, nd in enumerate(node_depth):
-            out.append(jax.random.categorical(
-                jax.random.fold_in(k, i), lg_row[nd - 1]))
-        return jnp.stack(out)
-
-    return jax.vmap(row)(keys, scaled_logits).astype(jnp.int32)
+    """Single-template wrapper around ``sample_tree_props_rows``."""
+    b = scaled_logits.shape[0]
+    return sample_tree_props_rows(
+        scaled_logits, _bcast_rows(tree.depth[1:].astype(np.int32), b), keys)

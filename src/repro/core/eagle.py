@@ -105,7 +105,8 @@ class EagleDecoder:
     def _build_step(self):
         k, cfg = self.k, self.cfg
         from ..models import init_caches
-        from .spec_decode import _row_take, _row_write
+        from .acceptance import _row_take
+        from .spec_decode import _row_write
 
         def step(gen, n, done, tcache, ecache, feat_prev):
             # ---- draft: K sequential head passes --------------------------

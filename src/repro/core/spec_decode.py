@@ -23,14 +23,18 @@ flight at inference time.
 VSD draft: the same window advances the committed tokens, then K-1 extra
 single-token AR calls — K draft forwards/iteration vs PARD's 1 (Eq. 3 vs 4).
 
-Tree drafting (``TreeTemplate``): instead of keeping only the per-depth
-argmax chain, the SAME single draft forward populates a static top-k
-candidate tree (top-b_d tokens at depth d), and verification runs one
-target forward over the packed tree with ancestor-mask attention
+Tree drafting (``TreeTemplate`` / ``TemplateBank``): instead of keeping
+only the per-depth argmax chain, the SAME single draft forward populates a
+static top-k candidate tree (top-b_d tokens at depth d), and verification
+runs one target forward over the packed tree with ancestor-mask attention
 (kernels/tree_attention.py, DESIGN.md §6). Greedy verification commits the
 longest root path matching the target argmax — still exactly lossless vs
 AR — and raises accepted tokens per target forward whenever the target's
-argmax lands in the draft's top-b_d but not its top-1.
+argmax lands in the draft's top-b_d but not its top-1. The tree shape is
+PER ROW (DESIGN.md §7): ``DecodeState.tree_idx`` selects each row's
+template from a ``TemplateBank`` inside the one jitted step, so a batch
+mixes chains and wide trees and the serving engine reshapes a request
+between windows from its acceptance statistics.
 
 Greedy (temperature 0) verification is exactly lossless vs AR decoding.
 Temperature > 0 is PER ROW (``DecodeState.temp``; one batch mixes greedy
@@ -214,6 +218,105 @@ class TreeTemplate:
         return all(b == 1 for b in self.branching)
 
 
+@dataclasses.dataclass(frozen=True)
+class TemplateBank:
+    """Static bank of candidate-tree templates selectable PER ROW
+    (DESIGN.md §7).
+
+    All templates share one depth K (pad branchings with trailing 1s), so
+    the single PARD draft window — whose length is 2K — serves every row.
+    Slot metadata is padded to the widest template (``max_slots``) and
+    stacked, and the jitted tree step gathers each row's arrays by
+    ``DecodeState.tree_idx``: one compiled step serves a batch mixing tree
+    shapes. Padded slots carry zeroed metadata (anc == 0, depth == 0) and
+    are additionally masked by ``nslots``, so they can never be accepted;
+    their KV writes land beyond the row's meaningful window and are
+    re-covered like any rejected branch.
+    """
+    templates: Tuple[TreeTemplate, ...]
+    parent: Any      # np [T, S] int32 (padded slots 0; slot 0 = -1)
+    depth: Any       # np [T, S] int32 (padded slots 0)
+    choice: Any      # np [T, S] int32
+    anc: Any         # np [T, S] uint32 (padded slots 0)
+    child_map: Any   # np [T, S, MB] int32 (0 = absent child)
+    nslots: Any      # np [T] int32
+
+    @staticmethod
+    def from_templates(templates) -> "TemplateBank":
+        templates = tuple(
+            t if isinstance(t, TreeTemplate) else
+            TreeTemplate.from_branching(t) for t in templates)
+        assert templates, "a template bank needs at least one template"
+        depths = {t.max_depth for t in templates}
+        assert len(depths) == 1, (
+            "bank templates must share one depth (pad branchings with "
+            f"trailing 1s): {[t.branching for t in templates]}")
+        n_t = len(templates)
+        s = max(t.num_slots for t in templates)
+        mb = max(max(t.branching) for t in templates)
+        parent = np.zeros((n_t, s), np.int32)
+        depth = np.zeros((n_t, s), np.int32)
+        choice = np.zeros((n_t, s), np.int32)
+        anc = np.zeros((n_t, s), np.uint32)
+        cmap = np.zeros((n_t, s, mb), np.int32)
+        for i, t in enumerate(templates):
+            ns = t.num_slots
+            parent[i, :ns] = t.parent
+            depth[i, :ns] = t.depth
+            choice[i, :ns] = t.choice
+            anc[i, :ns] = t.anc
+            cm = acceptance.tree_child_map(t)
+            cmap[i, :ns, :cm.shape[1]] = cm
+        return TemplateBank(
+            templates=templates, parent=parent, depth=depth, choice=choice,
+            anc=anc, child_map=cmap,
+            nslots=np.asarray([t.num_slots for t in templates], np.int32))
+
+    @staticmethod
+    def default(k: int = 4) -> "TemplateBank":
+        """The canonical three-shape bank at depth ``k``: a flat-K chain
+        (deep, no hedging), a balanced tree and a shallow-wide tree — the
+        shapes the adaptive controller arbitrates between. Widths shrink
+        until the 32-slot window cap admits them."""
+        def fits(br):
+            slots, width = 1, 1
+            for x in br:
+                width *= x
+                slots += width
+            return slots <= 32
+
+        shapes = [(1,) * k]
+        for heads in [[(2, 2, 2), (2, 2), (2,)],
+                      [(4, 2), (3, 2), (3,), (2, 2, 2), (2, 2)]]:
+            for head in heads:
+                br = (head + (1,) * (k - len(head)))[:k]
+                if len(head) <= k and fits(br) and br not in shapes:
+                    shapes.append(br)
+                    break
+        return TemplateBank.from_templates(shapes)
+
+    def __len__(self) -> int:
+        return len(self.templates)
+
+    @property
+    def max_depth(self) -> int:
+        return self.templates[0].max_depth
+
+    @property
+    def max_slots(self) -> int:
+        return int(self.parent.shape[1])
+
+    @property
+    def max_branching(self) -> int:
+        return int(self.child_map.shape[2])
+
+    @property
+    def key(self) -> str:
+        """Stable id for jit caches / labels."""
+        return "|".join("x".join(map(str, t.branching))
+                        for t in self.templates)
+
+
 def compact_tree_caches(cfg: ModelConfig, caches, src_pos, dst_start, depth,
                         tables, block_size):
     """Copy the winning tree path's KV onto the committed positions.
@@ -295,6 +398,12 @@ class DecodeState:
                      once, so a row's sampling stream depends only on its
                      own seed and its step count (seeded determinism across
                      batch compositions and KV layouts).
+      tree_idx [B]   per-row template index into the decoder's
+                     ``TemplateBank`` (None when tree drafting is off): the
+                     tree step gathers each row's packed tree metadata by
+                     this index, so one batch mixes tree shapes and the
+                     serving engine's adaptive controller reshapes a
+                     request between windows by a single scatter.
     """
     gen: Array
     n: Array
@@ -305,6 +414,7 @@ class DecodeState:
     tables: Optional[Array] = None
     temp: Optional[Array] = None
     rngs: Optional[Array] = None
+    tree_idx: Optional[Array] = None
 
 
 # every field is pytree data (derived from the dataclass so new fields can
@@ -370,17 +480,22 @@ class SpecDecoder:
         self.tp, self.tc = target_params, target_cfg
         self.dp, self.dc = draft_params, draft_cfg
         if tree is not None:
-            if not isinstance(tree, TreeTemplate):
-                tree = TreeTemplate.from_branching(tree)
+            # normalise: branching iterable / TreeTemplate / TemplateBank
+            # all become a TemplateBank — ONE tree-step implementation
+            # serves static single-template and per-row adaptive decoding
+            if not isinstance(tree, TemplateBank):
+                if not isinstance(tree, TreeTemplate):
+                    tree = TreeTemplate.from_branching(tree)
+                tree = TemplateBank.from_templates((tree,))
             if _has_ssm(target_cfg):
                 raise NotImplementedError(
                     "tree verification relies on positional KV rollback; "
                     "an SSM/hybrid target cannot roll back a packed tree "
                     "window (DESIGN.md §6)")
             # the draft window must produce one proposal distribution per
-            # tree depth: K is the template's depth, whatever was passed
+            # tree depth: K is the bank's depth, whatever was passed
             k = tree.max_depth
-        self.tree = tree
+        self.tree: Optional[TemplateBank] = tree
         self.k = k
         self.max_len = max_len
         self.temperature = temperature
@@ -397,10 +512,30 @@ class SpecDecoder:
     @property
     def window_slack(self) -> int:
         """Positions a step may touch beyond the committed count: the 2K
-        draft mask window vs the verify window (K+1 flat, num_slots for a
-        tree), +2 slack. Sizes cache rows and paged allocations (I3)."""
-        verify = self.tree.num_slots if self.tree is not None else self.k + 1
+        draft mask window vs the verify window (K+1 flat, the bank's widest
+        template for a tree), +2 slack. Sizes cache rows and contiguous
+        allocations; the paged engine allocates per request via
+        ``row_slack`` instead (I3)."""
+        verify = self.tree.max_slots if self.tree is not None else self.k + 1
         return max(2 * self.k, verify) + 2
+
+    def row_slack(self, tmpl_idx: int) -> int:
+        """Window slack for ONE request pinned to bank template
+        ``tmpl_idx``: its own verify window instead of the bank-wide
+        widest. Paged allocations sized with this still satisfy I3 — the
+        batch writes the widest window, but a row's writes past its own
+        template land in the garbage block and are never read (the row's
+        ancestor masks and acceptance only cover its own slots)."""
+        assert self.tree is not None, "row_slack applies to tree drafting"
+        return max(2 * self.k, int(self.tree.nslots[tmpl_idx])) + 2
+
+    @property
+    def min_row_slack(self) -> int:
+        """The smallest per-request slack any bank template needs (the
+        admission feasibility bound for ``Engine.submit``)."""
+        if self.tree is None:
+            return self.window_slack
+        return min(self.row_slack(i) for i in range(len(self.tree)))
 
     # -- jitted primitives ------------------------------------------------
     def _fn(self, name, builder, donate=()):
@@ -460,7 +595,9 @@ class SpecDecoder:
             dcache=(init_caches(self.dc, b, self.max_len)
                     if with_draft and self.dc is not None else None),
             temp=jnp.full((b,), self.temperature, jnp.float32),
-            rngs=acceptance.make_row_keys(seed, np.arange(b)))
+            rngs=acceptance.make_row_keys(seed, np.arange(b)),
+            tree_idx=(jnp.zeros((b,), jnp.int32)
+                      if self.tree is not None else None))
 
     def generate_ar(self, prompt: Array, max_new: int, seed: int = 0):
         b, p = prompt.shape
@@ -622,63 +759,84 @@ class SpecDecoder:
                 jnp.where(done[:, None], 0, accepted), axis=0)  # [K]
             # chain = one sibling per depth: round 0 holds every accept
             round_hist = jnp.sum(jnp.where(done, 0, a))[None].astype(jnp.int32)
+            # per-row accepted rank (chain: rank 0 everywhere it accepted;
+            # -1 rejected/frozen) — the adaptive tree controller's signal,
+            # shaped like the tree step's so callers share one unpacking
+            rank = jnp.where(
+                (jnp.arange(1, k + 1)[None, :] <= a[:, None])
+                & ~done[:, None], 0, -1).astype(jnp.int32)
             new_state = dataclasses.replace(
                 state, gen=gen, n=new_n, m=new_m, tcache=tcache_new,
                 dcache=dcache, rngs=next_keys)
             return new_state, jnp.where(done, 0, a), acc_hist, round_hist, \
-                n_draft
+                rank, n_draft
 
         return step
 
     # --------------------------------------------------------------- tree
     def _build_tree_step(self):
-        """One tree-verification step (DESIGN.md §6).
+        """One tree-verification step over PER-ROW templates (DESIGN.md
+        §6/§7).
 
-        Draft: ONE PARD forward (the flat mask window) yields one proposal
-        distribution per depth. Greedy rows (state.temp == 0) populate the
-        static template with the top-b_d tokens per depth; sampled rows
-        draw every node i.i.d. from its depth's softmax(logits / temp) and
-        the packed window records (token, q) per node. Verify: ONE target
-        forward over the packed tree with ancestor-mask attention, logical
-        positions root+depth. Commit (core/acceptance.py, row-selected):
-        greedy rows keep the longest root path matching the target argmax —
-        exactly the AR greedy sequence — while sampled rows run multi-round
-        recursive rejection sampling over each surviving node's children,
-        committing tokens distributed exactly as the target model's own
-        sampling distribution. Only the winning path's KV survives:
-        compact_tree_caches moves it onto the committed positions; losing
-        branches are re-covered by the next window's cache_pos like flat-K
-        rejects.
+        Each row's packed tree metadata (ancestor bitmasks, parent/depth/
+        choice arrays, child map, slot count) is gathered from the static
+        ``TemplateBank`` by ``state.tree_idx``, so one jitted step serves a
+        batch mixing tree shapes — a bank of one reproduces the old static
+        behaviour exactly. Draft: ONE PARD forward (the flat mask window)
+        yields one proposal distribution per depth. Greedy rows
+        (state.temp == 0) populate their template with the top-b_d tokens
+        per depth; sampled rows draw every node i.i.d. from its depth's
+        softmax(logits / temp). Verify: ONE target forward over the packed
+        tree with ancestor-mask attention, logical positions root+depth;
+        per-row window lengths (``TreeAttnInfo.win_len``) bound each row's
+        KV sweep to its own template. Commit (core/acceptance.py,
+        row-selected): greedy rows keep the longest root path matching the
+        target argmax — exactly the AR greedy sequence — while sampled rows
+        run multi-round recursive rejection sampling over each surviving
+        node's children, committing tokens distributed exactly as the
+        target model's own sampling distribution. Only the winning path's
+        KV survives: compact_tree_caches moves it onto the committed
+        positions; losing branches (and slots past a row's template) are
+        re-covered by the next window's cache_pos like flat-K rejects.
         """
-        tree = self.tree
+        bank = self.tree
         tc, dc = self.tc, self.dc
-        assert tree is not None
-        d, s = tree.max_depth, tree.num_slots
-        max_b = max(tree.branching)
-        depth_arr = jnp.asarray(tree.depth)                        # [S]
-        anc = jnp.asarray(tree.anc)                                # [S] u32
+        assert bank is not None
+        d, s = bank.max_depth, bank.max_slots
+        max_b = bank.max_branching
+        bank_parent = jnp.asarray(bank.parent)                     # [T, S]
+        bank_depth = jnp.asarray(bank.depth)
+        bank_choice = jnp.asarray(bank.choice)
+        bank_anc = jnp.asarray(bank.anc)                           # [T, S]
+        bank_cmap = jnp.asarray(bank.child_map)                    # [T,S,MB]
+        bank_nslots = jnp.asarray(bank.nslots)                     # [T]
 
         def step(state: DecodeState):
             gen, n, m, done = state.gen, state.n, state.m, state.done
             tcache, dcache, tables = state.tcache, state.dcache, state.tables
             temp = state.temp
-            b = gen.shape[0]
             next_keys, use = acceptance.split_row_keys(state.rngs)
             dkeys = acceptance.fold_row_keys(use, 0)
             akeys = acceptance.fold_row_keys(use, 1)
 
-            # draft: depth distributions -> template tokens
+            # per-row template metadata, gathered from the static bank
+            sel = state.tree_idx
+            parent, depth = bank_parent[sel], bank_depth[sel]      # [B, S]
+            choice, anc = bank_choice[sel], bank_anc[sel]
+            cmap, nslots = bank_cmap[sel], bank_nslots[sel]
+            node_depth = depth[:, 1:]                              # [B, N]
+
+            # draft: depth distributions -> per-row template tokens. One
+            # top-max_b per depth covers every template's ranks; lax.top_k
+            # and argmax share lowest-index tie-breaking, so rank 0 IS the
+            # flat path's argmax (degenerate-chain identity).
             lg, dcache = self._pard_depth_logits(gen, n, m, dcache, tables)
-            toks = []
-            for di, bd in enumerate(tree.branching):
-                if bd == 1:      # match the flat path's argmax exactly
-                    toks.append(jnp.argmax(lg[:, di], axis=-1)[:, None])
-                else:
-                    toks.append(jax.lax.top_k(lg[:, di], bd)[1])
-            toks = [t.astype(jnp.int32) for t in toks]
-            props_g = jnp.concatenate(
-                [toks[tree.depth[si] - 1][:, tree.choice[si]:tree.choice[si] + 1]
-                 for si in range(1, s)], axis=1)                   # [B, N]
+            topk = jax.lax.top_k(lg, max_b)[1].astype(jnp.int32)   # [B,D,MB]
+            di = jnp.maximum(node_depth - 1, 0)
+            per_node = jnp.take_along_axis(
+                topk, di[:, :, None], axis=1)                      # [B,N,MB]
+            props_g = jnp.take_along_axis(
+                per_node, choice[:, 1:, None], axis=2)[..., 0]     # [B, N]
             # sampled rows: i.i.d. candidates per node (multi-round
             # acceptance requires sibling draws from q, not top-k); the
             # per-node draws only execute when some row actually samples
@@ -686,17 +844,18 @@ class SpecDecoder:
             any_sampled = jnp.any(temp > 0)
             props_s = jax.lax.cond(
                 any_sampled,
-                lambda: acceptance.sample_tree_props(tree, scaled, dkeys),
+                lambda: acceptance.sample_tree_props_rows(
+                    scaled, node_depth, dkeys),
                 lambda: props_g)
             sampled = temp > 0
             props = jnp.where(sampled[:, None], props_s, props_g)
 
-            # verify: one target forward over the packed tree
+            # verify: one target forward over the packed tree; per-row
+            # win_len bounds each row's window to its own template
             last = jnp.take_along_axis(gen, (n - 1)[:, None], axis=1)
             vin = jnp.concatenate([last.astype(jnp.int32), props], axis=1)
-            positions = (n - 1)[:, None] + depth_arr[None, :]
-            tinfo = TreeAttnInfo(
-                win_start=n - 1, anc=jnp.broadcast_to(anc[None, :], (b, s)))
+            positions = (n - 1)[:, None] + depth
+            tinfo = TreeAttnInfo(win_start=n - 1, anc=anc, win_len=nslots)
             logits, tcache_new, _ = self._target_forward(
                 vin, tcache, n - 1, tables, positions=positions,
                 tree_info=tinfo)
@@ -704,13 +863,14 @@ class SpecDecoder:
             # acceptance (core/acceptance.py), row-selected greedy/sampled;
             # the multi-round machinery only executes when a row samples
             a_g, tok_g, slot_g, commit_g, rank_g = \
-                acceptance.greedy_tree_accept(tree, logits, props)
+                acceptance.greedy_tree_accept_rows(
+                    logits, props, parent, depth, choice, anc, nslots, d)
 
             def samp_accept():
                 p_full = acceptance.temp_softmax(logits, temp)   # [B, S, V]
                 q_depth = jax.nn.softmax(scaled, axis=-1)        # [B, D, V]
-                return acceptance.sampled_tree_accept(
-                    tree, p_full, q_depth, props, akeys)
+                return acceptance.sampled_tree_accept_rows(
+                    p_full, q_depth, props, cmap, akeys, d, max_b)
 
             a_s, tok_s, slot_s, commit_s, rank_s = jax.lax.cond(
                 any_sampled, samp_accept,
@@ -756,18 +916,25 @@ class SpecDecoder:
             round_hist = jnp.sum(
                 (rank[:, :, None] == jnp.arange(max_b)[None, None, :])
                 & valid[:, :, None], axis=(0, 1)).astype(jnp.int32)
+            rank = jnp.where(done[:, None], -1, rank)
             new_state = dataclasses.replace(
                 state, gen=gen, n=new_n, m=new_m, tcache=tcache_new,
                 dcache=dcache, rngs=next_keys)
-            return new_state, jnp.where(done, 0, a), hist, round_hist, 1
+            return new_state, jnp.where(done, 0, a), hist, round_hist, \
+                rank, 1
 
         return step
 
     def generate_spec(self, prompt: Array, max_new: int, mode: str = "pard",
-                      seed: int = 0):
+                      seed: int = 0, tree_idx=None):
+        """``tree_idx`` ([B] ints) pins each row to a bank template for the
+        whole run (tree drafting only; default: template 0 — with a
+        single-template bank, exactly the old static behaviour)."""
         assert self.dp is not None, "spec decoding requires a draft model"
         if self.tree is not None:
             assert mode == "pard", "tree templates require mode='pard'"
+        else:
+            assert tree_idx is None, "tree_idx requires a TemplateBank"
         b, p = prompt.shape
         k = self.k
         # Both prefills stop at prompt[:-1]: the verify window re-processes
@@ -776,6 +943,11 @@ class SpecDecoder:
         assert p >= 2, "prompts must have at least 2 tokens"
         L = p + max_new + self.window_slack   # room for the final window
         state = self.init_state(prompt, L, seed=seed)
+        if tree_idx is not None:
+            idx = np.asarray(tree_idx, np.int32)
+            assert idx.shape == (b,) and idx.min() >= 0 \
+                and idx.max() < len(self.tree), idx
+            state = dataclasses.replace(state, tree_idx=jnp.asarray(idx))
 
         prefill_t = self._fn("sp_prefill_t", lambda t, c: prefill_row(
             self.tp, self.tc, t, None, c, enc_out=self.enc_out), donate=(1,))
@@ -785,7 +957,7 @@ class SpecDecoder:
         # donate the whole state: the steady state then updates gen + both
         # cache pools in place (no per-iteration multi-MB buffer copies)
         if self.tree is not None:
-            step = self._fn(f"tree_step_{self.tree.branching}",
+            step = self._fn(f"tree_step_{self.tree.key}",
                             self._build_tree_step(), donate=(0,))
         else:
             step = self._fn(f"spec_step_{mode}",
@@ -802,7 +974,7 @@ class SpecDecoder:
         target_n = p + max_new
         while True:
             live = int(jnp.sum(~state.done))
-            state, a, hist, rhist, n_draft = step(state)
+            state, a, hist, rhist, _rank, n_draft = step(state)
             iters += 1
             live_iters += live
             draft_calls += n_draft

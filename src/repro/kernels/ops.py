@@ -91,11 +91,14 @@ def decode_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
 
 @functools.partial(jax.jit, static_argnames=(
     "window", "softcap", "scale", "block_k", "interpret"))
-def tree_attention(q, k, v, kv_len, q_pos, win_start, anc, *, window=0,
-                   softcap=0.0, scale=None, block_k=256, interpret=None):
+def tree_attention(q, k, v, kv_len, q_pos, win_start, anc, *, win_len=None,
+                   window=0, softcap=0.0, scale=None, block_k=256,
+                   interpret=None):
     """Tree-verification attention against a contiguous cache. ``anc`` is
     the [B, Tq] uint32 packed ancestor bitmask (bit j = window slot j
-    visible); ``win_start`` the cache index of window slot 0."""
+    visible); ``win_start`` the cache index of window slot 0; ``win_len``
+    the optional [B] per-row count of meaningful window slots (per-request
+    tree templates — None means all Tq slots)."""
     interpret = _interpret(interpret)
     d = q.shape[-1]
     block_k = min(block_k, max(8, 1 << (k.shape[1] - 1).bit_length()))
@@ -104,26 +107,29 @@ def tree_attention(q, k, v, kv_len, q_pos, win_start, anc, *, window=0,
     k, _ = _pad_axis(k, 1, block_k)
     v, _ = _pad_axis(v, 1, block_k)
     return _tree.tree_attention(q, k, v, kv_len, q_pos, win_start, anc,
-                                window=window, softcap=softcap, scale=scale,
+                                win_len=win_len, window=window,
+                                softcap=softcap, scale=scale,
                                 block_k=block_k, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=(
     "window", "softcap", "scale", "interpret"))
 def tree_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
-                         win_start, anc, *, window=0, softcap=0.0, scale=None,
-                         interpret=None):
+                         win_start, anc, *, win_len=None, window=0,
+                         softcap=0.0, scale=None, interpret=None):
     """Paged-pool tree verification: k/v are [NB, block, Hkv, D] pools
     indirected by ``block_tables`` [B, MBS]; the pool's block size IS the
-    kernel's kv block (no padding), exactly like decode_attention_paged."""
+    kernel's kv block (no padding), exactly like decode_attention_paged.
+    ``win_len``: optional [B] per-row meaningful window slots."""
     interpret = _interpret(interpret)
     d = q.shape[-1]
     if scale is None:
         scale = 1.0 / (d ** 0.5)
     return _tree.tree_attention_paged(q, k_pages, v_pages, block_tables,
                                       kv_len, q_pos, win_start, anc,
-                                      window=window, softcap=softcap,
-                                      scale=scale, interpret=interpret)
+                                      win_len=win_len, window=window,
+                                      softcap=softcap, scale=scale,
+                                      interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=(

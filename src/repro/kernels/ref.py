@@ -52,8 +52,8 @@ def decode_attention_paged_ref(q, k_pages, v_pages, block_tables, kv_len,
                                 softcap=softcap, scale=scale)
 
 
-def tree_attention_ref(q, k, v, kv_len, q_pos, win_start, anc, *, window=0,
-                       softcap=0.0, scale=None):
+def tree_attention_ref(q, k, v, kv_len, q_pos, win_start, anc, *,
+                       win_len=None, window=0, softcap=0.0, scale=None):
     """Tree-verification attention: the packed candidate tree window against
     a long cache (DESIGN.md §6). Masking comes from models.attention's
     TreeAttnInfo (packed ancestor bitmask inside the window, plain context
@@ -62,25 +62,34 @@ def tree_attention_ref(q, k, v, kv_len, q_pos, win_start, anc, *, window=0,
 
     q: [B,Tq,Hq,D]; k,v: [B,S,Hkv,D]; kv_len: [B]; q_pos: [B,Tq] logical
     positions; win_start: [B] cache index of window slot 0; anc: [B,Tq]
-    uint32 ancestor bitmasks.
+    uint32 ancestor bitmasks; win_len: optional [B] per-row count of
+    meaningful window slots (per-request tree templates, DESIGN.md §7).
     """
     b = q.shape[0]
     s = k.shape[1]
     kv_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
-    info = TreeAttnInfo(jnp.asarray(win_start), jnp.asarray(anc))
+    info = TreeAttnInfo(jnp.asarray(win_start), jnp.asarray(anc),
+                        None if win_len is None else jnp.asarray(win_len))
+    if win_len is not None:
+        # the kernels clamp each row's sweep to win_start + win_len; the
+        # oracle realises the same bound through kv_len so padded window
+        # slots are invisible on both paths
+        kv_len = jnp.minimum(jnp.asarray(kv_len),
+                             jnp.asarray(win_start) + jnp.asarray(win_len))
     return attend(q, k, v, q_pos, kv_pos, kv_len, causal=True, window=window,
                   attn_softcap=softcap, scale=scale, tree_info=info)
 
 
 def tree_attention_paged_ref(q, k_pages, v_pages, block_tables, kv_len,
-                             q_pos, win_start, anc, *, window=0, softcap=0.0,
-                             scale=None):
+                             q_pos, win_start, anc, *, win_len=None,
+                             window=0, softcap=0.0, scale=None):
     """Paged-pool tree-verification oracle: gather each row's blocks into a
     contiguous view and defer to the contiguous reference."""
     k = gather_pages(k_pages, block_tables)
     v = gather_pages(v_pages, block_tables)
     return tree_attention_ref(q, k, v, kv_len, q_pos, win_start, anc,
-                              window=window, softcap=softcap, scale=scale)
+                              win_len=win_len, window=window,
+                              softcap=softcap, scale=scale)
 
 
 def pard_attention_ref(q, k, v, segment, base, *, scale=None, softcap=0.0):

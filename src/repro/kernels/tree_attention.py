@@ -12,8 +12,14 @@ carries a packed per-query ancestor bitmask alongside the causal rule:
   * cache slot  < win_start             -> committed context: always allowed
     (optionally sliding-window limited against the query's logical position);
   * cache slot == win_start + j (j<Tq)  -> allowed iff bit j of ``anc[row]``
-    is set (bit 0 = root; a node's mask is its parent's mask | its own bit);
-  * everything is bounded by ``kv_index < kv_len`` as usual.
+    is set (bit 0 = root; a node's mask is its parent's mask | its own bit)
+    AND j < the row's ``win_len`` (per-request tree templates pad the batch
+    window to the widest template; slots past a row's own template are
+    meaningless and invisible);
+  * everything is bounded by ``kv_index < min(kv_len, win_start + win_len)``
+    — the per-row effective length, so a narrow-template row's KV sweep
+    skips the padded window blocks entirely (swept bytes track the row's
+    OWN tree, not the bank's widest).
 
 Window sizes are <= 32 slots, so one uint32 bitmask per query row packs the
 whole tree. Ancestors sit at most ``max_depth`` logical positions behind the
@@ -38,8 +44,9 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(qpos_ref, kvlen_ref, winstart_ref, anc_ref, q_ref, k_ref, v_ref,
-            o_ref, m_s, l_s, acc_s, *, scale, window, softcap, block_k, tq, g):
+def _kernel(qpos_ref, kvlen_ref, winstart_ref, winlen_ref, anc_ref, q_ref,
+            k_ref, v_ref, o_ref, m_s, l_s, acc_s, *, scale, window, softcap,
+            block_k, tq, g):
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -50,9 +57,12 @@ def _kernel(qpos_ref, kvlen_ref, winstart_ref, anc_ref, q_ref, k_ref, v_ref,
         acc_s[...] = jnp.zeros_like(acc_s)
 
     kv_len = kvlen_ref[0]                              # scalar for this row
+    ws = winstart_ref[0]
+    wl = winlen_ref[0]                                 # row's own window
+    eff_len = jnp.minimum(kv_len, ws + wl)             # per-row sweep bound
     k_start = ki * block_k
 
-    @pl.when(k_start < kv_len)
+    @pl.when(k_start < eff_len)
     def _compute():
         q = q_ref[0, :, :, :].astype(jnp.float32)      # [tq, g, d]
         d = q.shape[-1]
@@ -69,15 +79,14 @@ def _kernel(qpos_ref, kvlen_ref, winstart_ref, anc_ref, q_ref, k_ref, v_ref,
         anc_rows = jnp.repeat(anc_ref[0, :], g)[:, None]  # [tq*g, 1] uint32
         k_pos = k_start + jax.lax.broadcasted_iota(
             jnp.int32, (tq * g, block_k), 1)
-        ws = winstart_ref[0]
         ctx = k_pos < ws                               # committed context
         if window:
             ctx &= k_pos > qp_rows - window
         j = k_pos - ws                                 # window slot index
-        in_win = (j >= 0) & (j < tq)
+        in_win = (j >= 0) & (j < wl) & (j < tq)
         bit = (anc_rows >> jnp.clip(j, 0, tq - 1).astype(jnp.uint32)
                ) & jnp.uint32(1)
-        mask = (k_pos < kv_len) & (ctx | (in_win & (bit == 1)))
+        mask = (k_pos < eff_len) & (ctx | (in_win & (bit == 1)))
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_s[...]
@@ -96,17 +105,22 @@ def _kernel(qpos_ref, kvlen_ref, winstart_ref, anc_ref, q_ref, k_ref, v_ref,
             tq, g * acc_s.shape[-1]).astype(o_ref.dtype)
 
 
-def tree_attention(q, k, v, kv_len, q_pos, win_start, anc, *, window=0,
-                   softcap=0.0, scale=None, block_k=256, interpret=False):
+def tree_attention(q, k, v, kv_len, q_pos, win_start, anc, *, win_len=None,
+                   window=0, softcap=0.0, scale=None, block_k=256,
+                   interpret=False):
     """q: [B, Tq, Hq, D] — the packed verify window; k, v: [B, S, Hkv, D];
     kv_len: [B]; q_pos: [B, Tq] logical positions (root pos + depth);
     win_start: [B] cache index of window slot 0; anc: [B, Tq] uint32
-    ancestor bitmasks (bit j = window slot j visible)."""
+    ancestor bitmasks (bit j = window slot j visible); win_len: [B] int32
+    count of meaningful window slots per row (None = Tq for every row —
+    single-template batches)."""
     b, tq, hq, d = q.shape
     s_len, hkv = k.shape[1], k.shape[2]
     g = hq // hkv
     if scale is None:
         scale = 1.0 / (d ** 0.5)
+    if win_len is None:
+        win_len = jnp.full((b,), tq, jnp.int32)
 
     qg = q.reshape(b, tq, hkv, g, d)
     grid = (b, hkv, pl.cdiv(s_len, block_k))
@@ -121,6 +135,7 @@ def tree_attention(q, k, v, kv_len, q_pos, win_start, anc, *, window=0,
             pl.BlockSpec((1, tq), lambda bi, h, ki: (bi, 0)),       # q_pos
             pl.BlockSpec((1,), lambda bi, h, ki: (bi,)),            # kv_len
             pl.BlockSpec((1,), lambda bi, h, ki: (bi,)),            # win_start
+            pl.BlockSpec((1,), lambda bi, h, ki: (bi,)),            # win_len
             pl.BlockSpec((1, tq), lambda bi, h, ki: (bi, 0)),       # anc
             pl.BlockSpec((1, tq, 1, g, d),
                          lambda bi, h, ki: (bi, 0, h, 0, 0)),       # q
@@ -139,27 +154,29 @@ def tree_attention(q, k, v, kv_len, q_pos, win_start, anc, *, window=0,
         ],
         interpret=interpret,
     )(q_pos.astype(jnp.int32), kv_len.astype(jnp.int32),
-      win_start.astype(jnp.int32), anc.astype(jnp.uint32), qg, k, v)
+      win_start.astype(jnp.int32), win_len.astype(jnp.int32),
+      anc.astype(jnp.uint32), qg, k, v)
     return out.reshape(b, tq, hq, d)
 
 
-def _paged_kernel(bt_ref, qpos_ref, kvlen_ref, winstart_ref, anc_ref, q_ref,
-                  k_ref, v_ref, o_ref, m_s, l_s, acc_s, **kw):
+def _paged_kernel(bt_ref, qpos_ref, kvlen_ref, winstart_ref, winlen_ref,
+                  anc_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, **kw):
     # bt_ref (the scalar-prefetched block table) is consumed only by the
     # BlockSpec index_maps; the compute body is the contiguous kernel's.
-    _kernel(qpos_ref, kvlen_ref, winstart_ref, anc_ref, q_ref, k_ref, v_ref,
-            o_ref, m_s, l_s, acc_s, **kw)
+    _kernel(qpos_ref, kvlen_ref, winstart_ref, winlen_ref, anc_ref, q_ref,
+            k_ref, v_ref, o_ref, m_s, l_s, acc_s, **kw)
 
 
 def tree_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
-                         win_start, anc, *, window=0, softcap=0.0, scale=None,
-                         interpret=False):
+                         win_start, anc, *, win_len=None, window=0,
+                         softcap=0.0, scale=None, interpret=False):
     """Paged-pool tree-verification attention.
 
     q: [B, Tq, Hq, D]; k_pages, v_pages: [NB, block, Hkv, D] shared pools;
     block_tables: [B, MBS] int32 (block 0 = reserved garbage block);
     kv_len: [B]; q_pos: [B, Tq] logical positions; win_start: [B];
-    anc: [B, Tq] uint32 ancestor bitmasks.
+    anc: [B, Tq] uint32 ancestor bitmasks; win_len: [B] int32 meaningful
+    window slots per row (None = Tq).
     """
     b, tq, hq, d = q.shape
     block, hkv = k_pages.shape[1], k_pages.shape[2]
@@ -167,6 +184,8 @@ def tree_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
     g = hq // hkv
     if scale is None:
         scale = 1.0 / (d ** 0.5)
+    if win_len is None:
+        win_len = jnp.full((b,), tq, jnp.int32)
 
     qg = q.reshape(b, tq, hkv, g, d)
     kern = functools.partial(_paged_kernel, scale=scale, window=window,
@@ -179,6 +198,7 @@ def tree_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
             pl.BlockSpec((1, tq), lambda bi, h, ki, bt: (bi, 0)),   # q_pos
             pl.BlockSpec((1,), lambda bi, h, ki, bt: (bi,)),        # kv_len
             pl.BlockSpec((1,), lambda bi, h, ki, bt: (bi,)),        # win_start
+            pl.BlockSpec((1,), lambda bi, h, ki, bt: (bi,)),        # win_len
             pl.BlockSpec((1, tq), lambda bi, h, ki, bt: (bi, 0)),   # anc
             pl.BlockSpec((1, tq, 1, g, d),
                          lambda bi, h, ki, bt: (bi, 0, h, 0, 0)),   # q
@@ -202,5 +222,6 @@ def tree_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
         interpret=interpret,
     )(block_tables.astype(jnp.int32), q_pos.astype(jnp.int32),
       kv_len.astype(jnp.int32), win_start.astype(jnp.int32),
-      anc.astype(jnp.uint32), qg, k_pages, v_pages)
+      win_len.astype(jnp.int32), anc.astype(jnp.uint32), qg, k_pages,
+      v_pages)
     return out.reshape(b, tq, hq, d)

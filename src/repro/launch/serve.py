@@ -15,7 +15,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.spec_decode import TreeTemplate
+from repro.core.spec_decode import TemplateBank, TreeTemplate
 from repro.data.pipeline import MarkovCorpus
 from repro.models import init_params
 from repro.serving.engine import Engine
@@ -33,6 +33,11 @@ def main():
                     help="tree-structured PARD drafting: per-depth branching "
                          "factors of the candidate tree (e.g. 2,2,2,1); "
                          "overrides --k with the tree depth")
+    ap.add_argument("--adaptive-tree", action="store_true",
+                    help="per-request tree templates from the default "
+                         "chain/balanced/wide bank at depth --k, re-selected "
+                         "from EWMA acceptance statistics at admission and "
+                         "between windows (DESIGN.md §7); excludes --tree")
     ap.add_argument("--k", type=int, default=8)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=48)
@@ -72,7 +77,12 @@ def main():
             dp = checkpoint.restore(args.draft_ckpt, dp)
 
     tree = None
-    if args.tree is not None:
+    if args.adaptive_tree:
+        assert args.mode == "pard", "--adaptive-tree requires --mode pard"
+        assert args.tree is None, \
+            "--adaptive-tree selects its own bank; drop --tree"
+        tree = TemplateBank.default(args.k)
+    elif args.tree is not None:
         assert args.mode == "pard", "--tree requires --mode pard"
         tree = TreeTemplate.from_branching(
             int(x) for x in args.tree.split(","))
@@ -81,7 +91,8 @@ def main():
                  max_batch=args.max_batch, max_len=args.max_len,
                  temperature=args.temperature, seed=args.seed,
                  kv_layout=args.kv_layout, kv_block_size=args.kv_block_size,
-                 kv_num_blocks=args.kv_num_blocks, tree=tree)
+                 kv_num_blocks=args.kv_num_blocks, tree=tree,
+                 adaptive_tree=args.adaptive_tree)
 
     corpus = MarkovCorpus(vocab_size=tc.vocab_size, seed=0, determinism=2.0)
     rng = np.random.default_rng(args.seed)
@@ -96,8 +107,9 @@ def main():
     wall = time.perf_counter() - t0
 
     total = sum(c.generated for c in comps)
-    label = args.mode if tree is None else \
-        f"{args.mode}[tree {args.tree}]"
+    label = args.mode if tree is None else (
+        f"{args.mode}[adaptive {tree.key}]" if args.adaptive_tree
+        else f"{args.mode}[tree {args.tree}]")
     if args.temperature:
         label += f"[T={args.temperature}" + (
             f",greedy×{args.greedy_requests}]" if args.greedy_requests
@@ -111,6 +123,11 @@ def main():
     print(f"kv layout={args.kv_layout} "
           f"capacity={eng.kv_capacity_bytes() / 1e6:.2f}MB "
           f"peak_in_use={eng.peak_kv_bytes_in_use / 1e6:.2f}MB")
+    if args.adaptive_tree:
+        hist = eng.stats["tree_hist"]
+        per = {t.branching: int(h) for t, h in zip(tree.templates, hist)}
+        print(f"adaptive tree: live-steps per template {per} "
+              f"switches={eng.stats['tree_switches']}")
     print("engine stats:", eng.stats)
 
 

@@ -26,7 +26,7 @@ because validity is still ``kv_index < kv_len``.
 from __future__ import annotations
 
 import math
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -88,9 +88,18 @@ class TreeAttnInfo(NamedTuple):
     anc:       [B, Tq] uint32 — per query slot s, bit j set iff window slot
                j is an ancestor-or-self of s (bit 0 = the root). Windows are
                <= 32 slots, so one uint32 packs the whole tree.
+    win_len:   [B] int32 (optional) — per-row count of MEANINGFUL window
+               slots. With per-request tree templates (DESIGN.md §7) the
+               batch window is padded to the bank's widest template; slots
+               >= win_len belong to no template node, are never accepted,
+               and are masked out of visibility entirely — the Pallas
+               kernels additionally clamp each row's KV sweep to
+               ``win_start + win_len``, so narrow-template rows stream
+               fewer bytes. None = every slot meaningful (single template).
     """
     win_start: Array
     anc: Array
+    win_len: Optional[Array] = None
 
 
 def tree_allowed(q_pos, kv_pos, tree_info: TreeAttnInfo, window=0):
@@ -106,7 +115,9 @@ def tree_allowed(q_pos, kv_pos, tree_info: TreeAttnInfo, window=0):
     if window:
         ctx &= kvp > (q_pos[:, :, None] - window)
     j = kvp - ws
-    in_win = (j >= 0) & (j < tq)
+    wl = tq if tree_info.win_len is None \
+        else tree_info.win_len.astype(jnp.int32)[:, None, None]
+    in_win = (j >= 0) & (j < wl) & (j < tq)
     bits = (tree_info.anc.astype(jnp.uint32)[:, :, None]
             >> jnp.clip(j, 0, tq - 1).astype(jnp.uint32)) & jnp.uint32(1)
     return ctx | (in_win & (bits == 1))
@@ -148,6 +159,7 @@ def attend(q, k, v, q_pos, kv_pos, kv_len, *, causal=True, window=0,
         kv_len_arr = jnp.broadcast_to(jnp.asarray(kv_len), (b,)).astype(jnp.int32)
         return ops.tree_attention(q, k, v, kv_len_arr, q_pos,
                                   tree_info.win_start, tree_info.anc,
+                                  win_len=tree_info.win_len,
                                   window=window, softcap=attn_softcap,
                                   scale=scale)
     if _pallas_ok(q, k, mask_info, scale) and causal:
@@ -307,7 +319,8 @@ def _paged_attend(q, k_pages, v_pages, block_tables, q_pos, kv_len, *,
         if tree_info is not None:
             return ops.tree_attention_paged(
                 q, k_pages, v_pages, block_tables, kv_len_arr, q_pos,
-                tree_info.win_start, tree_info.anc, window=window,
+                tree_info.win_start, tree_info.anc,
+                win_len=tree_info.win_len, window=window,
                 softcap=attn_softcap, scale=scale)
         return ops.decode_attention_paged(
             q, k_pages, v_pages, block_tables, kv_len_arr, q_pos,

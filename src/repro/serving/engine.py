@@ -21,10 +21,16 @@ Design (all fixed shapes, jit-once):
     finished slots free immediately and new requests admit on the next tick
     (continuous batching);
   * modes: "ar" (AR+ baseline), "vsd", "pard" — same engine, same pool;
-    passing ``tree=`` (a core.spec_decode.TreeTemplate or a branching list)
-    upgrades "pard" to tree-structured drafting with ancestor-mask
-    verification (DESIGN.md §6) — allocation slack and the decode step come
-    from the same SpecDecoder, so paged KV invariants are unchanged;
+    passing ``tree=`` (a core.spec_decode.TreeTemplate, a branching list,
+    or a TemplateBank) upgrades "pard" to tree-structured drafting with
+    ancestor-mask verification (DESIGN.md §6) — allocation slack and the
+    decode step come from the same SpecDecoder, so paged KV invariants
+    are unchanged. With a TemplateBank the tree shape is PER REQUEST
+    (``submit(..., tree_idx=)`` pins one; paged rows allocate blocks for
+    their own template's window, not the bank-wide widest), and
+    ``adaptive_tree=True`` adds the EWMA acceptance-statistics controller
+    (``TreeController``) that selects each request's template at admission
+    and reshapes it between windows (DESIGN.md §7);
   * sampling is per REQUEST: ``submit(..., temperature=)`` overrides the
     engine default, so one batch mixes greedy (exact argmax) and sampled
     rows — every mode including tree drafting, whose multi-round sibling
@@ -49,7 +55,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import acceptance
-from ..core.spec_decode import DecodeState, SpecDecoder, prefill_row
+from ..core.spec_decode import (DecodeState, SpecDecoder, TemplateBank,
+                                prefill_row)
 from ..models import init_caches
 from ..models.config import ModelConfig
 from . import kv_pool
@@ -61,6 +68,8 @@ class Request:
     prompt: np.ndarray          # 1-D int32
     max_new: int
     temperature: Optional[float] = None   # None = the engine default
+    tree_idx: Optional[int] = None        # pinned bank template (None =
+    #                                       controller / template 0)
 
 
 @dataclasses.dataclass
@@ -79,6 +88,83 @@ def _bucket(n: int) -> int:
     return b
 
 
+class TreeController:
+    """Acceptance-statistics template selection (DESIGN.md §7).
+
+    Maintains, per slot and per (depth d, sibling rank c), an EWMA of the
+    indicator "depth d was evaluated this step and rank c's candidate was
+    the accepted one" — updated ONLY at steps where rank c was actually
+    OFFERED (c < the in-use template's branching at d), so the estimate is
+    the conditional accept probability P(rank c wins | depth d reached,
+    rank c offered) regardless of which template happened to be active.
+    A template's score is its expected accepted length under independence
+    across ranks: E(t) = sum_d prod_{d' <= d} min(1, sum_{c < b_d'} p[d',c]).
+
+    New requests have no history, so admission selects on a GLOBAL EWMA
+    that every retiring request folds its learned row into; per-slot rows
+    are seeded from the global one at admission and drive the between-
+    windows re-selection (``Engine._reshape_slots``).
+    """
+
+    def __init__(self, bank: TemplateBank, max_batch: int, ewma: float = 0.2):
+        self.bank = bank
+        self.ewma = ewma
+        d, mb = bank.max_depth, bank.max_branching
+        self.offer = np.zeros((len(bank), d), np.int32)   # [T, D] branching
+        for t, tpl in enumerate(bank.templates):
+            self.offer[t] = tpl.branching
+        # optimistic prior: rank 0 accepts half the time, each extra rank
+        # adds a little — wide templates stay in play until data arrives
+        prior = np.zeros((d, mb))
+        prior[:, 0] = 0.5
+        if mb > 1:
+            prior[:, 1:] = 0.15
+        self.global_p = prior.copy()
+        self.slot_p = np.tile(prior, (max_batch, 1, 1))
+
+    def seed_slot(self, slot: int) -> None:
+        self.slot_p[slot] = self.global_p
+
+    def retire_slot(self, slot: int) -> None:
+        """Fold a finished request's learned statistics into the admission
+        prior (an EWMA over requests, like the per-step one over windows)."""
+        self.global_p += 0.5 * (self.slot_p[slot] - self.global_p)
+
+    def update(self, live: np.ndarray, tree_idx: np.ndarray, a: np.ndarray,
+               rank: np.ndarray) -> None:
+        """live [B] (rows live BEFORE the step), tree_idx [B], a [B]
+        accepted depths, rank [B, D] accepted sibling rank per depth (-1
+        where the depth rejected or was never reached)."""
+        d = self.slot_p.shape[1]
+        for slot in np.nonzero(live)[0]:
+            br = self.offer[tree_idx[slot]]
+            # depths 1..a were accepted; depth a+1 was evaluated and
+            # rejected (if it exists); deeper depths carry no information
+            for dep in range(min(int(a[slot]) + 1, d)):
+                r = int(rank[slot, dep])
+                for c in range(int(br[dep])):
+                    obs = 1.0 if r == c else 0.0
+                    self.slot_p[slot, dep, c] += \
+                        self.ewma * (obs - self.slot_p[slot, dep, c])
+
+    def select(self, slot: Optional[int] = None,
+               feasible=None) -> int:
+        """Best-scoring template (per-slot stats, or the global prior for
+        admission). ``feasible``: optional iterable of permitted template
+        indices (allocation / max_len constraints)."""
+        p = self.global_p if slot is None else self.slot_p[slot]
+        cands = range(len(self.bank)) if feasible is None else list(feasible)
+        best, best_e = next(iter(cands)), -1.0
+        for t in cands:
+            surv, e = 1.0, 0.0
+            for dep in range(p.shape[0]):
+                surv *= min(1.0, float(p[dep, :self.offer[t, dep]].sum()))
+                e += surv
+            if e > best_e + 1e-9:
+                best, best_e = t, e
+        return best
+
+
 class Engine:
     def __init__(self, target_params, target_cfg: ModelConfig,
                  draft_params=None, draft_cfg: Optional[ModelConfig] = None, *,
@@ -86,11 +172,21 @@ class Engine:
                  max_len: int = 1024, temperature: float = 0.0,
                  eos_id: Optional[int] = None, seed: int = 0,
                  kv_layout: str = "paged", kv_block_size: int = 64,
-                 kv_num_blocks: Optional[int] = None, tree=None):
+                 kv_num_blocks: Optional[int] = None, tree=None,
+                 adaptive_tree: bool = False, tree_ewma: float = 0.2,
+                 tree_reselect_every: int = 4):
         assert mode in ("ar", "vsd", "pard")
         assert kv_layout in ("paged", "contiguous")
         assert tree is None or mode == "pard", \
             "tree templates apply to the PARD draft path only"
+        if adaptive_tree:
+            assert mode == "pard", "adaptive trees require mode='pard'"
+            if tree is None:
+                tree = TemplateBank.default(k)
+            assert isinstance(tree, TemplateBank), \
+                "adaptive_tree selects from a TemplateBank"
+        self.adaptive = adaptive_tree
+        self.tree_reselect_every = tree_reselect_every
         self.mode = mode
         self.paged = kv_layout == "paged"
         self.k = k if mode != "ar" else 1
@@ -108,6 +204,9 @@ class Engine:
             kv_block_size=kv_block_size if self.paged else 0,
             tree=tree if mode == "pard" else None)
         self.k = self.dec.k          # a tree template overrides k (== depth)
+        self.bank = self.dec.tree    # TemplateBank (or None: no tree)
+        self.ctrl = (TreeController(self.bank, max_batch, tree_ewma)
+                     if self.adaptive else None)
         self.tc, self.dc = target_cfg, draft_cfg
         # per-request sampling keys derive from (seed, rid) at admission, so
         # a request's sampled trajectory is independent of batch composition
@@ -152,13 +251,19 @@ class Engine:
             done=jnp.ones((max_batch,), bool),         # empty slots = done
             tcache=tcache, dcache=dcache, tables=tables,
             temp=jnp.zeros((max_batch,), jnp.float32),
-            rngs=acceptance.make_row_keys(seed, np.arange(max_batch)))
+            rngs=acceptance.make_row_keys(seed, np.arange(max_batch)),
+            tree_idx=(jnp.zeros((max_batch,), jnp.int32)
+                      if self.bank is not None else None))
         self._tables_version = self.alloc.version if self.paged else 0
 
         # host state
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.slot_limit = np.zeros(max_batch, np.int64)
         self.slot_submit_t = np.zeros(max_batch)
+        # host shadows of per-slot tree state: the active template index
+        # and the step count since admission (re-selection cadence)
+        self.slot_tree = np.zeros(max_batch, np.int32)
+        self.slot_steps = np.zeros(max_batch, np.int64)
         self.queue: deque[Request] = deque()
         self.completions: List[Completion] = []
         self._next_rid = 0
@@ -168,15 +273,46 @@ class Engine:
         self.stats = dict(steps=0, committed=0, accepted=0, live_steps=0,
                           draft_forwards=0, target_forwards=0,
                           round_hist=None)
+        if self.bank is not None:
+            # live-steps decoded under each template + controller switches
+            self.stats["tree_hist"] = np.zeros(len(self.bank), np.int64)
+            self.stats["tree_switches"] = 0
 
     # ------------------------------------------------------------- public
     def submit(self, prompt, max_new: int,
-               temperature: Optional[float] = None) -> int:
+               temperature: Optional[float] = None,
+               tree_idx: Optional[int] = None) -> int:
         """Queue a request. ``temperature`` overrides the engine default for
         this request only (0 = greedy) — one batch mixes greedy and sampled
-        rows, each sampling under its own (seed, rid)-derived key."""
+        rows, each sampling under its own (seed, rid)-derived key.
+        ``tree_idx`` pins the request to one bank template (tree engines);
+        left None, the adaptive controller (or template 0) decides at
+        admission and may reshape the request between windows.
+
+        In the paged layout the max_len feasibility check uses the
+        request's own window slack: a pinned template's slack exactly,
+        otherwise the smallest slack any bank template needs — admission
+        and re-selection then only ever consider templates that actually
+        fit, and rows allocate blocks for their OWN template rather than
+        the bank-wide widest. Contiguous rows are written batch-wide (the
+        widest window), so there the bank-wide slack is always required."""
         prompt = np.asarray(prompt, np.int32)
-        need = len(prompt) + max_new + self.dec.window_slack
+        if tree_idx is not None and (
+                self.bank is None or not 0 <= tree_idx < len(self.bank)):
+            raise ValueError(
+                f"tree_idx={tree_idx} needs a TemplateBank with more "
+                f"than {tree_idx} templates")
+        if not self.paged or self.bank is None:
+            # contiguous rows are written batch-wide (the widest window,
+            # clamped dynamic_update_slice would corrupt committed KV past
+            # max_len), so the bank-wide slack is the real requirement
+            # whatever template the request pins
+            slack = self.dec.window_slack
+        elif tree_idx is not None:
+            slack = self.dec.row_slack(tree_idx)
+        else:
+            slack = self.dec.min_row_slack
+        need = len(prompt) + max_new + slack
         if len(prompt) < 2 or need > self.max_len:
             # a raised error, not an assert: past this point an oversized
             # request would outgrow its cache rows/blocks and silently
@@ -184,11 +320,12 @@ class Engine:
             raise ValueError(
                 f"request needs {need} cache positions (prompt="
                 f"{len(prompt)}, max_new={max_new}, window slack="
-                f"{self.dec.window_slack}) but max_len={self.max_len}; "
+                f"{slack}) but max_len={self.max_len}; "
                 f"prompts also need >= 2 tokens")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, prompt, max_new, temperature))
+        self.queue.append(Request(rid, prompt, max_new, temperature,
+                                  tree_idx))
         return rid
 
     def run(self, max_steps: int = 100000) -> List[Completion]:
@@ -261,8 +398,30 @@ class Engine:
         self._prefill_cache[key] = fn
         return fn
 
+    def _feasible_templates(self, req: Request) -> List[int]:
+        """Bank templates whose window slack fits ``req`` inside max_len.
+        Never empty: submit() validated the smallest slack (paged) or the
+        bank-wide one (contiguous, where every template fits by then)."""
+        budget = self.max_len - len(req.prompt) - req.max_new
+        return [t for t in range(len(self.bank))
+                if self.dec.row_slack(t) <= budget]
+
+    def _pick_template(self, req: Request) -> int:
+        """Admission-time template choice: the request's pinned index, the
+        adaptive controller's global-prior pick over templates that fit the
+        request in max_len, or template 0."""
+        if self.bank is None:
+            return 0
+        if req.tree_idx is not None:
+            return req.tree_idx
+        feasible = self._feasible_templates(req)
+        if self.ctrl is None:
+            return 0 if 0 in feasible else feasible[0]
+        return self.ctrl.select(feasible=feasible)
+
     def _admit(self):
-        # phase 1 (host): claim slots and, in paged mode, KV blocks. When
+        # phase 1 (host): claim slots and, in paged mode, KV blocks sized
+        # for the request's OWN template (per-request window slack). When
         # the pool is exhausted the queue waits — completions release blocks
         pending = []
         for slot in range(self.max_batch):
@@ -270,9 +429,24 @@ class Engine:
                 continue
             req = self.queue[0]
             p = len(req.prompt)
-            # validated at submit(); covers draft + verify windows (I3)
-            need = p + req.max_new + self.dec.window_slack
+            tmpl = self._pick_template(req)
+            # validated at submit(); covers draft + verify windows (I3) —
+            # for the row's own template; the batch's wider window writes
+            # route to the garbage block and are never read
+            slack = self.dec.row_slack(tmpl) if self.bank is not None \
+                else self.dec.window_slack
+            need = p + req.max_new + slack
             if self.paged:
+                if not self.alloc.can_allocate(self.alloc.blocks_needed(need)) \
+                        and self.bank is not None and req.tree_idx is None:
+                    # the controller's pick outgrows the pool: serve the
+                    # request on the narrowest feasible template instead of
+                    # head-of-line blocking (reshaping can widen it later
+                    # as completions free blocks); pinned requests keep
+                    # their shape and wait
+                    tmpl = min(self._feasible_templates(req),
+                               key=self.dec.row_slack)
+                    need = p + req.max_new + self.dec.row_slack(tmpl)
                 nb = self.alloc.blocks_needed(need)
                 if not self.alloc.can_allocate(nb):
                     break                      # memory backpressure
@@ -281,6 +455,10 @@ class Engine:
             self.slots[slot] = req
             self.slot_limit[slot] = p + req.max_new
             self.slot_submit_t[slot] = time.perf_counter()
+            self.slot_tree[slot] = tmpl
+            self.slot_steps[slot] = 0
+            if self.ctrl is not None:
+                self.ctrl.seed_slot(slot)
             pending.append((slot, req))
         if not pending:
             return
@@ -314,6 +492,9 @@ class Engine:
                 temp=st.temp.at[slot].set(float(t)),
                 rngs=st.rngs.at[slot].set(
                     jax.random.fold_in(self._rng_base, req.rid)),
+                tree_idx=(st.tree_idx if st.tree_idx is None else
+                          st.tree_idx.at[slot].set(
+                              int(self.slot_tree[slot]))),
                 tcache=tcache, dcache=dcache)
 
     def _step(self):
@@ -334,8 +515,10 @@ class Engine:
                 builder = self.dec._build_spec_step(
                     "pard" if self.mode == "pard" else "vsd")
             self._spec_step = jax.jit(builder, donate_argnums=(0,))
-        live = int(jnp.sum(~self.state.done))
-        self.state, a, hist, rhist, n_draft = self._spec_step(self.state)
+        live_mask = ~np.asarray(jax.device_get(self.state.done))
+        live = int(live_mask.sum())
+        self.state, a, hist, rhist, rank, n_draft = \
+            self._spec_step(self.state)
         self.stats["draft_forwards"] += int(n_draft)
         self.stats["target_forwards"] += 1
         self.stats["accepted"] += int(jnp.sum(a))
@@ -345,6 +528,42 @@ class Engine:
             else self.stats["round_hist"] + rh
         self.stats["committed"] += int(jnp.sum(a) +
                                        jnp.sum(~self.state.done))
+        if self.bank is not None:
+            np.add.at(self.stats["tree_hist"], self.slot_tree[live_mask], 1)
+            self.slot_steps[live_mask] += 1
+        if self.ctrl is not None and live:
+            self.ctrl.update(live_mask, self.slot_tree,
+                             np.asarray(jax.device_get(a)),
+                             np.asarray(jax.device_get(rank)))
+            self._reshape_slots(live_mask)
+
+    def _reshape_slots(self, live_mask) -> None:
+        """Between-windows template re-selection (the adaptive controller).
+        Every ``tree_reselect_every`` live steps a slot re-scores the bank
+        under its own EWMA statistics and switches when a different
+        template wins AND the slot can hold it: within max_len, and — paged
+        — growable in place (``BlockAllocator.grow``; when the pool is too
+        tight the slot just keeps its current shape). Greedy losslessness
+        is shape-independent, so reshaping mid-request never changes
+        committed tokens' correctness, only how many arrive per step."""
+        for slot in np.nonzero(live_mask)[0]:
+            req = self.slots[slot]
+            if req is None or req.tree_idx is not None:
+                continue            # pinned requests keep their shape
+            if self.slot_steps[slot] % self.tree_reselect_every:
+                continue
+            best = self.ctrl.select(slot=int(slot),
+                                    feasible=self._feasible_templates(req))
+            if best == int(self.slot_tree[slot]):
+                continue
+            need = len(req.prompt) + req.max_new + self.dec.row_slack(best)
+            if self.paged and not self.alloc.grow(int(slot), need):
+                continue            # pool too tight: keep the old shape
+            self.slot_tree[slot] = best
+            self.state = dataclasses.replace(
+                self.state,
+                tree_idx=self.state.tree_idx.at[int(slot)].set(int(best)))
+            self.stats["tree_switches"] += 1
 
     def mean_accepted(self) -> float:
         """Mean committed tokens per live row per verify step (a + 1) —
@@ -391,5 +610,7 @@ class Engine:
                 self.state = dataclasses.replace(
                     self.state, done=self.state.done.at[slot].set(True),
                     temp=self.state.temp.at[slot].set(0.0))
+                if self.ctrl is not None:
+                    self.ctrl.retire_slot(slot)
                 if self.paged:
                     self.alloc.release(slot)   # O(1); blocks reusable at once

@@ -234,6 +234,29 @@ class BlockAllocator:
         self.tables[slot, :nb] = blocks
         self.version += 1
 
+    def grow(self, slot: int, n_tokens: int) -> bool:
+        """Extend a live slot's allocation in place to cover ``n_tokens``
+        (adaptive tree reshaping: a request switching to a wider template
+        needs a larger write window, I3). Appends blocks to the slot's
+        table row; returns False — leaving the allocation untouched — when
+        the free list or the table row cannot cover the request, so the
+        caller can keep the old template instead. Never shrinks: a narrower
+        template simply stops reading the extra blocks (they free with the
+        slot, keeping release O(1))."""
+        cur = self.owned.get(slot)
+        assert cur is not None, f"grow() on unallocated slot {slot}"
+        nb = self.blocks_needed(n_tokens)
+        if nb <= len(cur):
+            return True
+        extra = nb - len(cur)
+        if nb > self.max_blocks_per_seq or not self.can_allocate(extra):
+            return False
+        blocks = [self.free.pop() for _ in range(extra)]
+        self.tables[slot, len(cur):nb] = blocks
+        cur.extend(blocks)
+        self.version += 1
+        return True
+
     def release(self, slot: int) -> List[int]:
         """O(1) in tokens: just returns the slot's blocks to the free list
         and zeroes its table row (stale writes -> garbage block, I4)."""
