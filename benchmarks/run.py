@@ -4,6 +4,8 @@
   PYTHONPATH=src python -m benchmarks.run --tree [--smoke-floor 1.8]
   PYTHONPATH=src python -m benchmarks.run --tree --temperature 0.8 \
       [--smoke-floor 1.3]
+  PYTHONPATH=src python -m benchmarks.run --scenario sched \
+      [--prefix-share 8] [--smoke-floor 0.5]
 
 Prints ``name,us_per_call,derived`` CSV. Requires the trained artifacts
 (``python examples/pard_adaptation_train.py``); without them it falls back
@@ -13,10 +15,15 @@ except the serve_tree table, which self-drafts and stays meaningful).
 ``--tree`` runs the tree-drafting serve benchmark (serve_tree);
 ``--temperature`` > 0 switches it to sampled (multi-round rejection
 sampling) acceptance, recorded under BENCH_serve.json's "tree_sampled"
-section. ``--smoke-floor`` turns the run into the CI regression gate: it
-exits non-zero with a one-line diagnostic naming the failing mode/metric
-unless every PARD mean accepted length recorded in the section that this
-run wrote ("tree" or "tree_sampled") stays at or above the floor.
+section. ``--scenario sched`` runs the layered-scheduler benchmark
+(serve_sched: shared-prefix workload, ``--prefix-share`` requests per
+system prompt, TTFT/per-token latency + prefix hit rate recorded under
+"serve_sched"). ``--smoke-floor`` turns the run into the CI regression
+gate: it exits non-zero with a one-line diagnostic naming the failing
+mode/metric unless every PARD mean accepted length recorded in the
+section that this run wrote ("tree"/"tree_sampled"/...) stays at or above
+the floor — for ``--scenario sched`` the floor applies to the cached
+prefix hit rate instead, and TTFT must have been recorded.
 
 The roofline/dry-run numbers (deliverable e/g) are produced separately by
 ``python -m repro.launch.dryrun --all --both-meshes`` and summarised with
@@ -30,8 +37,10 @@ import time
 
 def check_floor(floor: float, section: str = "tree") -> int:
     """CI gate: every recorded PARD mean accepted length in ``section``
-    must be >= floor. Prints one diagnostic line per entry naming the
-    mode and metric; returns a process exit code."""
+    must be >= floor — except ``serve_sched``, where the floor applies to
+    the cached prefix hit rate and TTFT must have been recorded. Prints one
+    diagnostic line per entry naming the mode and metric; returns a
+    process exit code."""
     from . import common
 
     with open(common.BENCH_SERVE) as f:
@@ -39,11 +48,26 @@ def check_floor(floor: float, section: str = "tree") -> int:
     tree = record.get(section)
     if not tree:
         flag = {"tree": "--tree", "tree_sampled": "--tree --temperature 0.8",
-                "tree_adaptive": "--adaptive-tree"}.get(section, "--tree")
+                "tree_adaptive": "--adaptive-tree",
+                "serve_sched": "--scenario sched"}.get(section, "--tree")
         print(f"smoke-floor: no '{section}' section in {common.BENCH_SERVE}"
               f" — run with {flag}", file=sys.stderr)
         return 2
     failed = False
+    if section == "serve_sched":
+        hit = tree.get("cached", {}).get("prefix_hit_rate")
+        ok = hit is not None and hit >= floor
+        failed |= not ok
+        print(f"smoke-floor: serve_sched.cached prefix_hit_rate="
+              f"{hit if hit is None else f'{hit:.3f}'} "
+              f"{'>=' if ok else '< FAIL'} {floor}", file=sys.stderr)
+        for name, entry in sorted(tree.items()):
+            ok = entry.get("ttft_p50_ms") is not None
+            failed |= not ok
+            print(f"smoke-floor: serve_sched.{name} ttft_p50_ms="
+                  f"{entry.get('ttft_p50_ms')} "
+                  f"{'recorded' if ok else 'MISSING'}", file=sys.stderr)
+        return 1 if failed else 0
     for name, entry in sorted(tree.items()):
         acc = entry.get("mean_accepted")
         if acc is None:
@@ -67,6 +91,16 @@ def main() -> None:
                          "(serve_adaptive; records the 'tree_adaptive' "
                          "BENCH_serve section and asserts the controller "
                          "matches the static (2,2,2,1) baseline)")
+    ap.add_argument("--scenario", default=None,
+                    choices=["sched", "serve", "tree", "adaptive"],
+                    help="named serving scenario: 'sched' runs the "
+                         "scheduler/prefix-cache benchmark (serve_sched, "
+                         "records the 'serve_sched' BENCH_serve section); "
+                         "'serve'/'tree'/'adaptive' alias the other serve "
+                         "tables so CI and local runs share one entrypoint")
+    ap.add_argument("--prefix-share", type=int, default=8, metavar="N",
+                    help="serve_sched workload mix: requests per distinct "
+                         "system prompt (1 = all-unique cold workload)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="serve_tree sampling temperature (0 = greedy; > 0 "
                          "records the 'tree_sampled' BENCH_serve section)")
@@ -86,18 +120,25 @@ def main() -> None:
               "examples/pard_adaptation_train.py first; using random weights",
               file=sys.stderr)
 
+    scenario_table = {"sched": "serve_sched", "serve": "serve",
+                      "tree": "serve_tree", "adaptive": "serve_adaptive"}
+    scoped = args.tree or args.adaptive_tree or args.scenario
     names = args.only.split(",") if args.only else \
-        ([] if args.tree or args.adaptive_tree else list(tables.ALL))
+        ([] if scoped else list(tables.ALL))
     if args.tree and "serve_tree" not in names:
         names.append("serve_tree")
     if args.adaptive_tree and "serve_adaptive" not in names:
         names.append("serve_adaptive")
+    if args.scenario and scenario_table[args.scenario] not in names:
+        names.append(scenario_table[args.scenario])
     t0 = time.time()
     print("name,us_per_call,derived")
     for name in names:
         try:
             if name == "serve_tree":
                 tables.serve_tree(temperature=args.temperature)
+            elif name == "serve_sched":
+                tables.serve_sched(prefix_share=args.prefix_share)
             else:
                 tables.ALL[name]()
         except AssertionError as e:
@@ -110,7 +151,9 @@ def main() -> None:
     print(f"# total wall: {time.time() - t0:.1f}s", file=sys.stderr)
 
     if args.smoke_floor is not None:
-        if args.adaptive_tree:
+        if args.scenario == "sched":
+            section = "serve_sched"
+        elif args.adaptive_tree:
             section = "tree_adaptive"
         else:
             section = "tree_sampled" if args.temperature > 0 else "tree"

@@ -16,8 +16,10 @@ history.
 import json
 import sys
 
-# the sections the bench-smoke job re-measures in CI (see ci.yml)
-CI_SECTIONS = ("tree", "tree_sampled", "tree_adaptive")
+# the sections the bench-smoke job re-measures in CI (see ci.yml);
+# serve_sched entries additionally carry TTFT/latency fields, but only
+# tokens/sec is tabulated here (absence-tolerant like the others)
+CI_SECTIONS = ("tree", "tree_sampled", "tree_adaptive", "serve_sched")
 
 
 def load(path):

@@ -120,6 +120,24 @@ def _draft_window(gen, n, m, k, mask_id):
     return tok.astype(jnp.int32)
 
 
+def _chunk_window(gen, pf, cl, width):
+    """[B, width] prompt chunk starting at the prefill cursor ``pf``; slots
+    past the per-row real count ``cl`` are zero pads whose KV writes land
+    beyond the cursor and are re-covered by the next chunk / first decode
+    window (the standard rollback invariant). ``pf + width`` never reaches
+    the buffer end: the engine validates prompt + max_new + window slack
+    <= max_len and width <= slack, so the dynamic slice never clamps."""
+    tok = jax.vmap(lambda g, p: jax.lax.dynamic_slice(g, (p,), (width,)))(
+        gen, pf)
+    return jnp.where(jnp.arange(width)[None, :] < cl[:, None], tok,
+                     0).astype(jnp.int32)
+
+
+def _phase(state: "DecodeState"):
+    """(prefilling [B], pf [B]) from the state's prefill cursor fields."""
+    return state.pf_pos < state.pf_len, state.pf_pos
+
+
 def _pick_next(logits: Array, temp: Array, keys: Array) -> Array:
     """[B, V] logits -> [B] next token: argmax for temp == 0 rows, a sample
     from softmax(logits / temp) under the row's own key otherwise. The
@@ -404,6 +422,16 @@ class DecodeState:
                      this index, so one batch mixes tree shapes and the
                      serving engine's adaptive controller reshapes a
                      request between windows by a single scatter.
+      pf_pos [B]     chunked-prefill cursor: prompt tokens already written
+                     to the KV caches. A row with ``pf_pos < pf_len`` is in
+                     the PREFILLING phase: the chunked step builders feed it
+                     prompt chunks instead of draft/verify windows inside
+                     the SAME jitted forward as the decoding rows
+                     (DESIGN.md §8), commit nothing for it, and advance the
+                     cursor on device. ``pf_pos == pf_len`` = decoding.
+      pf_len [B]     prompt tokens the row must prefill (prompt length - 1:
+                     the last prompt token is re-processed by the first
+                     verify window, exactly like the uniform-batch prefill).
     """
     gen: Array
     n: Array
@@ -415,6 +443,8 @@ class DecodeState:
     temp: Optional[Array] = None
     rngs: Optional[Array] = None
     tree_idx: Optional[Array] = None
+    pf_pos: Optional[Array] = None
+    pf_len: Optional[Array] = None
 
 
 # every field is pytree data (derived from the dataclass so new fields can
@@ -476,7 +506,8 @@ class SpecDecoder:
                  draft_params=None, draft_cfg: ModelConfig = None, *,
                  k: int = 8, max_len: int = 2048, temperature: float = 0.0,
                  enc_out=None, draft_enc_out=None, kv_block_size: int = 0,
-                 tree: Optional[TreeTemplate] = None):
+                 tree: Optional[TreeTemplate] = None,
+                 prefill_chunk: int = 8):
         self.tp, self.tc = target_params, target_cfg
         self.dp, self.dc = draft_params, draft_cfg
         if tree is not None:
@@ -504,6 +535,10 @@ class SpecDecoder:
         # 0 = contiguous caches; > 0 = paged pools, steps consume the block
         # tables carried in DecodeState.tables (the serving engine's layout)
         self.kv_block_size = kv_block_size
+        # window width of the chunked AR step (engine mode="ar" only; spec
+        # and tree chunk widths are bounded by the draft/verify windows —
+        # see chunk_width)
+        self.prefill_chunk = prefill_chunk
         if draft_cfg is not None:
             assert draft_cfg.vocab_size == target_cfg.vocab_size, \
                 "speculative decoding requires a shared tokenizer/vocab"
@@ -515,9 +550,27 @@ class SpecDecoder:
         draft mask window vs the verify window (K+1 flat, the bank's widest
         template for a tree), +2 slack. Sizes cache rows and contiguous
         allocations; the paged engine allocates per request via
-        ``row_slack`` instead (I3)."""
+        ``row_slack`` instead (I3). AR decoders (no draft) additionally
+        cover the chunked AR step's window: its decode rows carry
+        ``prefill_chunk - 1`` pad slots whose KV writes land past the
+        committed count and are re-covered next step."""
         verify = self.tree.max_slots if self.tree is not None else self.k + 1
-        return max(2 * self.k, verify) + 2
+        slack = max(2 * self.k, verify)
+        if self.dp is None:
+            slack = max(slack, self.prefill_chunk)
+        return slack + 2
+
+    @property
+    def chunk_width(self) -> int:
+        """Prompt tokens one chunked engine step consumes per prefilling
+        row (DESIGN.md §8). A single cursor feeds BOTH models, so the
+        chunk is bounded by the narrower of the 2K draft mask window and
+        the target verify window (K+1 flat / bank max_slots tree); AR
+        engines have no draft forward and use ``prefill_chunk``."""
+        if self.dp is None:
+            return self.prefill_chunk
+        verify = self.tree.max_slots if self.tree is not None else self.k + 1
+        return min(2 * self.k, verify)
 
     def row_slack(self, tmpl_idx: int) -> int:
         """Window slack for ONE request pinned to bank template
@@ -559,25 +612,50 @@ class SpecDecoder:
                        kv_block_size=self.kv_block_size)
 
     # ----------------------------------------------------------------- AR
-    def _build_ar_step(self):
+    def _build_ar_step(self, chunked: bool = False):
         """One AR decode step over a DecodeState (the AR+ baseline and the
         engine's mode="ar" — one shared implementation). Rows with
         ``state.temp == 0`` commit the argmax; rows with temp > 0 sample
-        from softmax(logits / temp) under their own PRNG key."""
+        from softmax(logits / temp) under their own PRNG key.
+
+        ``chunked=True`` (engine only): the window widens to
+        ``prefill_chunk`` slots so PREFILLING rows consume prompt chunks in
+        the same forward (DESIGN.md §8). Decoding rows carry their last
+        token at slot 0 plus pads whose KV writes land past the committed
+        count and are re-covered next step (causal masking keeps slot 0's
+        logits exact); the uniform-batch path keeps the 1-wide window."""
+        w = self.prefill_chunk if chunked else 1
+
         def step(state: DecodeState) -> DecodeState:
             gen, n, done, temp = state.gen, state.n, state.done, state.temp
             next_keys, use = acceptance.split_row_keys(state.rngs)
             last = jnp.take_along_axis(gen, (n - 1)[:, None], axis=1)
+            toks = last.astype(jnp.int32)
+            cp = n - 1
+            if chunked:
+                prefilling, pf = _phase(state)
+                cl = jnp.minimum(w, state.pf_len - pf)
+                toks = jnp.pad(toks, ((0, 0), (0, w - 1)))
+                toks = jnp.where(prefilling[:, None],
+                                 _chunk_window(gen, pf, cl, w), toks)
+                cp = jnp.where(prefilling, pf, cp)
+                # sampling streams are untouched while prefilling (see
+                # _build_spec_step)
+                next_keys = jnp.where(prefilling[:, None], state.rngs,
+                                      next_keys)
             logits, tcache, _ = self._target_forward(
-                last.astype(jnp.int32), state.tcache, n - 1, state.tables)
-            nxt = _pick_next(logits[:, -1], temp, use)
+                toks, state.tcache, cp, state.tables)
+            nxt = _pick_next(logits[:, 0], temp, use)
             gen2 = jax.vmap(
                 lambda g, t, p: jax.lax.dynamic_update_slice(g, t[None], (p,))
             )(gen, nxt, n)
-            gen = jnp.where(done[:, None], gen, gen2)
-            n = jnp.where(done, n, n + 1)
-            return dataclasses.replace(state, gen=gen, n=n, tcache=tcache,
-                                       rngs=next_keys)
+            frozen = (done | prefilling) if chunked else done
+            gen = jnp.where(frozen[:, None], gen, gen2)
+            n = jnp.where(frozen, n, n + 1)
+            return dataclasses.replace(
+                state, gen=gen, n=n, tcache=tcache, rngs=next_keys,
+                pf_pos=(state.pf_pos if not chunked else
+                        jnp.where(prefilling, pf + cl, state.pf_pos)))
         return step
 
     def init_state(self, prompt: Array, gen_len: int,
@@ -597,7 +675,9 @@ class SpecDecoder:
             temp=jnp.full((b,), self.temperature, jnp.float32),
             rngs=acceptance.make_row_keys(seed, np.arange(b)),
             tree_idx=(jnp.zeros((b,), jnp.int32)
-                      if self.tree is not None else None))
+                      if self.tree is not None else None),
+            pf_pos=jnp.zeros((b,), jnp.int32),
+            pf_len=jnp.zeros((b,), jnp.int32))
 
     def generate_ar(self, prompt: Array, max_new: int, seed: int = 0):
         b, p = prompt.shape
@@ -626,33 +706,55 @@ class SpecDecoder:
         stats = SpecStats(max_new, max_new * b, 0, max_new, None, 0.0, 1.0)
         return tokens, stats
 
-    def _pard_depth_logits(self, gen, n, m, dcache, tables):
+    def _pard_depth_logits(self, gen, n, m, dcache, tables, pfinfo=None):
         """ONE PARD draft forward (Eq. 7): proposal logits for every depth
         1..K. Slot A-1 (the last real token) proposes depth 1, the K-1 mask
-        slots the rest. Returns (lg [B, K, V], new draft cache)."""
+        slots the rest. Returns (lg [B, K, V], new draft cache).
+
+        ``pfinfo = (prefilling, pf, cl)`` (chunked engine steps only):
+        prefilling rows consume a ``cl``-token prompt chunk at cursor ``pf``
+        through the SAME forward instead of the mask window — their proposal
+        logits are garbage and masked out by the caller's commit logic."""
         k, dc = self.k, self.dc
         d_has_ssm = _has_ssm(dc)
         tok = _draft_window(gen, n, m, k, dc.mask_token_id)
+        pos = m
+        ssm_idx = n - m - 1          # state after the last real token (A-1)
+        if pfinfo is not None:
+            prefilling, pf, cl = pfinfo
+            chunk = _chunk_window(gen, pf, cl, 2 * k)
+            tok = jnp.where(prefilling[:, None], chunk, tok)
+            pos = jnp.where(prefilling, pf, pos)
+            ssm_idx = jnp.where(prefilling, cl - 1, ssm_idx)
         logits, dcache, _ = self._draft_forward(
-            tok, dcache, m, tables, collect_ssm=d_has_ssm)
+            tok, dcache, pos, tables, collect_ssm=d_has_ssm)
         if d_has_ssm:
-            # state after the last real token (input index A-1)
-            dcache = gather_ssm_states(dc, dcache, n - m - 1)
+            dcache = gather_ssm_states(dc, dcache, ssm_idx)
         a = n - m
         sl = (a - 1)[:, None] + jnp.arange(k)[None, :]
         lg = jax.vmap(lambda row, s: row[s])(logits, sl)   # [B, K, V]
         return lg, dcache
 
     # ------------------------------------------------------------- shared
-    def _build_spec_step(self, mode: str):
+    def _build_spec_step(self, mode: str, chunked: bool = False):
+        """One flat speculative step. ``chunked=True`` (the serving
+        engine's unified step, DESIGN.md §8) additionally consumes a
+        ``chunk_width``-token prompt chunk for every PREFILLING row
+        (``state.pf_pos < state.pf_len``) inside the same draft + verify
+        forwards: prefilling rows substitute chunk tokens / cursor
+        positions for the draft and verify windows, commit nothing, and
+        advance ``pf_pos`` on device — admission never runs a standalone
+        prefill forward and decoding rows never stall."""
         k = self.k
         tc, dc = self.tc, self.dc
         mask_id = dc.mask_token_id
         t_has_ssm = _has_ssm(tc)
         d_has_ssm = _has_ssm(dc)
+        cw = self.chunk_width                           # == k + 1 (flat)
 
-        def propose_pard(gen, n, m, dcache, tables, temp, dkeys):
-            lg, dcache = self._pard_depth_logits(gen, n, m, dcache, tables)
+        def propose_pard(gen, n, m, dcache, tables, temp, dkeys, pfinfo):
+            lg, dcache = self._pard_depth_logits(gen, n, m, dcache, tables,
+                                                 pfinfo)
             scaled = acceptance.scale_logits(lg, temp)      # [B, K, V]
             greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
 
@@ -664,17 +766,25 @@ class SpecDecoder:
             props = jax.lax.cond(jnp.any(temp > 0), samp, lambda: greedy)
             return props, scaled, dcache, 1                 # 1 draft forward
 
-        def propose_vsd(gen, n, m, dcache, tables, temp, dkeys):
+        def propose_vsd(gen, n, m, dcache, tables, temp, dkeys, pfinfo):
             # call 1: advance committed window, propose token 1
             tok = _draft_window(gen, n, m, k, mask_id)[:, :k + 1]  # reals only
+            pos = m
+            ssm_idx = n - m - 1
+            if pfinfo is not None:
+                prefilling, pf, cl = pfinfo
+                tok = jnp.where(prefilling[:, None],
+                                _chunk_window(gen, pf, cl, k + 1), tok)
+                pos = jnp.where(prefilling, pf, pos)
+                ssm_idx = jnp.where(prefilling, cl - 1, ssm_idx)
             logits, dcache, _ = self._draft_forward(
-                tok, dcache, m, tables, collect_ssm=d_has_ssm)
+                tok, dcache, pos, tables, collect_ssm=d_has_ssm)
             a = n - m
             if d_has_ssm:
                 # roll SSM state back to "after the last real token"; the AR
                 # proposal calls below advance a throwaway copy, the next
                 # iteration restarts from this snapshot.
-                dcache = gather_ssm_states(dc, dcache, a - 1)
+                dcache = gather_ssm_states(dc, dcache, ssm_idx)
             snapshot = dcache
             lg_list = [jax.vmap(lambda row, i: row[i])(logits, a - 1)]
             props = []
@@ -704,14 +814,30 @@ class SpecDecoder:
             next_keys, use = acceptance.split_row_keys(state.rngs)
             dkeys = acceptance.fold_row_keys(use, 0)
             akeys = acceptance.fold_row_keys(use, 1)
+            pfinfo = None
+            if chunked:
+                prefilling, pf = _phase(state)
+                cl = jnp.minimum(cw, state.pf_len - pf)
+                pfinfo = (prefilling, pf, cl)
+                # a prefilling row does not consume its sampling stream, so
+                # a request's sampled trajectory is invariant to HOW its
+                # prompt was prefilled (chunk schedule, prefix-cache hits)
+                next_keys = jnp.where(prefilling[:, None], state.rngs,
+                                      next_keys)
             props, scaled_q, dcache, n_draft = propose(gen, n, m, dcache,
-                                                       tables, temp, dkeys)
+                                                       tables, temp, dkeys,
+                                                       pfinfo)
 
             # verify window: [last committed, d_1..d_K]
             last = jnp.take_along_axis(gen, (n - 1)[:, None], axis=1)
             vin = jnp.concatenate([last.astype(jnp.int32), props], axis=1)
+            vpos = n - 1
+            if chunked:
+                vin = jnp.where(prefilling[:, None],
+                                _chunk_window(gen, pf, cl, k + 1), vin)
+                vpos = jnp.where(prefilling, pf, vpos)
             logits, tcache_new, _ = self._target_forward(
-                vin, tcache, n - 1, tables, collect_ssm=t_has_ssm)
+                vin, tcache, vpos, tables, collect_ssm=t_has_ssm)
 
             # acceptance (core/acceptance.py): greedy rule for temp == 0
             # rows, Leviathan sampling for temp > 0 rows — row-selected so
@@ -735,6 +861,10 @@ class SpecDecoder:
             accepted = jnp.where(sampled[:, None], acc_s, acc_g)
             commit_tok = jnp.where(sampled, commit_s, commit_g)
 
+            # frozen rows commit nothing: done rows stay done, prefilling
+            # rows consumed a prompt chunk instead of a verify window
+            frozen = (done | prefilling) if chunked else done
+
             # committed tokens this iteration: d_1..d_a, then commit_tok
             j = jnp.arange(k + 1)[None, :]
             props_ext = jnp.concatenate([props, props[:, -1:]], axis=1)
@@ -743,38 +873,45 @@ class SpecDecoder:
             # frozen rows: rewrite what's already there
             old = jax.vmap(lambda g, p: jax.lax.dynamic_slice(g, (p,), (k + 1,)))(
                 gen, n)
-            vec = jnp.where(done[:, None], old, vec)
+            vec = jnp.where(frozen[:, None], old, vec)
             gen = _row_write(gen, vec.astype(gen.dtype), n)
 
-            n_commit = jnp.where(done, 0, a + 1)
-            new_m = jnp.where(done, m, n)
+            n_commit = jnp.where(frozen, 0, a + 1)
+            new_m = jnp.where(frozen, m, n)
             new_n = n + n_commit
 
             if t_has_ssm:
-                # state after input index a (= last committed token processed)
-                tcache_new = gather_ssm_states(tc, tcache_new, a)
+                # state after input index a (last committed token processed);
+                # prefilling rows keep the state after their chunk's last
+                # REAL token (pads excluded — DESIGN.md §3 unchanged)
+                ssm_idx = a if not chunked else jnp.where(prefilling, cl - 1,
+                                                          a)
+                tcache_new = gather_ssm_states(tc, tcache_new, ssm_idx)
             # frozen rows keep old caches? their cache contents are untouched
             # at positions < n and never read beyond; safe to keep new buffers.
             acc_hist = jnp.sum(
-                jnp.where(done[:, None], 0, accepted), axis=0)  # [K]
+                jnp.where(frozen[:, None], 0, accepted), axis=0)  # [K]
             # chain = one sibling per depth: round 0 holds every accept
-            round_hist = jnp.sum(jnp.where(done, 0, a))[None].astype(jnp.int32)
+            round_hist = jnp.sum(
+                jnp.where(frozen, 0, a))[None].astype(jnp.int32)
             # per-row accepted rank (chain: rank 0 everywhere it accepted;
             # -1 rejected/frozen) — the adaptive tree controller's signal,
             # shaped like the tree step's so callers share one unpacking
             rank = jnp.where(
                 (jnp.arange(1, k + 1)[None, :] <= a[:, None])
-                & ~done[:, None], 0, -1).astype(jnp.int32)
+                & ~frozen[:, None], 0, -1).astype(jnp.int32)
             new_state = dataclasses.replace(
                 state, gen=gen, n=new_n, m=new_m, tcache=tcache_new,
-                dcache=dcache, rngs=next_keys)
-            return new_state, jnp.where(done, 0, a), acc_hist, round_hist, \
+                dcache=dcache, rngs=next_keys,
+                pf_pos=(state.pf_pos if not chunked else
+                        jnp.where(prefilling, pf + cl, state.pf_pos)))
+            return new_state, jnp.where(frozen, 0, a), acc_hist, round_hist, \
                 rank, n_draft
 
         return step
 
     # --------------------------------------------------------------- tree
-    def _build_tree_step(self):
+    def _build_tree_step(self, chunked: bool = False):
         """One tree-verification step over PER-ROW templates (DESIGN.md
         §6/§7).
 
@@ -798,12 +935,21 @@ class SpecDecoder:
         KV survives: compact_tree_caches moves it onto the committed
         positions; losing branches (and slots past a row's template) are
         re-covered by the next window's cache_pos like flat-K rejects.
+
+        ``chunked=True``: prefilling rows ride the same two forwards with
+        prompt chunks (DESIGN.md §8). In the packed tree window a chunk is
+        just a CAUSAL "tree": ancestor bitmask = all-lower-bits, win_len =
+        the chunk's real token count, positions = cursor + slot — so the
+        tree kernels serve mixed prefill/decode batches unchanged.
         """
         bank = self.tree
         tc, dc = self.tc, self.dc
         assert bank is not None
         d, s = bank.max_depth, bank.max_slots
         max_b = bank.max_branching
+        cw = self.chunk_width                       # min(2K, max_slots)
+        # causal ancestor-or-self bitmask: window slot i sees slots 0..i
+        chain_anc = (~jnp.uint32(0)) >> jnp.uint32(31 - jnp.arange(s))
         bank_parent = jnp.asarray(bank.parent)                     # [T, S]
         bank_depth = jnp.asarray(bank.depth)
         bank_choice = jnp.asarray(bank.choice)
@@ -826,11 +972,23 @@ class SpecDecoder:
             cmap, nslots = bank_cmap[sel], bank_nslots[sel]
             node_depth = depth[:, 1:]                              # [B, N]
 
+            pfinfo = None
+            if chunked:
+                prefilling, pf = _phase(state)
+                cl = jnp.minimum(cw, state.pf_len - pf)
+                pfinfo = (prefilling, pf, cl)
+                # prefilling rows keep their sampling stream untouched (see
+                # _build_spec_step): sampled output is prefill-schedule- and
+                # prefix-cache-invariant
+                next_keys = jnp.where(prefilling[:, None], state.rngs,
+                                      next_keys)
+
             # draft: depth distributions -> per-row template tokens. One
             # top-max_b per depth covers every template's ranks; lax.top_k
             # and argmax share lowest-index tie-breaking, so rank 0 IS the
             # flat path's argmax (degenerate-chain identity).
-            lg, dcache = self._pard_depth_logits(gen, n, m, dcache, tables)
+            lg, dcache = self._pard_depth_logits(gen, n, m, dcache, tables,
+                                                 pfinfo)
             topk = jax.lax.top_k(lg, max_b)[1].astype(jnp.int32)   # [B,D,MB]
             di = jnp.maximum(node_depth - 1, 0)
             per_node = jnp.take_along_axis(
@@ -855,9 +1013,28 @@ class SpecDecoder:
             last = jnp.take_along_axis(gen, (n - 1)[:, None], axis=1)
             vin = jnp.concatenate([last.astype(jnp.int32), props], axis=1)
             positions = (n - 1)[:, None] + depth
-            tinfo = TreeAttnInfo(win_start=n - 1, anc=anc, win_len=nslots)
+            win_start, win_anc, win_len = n - 1, anc, nslots
+            if chunked:
+                # prefilling rows: a cl-token causal chunk through the same
+                # packed window (pads past cl are invisible and re-covered).
+                # Slice at the chunk width cw — guaranteed inside the gen
+                # buffer by the slack validation — and pad to the window:
+                # slicing at s (up to 32) could clamp near max_len and
+                # silently shift the chunk.
+                chunk = _chunk_window(gen, pf, cl, cw)
+                chunk = jnp.pad(chunk, ((0, 0), (0, s - cw)))
+                vin = jnp.where(prefilling[:, None], chunk, vin)
+                positions = jnp.where(
+                    prefilling[:, None],
+                    pf[:, None] + jnp.arange(s)[None, :], positions)
+                win_start = jnp.where(prefilling, pf, win_start)
+                win_anc = jnp.where(prefilling[:, None], chain_anc[None, :],
+                                    win_anc)
+                win_len = jnp.where(prefilling, cl, win_len)
+            tinfo = TreeAttnInfo(win_start=win_start, anc=win_anc,
+                                 win_len=win_len)
             logits, tcache_new, _ = self._target_forward(
-                vin, tcache, n - 1, tables, positions=positions,
+                vin, tcache, win_start, tables, positions=positions,
                 tree_info=tinfo)
 
             # acceptance (core/acceptance.py), row-selected greedy/sampled;
@@ -883,9 +1060,13 @@ class SpecDecoder:
             commit_tok = jnp.where(sampled, commit_s, commit_g)
             rank = jnp.where(sampled[:, None], rank_s, rank_g)  # [B, D]
 
+            # frozen rows commit nothing: done rows stay done, prefilling
+            # rows consumed a prompt chunk instead of a verify window
+            frozen = (done | prefilling) if chunked else done
+
             dflt = jnp.arange(1, d + 1, dtype=jnp.int32)[None, :]
             # rejected depths and frozen rows: identity copy (src == dst)
-            src_slot = jnp.where((src_slot > 0) & ~done[:, None],
+            src_slot = jnp.where((src_slot > 0) & ~frozen[:, None],
                                  src_slot, dflt)
 
             # committed tokens this iteration: path d_1..d_a, then commit_tok
@@ -895,7 +1076,7 @@ class SpecDecoder:
                             jnp.where(j == a[:, None], commit_tok[:, None], 0))
             old = jax.vmap(lambda g, p: jax.lax.dynamic_slice(
                 g, (p,), (d + 1,)))(gen, n)
-            vec = jnp.where(done[:, None], old, vec)
+            vec = jnp.where(frozen[:, None], old, vec)
             gen = _row_write(gen, vec.astype(gen.dtype), n)
 
             # only the winning path's KV survives at committed positions
@@ -903,24 +1084,26 @@ class SpecDecoder:
             tcache_new = compact_tree_caches(
                 tc, tcache_new, src_pos, n, d, tables, self.kv_block_size)
 
-            n_commit = jnp.where(done, 0, a + 1)
-            new_m = jnp.where(done, m, n)
+            n_commit = jnp.where(frozen, 0, a + 1)
+            new_m = jnp.where(frozen, m, n)
             new_n = n + n_commit
             hist = jnp.sum(
-                jnp.where(done[:, None], 0,
+                jnp.where(frozen[:, None], 0,
                           (a[:, None] > jnp.arange(d)[None, :])
                           .astype(jnp.int32)), axis=0)             # [D]
             # per-round accept counts: which sibling rank won at each
             # accepted depth (rank == -1 where the depth rejected)
-            valid = (rank >= 0) & ~done[:, None]                   # [B, D]
+            valid = (rank >= 0) & ~frozen[:, None]                 # [B, D]
             round_hist = jnp.sum(
                 (rank[:, :, None] == jnp.arange(max_b)[None, None, :])
                 & valid[:, :, None], axis=(0, 1)).astype(jnp.int32)
-            rank = jnp.where(done[:, None], -1, rank)
+            rank = jnp.where(frozen[:, None], -1, rank)
             new_state = dataclasses.replace(
                 state, gen=gen, n=new_n, m=new_m, tcache=tcache_new,
-                dcache=dcache, rngs=next_keys)
-            return new_state, jnp.where(done, 0, a), hist, round_hist, \
+                dcache=dcache, rngs=next_keys,
+                pf_pos=(state.pf_pos if not chunked else
+                        jnp.where(prefilling, pf + cl, state.pf_pos)))
+            return new_state, jnp.where(frozen, 0, a), hist, round_hist, \
                 rank, 1
 
         return step

@@ -30,6 +30,12 @@ Two cache layouts share ONE kernel body:
 
 The kernel's masking logic is identical in both cases because a sequence
 block index ki maps to the same absolute position range either way.
+
+Validity is PER ROW — (kv_len, q_pos) scalars — so one launch serves the
+serving engine's fused mixed batches (DESIGN.md §8): decoding rows sweep
+their long cache while prefilling rows' chunks (q_pos = cursor + i,
+kv_len = cursor + chunk) skip every block past their short fill, keeping
+swept bytes proportional to each row's actual context.
 """
 from __future__ import annotations
 

@@ -62,6 +62,19 @@ def main():
     ap.add_argument("--kv-block-size", type=int, default=64)
     ap.add_argument("--kv-num-blocks", type=int, default=None,
                     help="paged pool size (default: worst-case coverage)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="refcounted prompt-prefix reuse in the paged pool "
+                         "(DESIGN.md §8): same-prefix requests map cached "
+                         "blocks copy-free and only prefill their tails")
+    ap.add_argument("--prefix-share", type=int, default=1, metavar="N",
+                    help="workload mix: requests per distinct system "
+                         "prompt (1 = every prompt unique; pair with "
+                         "--prefix-cache to see hits)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    metavar="TOKENS",
+                    help="max prompt tokens consumed per step across "
+                         "prefilling rows (chunked-prefill lanes; default "
+                         "unthrottled)")
     args = ap.parse_args()
 
     tc = get_config(args.target)
@@ -92,17 +105,32 @@ def main():
                  temperature=args.temperature, seed=args.seed,
                  kv_layout=args.kv_layout, kv_block_size=args.kv_block_size,
                  kv_num_blocks=args.kv_num_blocks, tree=tree,
-                 adaptive_tree=args.adaptive_tree)
+                 adaptive_tree=args.adaptive_tree,
+                 prefix_cache=args.prefix_cache,
+                 prefill_budget=args.prefill_budget)
 
     corpus = MarkovCorpus(vocab_size=tc.vocab_size, seed=0, determinism=2.0)
     rng = np.random.default_rng(args.seed)
+    share = max(1, args.prefix_share)
+    sys_prompts = [corpus.prompts(rng, 1, args.prompt_len)[0]
+                   for _ in range(-(-args.requests // share))]
     t0 = time.perf_counter()
     for i in range(args.requests):
         # per-request temperature: the first --greedy-requests rows decode
         # greedily even when the engine default samples (mixed batches)
         temp = 0.0 if i < args.greedy_requests else None
-        eng.submit(corpus.prompts(rng, 1, args.prompt_len)[0], args.max_new,
-                   temperature=temp)
+        if share > 1:
+            # shared-prefix mix: `share` requests per system prompt, each
+            # with a unique tail (the prefix-cache benchmark workload);
+            # groups interleave round-robin so same-prefix requests arrive
+            # across batch generations — concurrent identical prompts
+            # cannot hit (computed gating), later arrivals do
+            prompt = np.concatenate([
+                sys_prompts[i % len(sys_prompts)],
+                np.asarray(corpus.prompts(rng, 1, 8)[0], np.int32)])
+        else:
+            prompt = corpus.prompts(rng, 1, args.prompt_len)[0]
+        eng.submit(prompt, args.max_new, temperature=temp)
     comps = eng.run()
     wall = time.perf_counter() - t0
 
@@ -119,10 +147,19 @@ def main():
           f"throughput={total / wall:.1f} tok/s "
           f"mean_accepted={eng.mean_accepted():.2f}")
     lats = sorted(c.wall_done - c.wall_submitted for c in comps)
-    print(f"latency p50={lats[len(lats) // 2]:.2f}s p max={lats[-1]:.2f}s")
+    lat = eng.latency_summary()
+    print(f"latency p50={lats[len(lats) // 2]:.2f}s p max={lats[-1]:.2f}s "
+          f"ttft_p50={lat['ttft_p50_ms']:.0f}ms "
+          f"ttft_p95={lat['ttft_p95_ms']:.0f}ms "
+          f"tok_p50={lat['tok_p50_ms']:.1f}ms "
+          f"tok_p95={lat['tok_p95_ms']:.1f}ms")
     print(f"kv layout={args.kv_layout} "
           f"capacity={eng.kv_capacity_bytes() / 1e6:.2f}MB "
           f"peak_in_use={eng.peak_kv_bytes_in_use / 1e6:.2f}MB")
+    if args.prefix_cache:
+        print(f"prefix cache: hit_rate={eng.prefix_hit_rate():.2f} "
+              f"({eng.stats['prefix_hit_blocks']}/"
+              f"{eng.stats['prefix_lookup_blocks']} prompt blocks)")
     if args.adaptive_tree:
         hist = eng.stats["tree_hist"]
         per = {t.branching: int(h) for t, h in zip(tree.templates, hist)}

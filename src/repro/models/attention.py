@@ -22,6 +22,15 @@ KV caches come in two layouts (DESIGN.md §5):
 The paged layout is selected by passing ``block_tables``/``kv_block_size``
 through ``forward`` — the same rollback-by-``cache_pos`` semantics hold
 because validity is still ``kv_index < kv_len``.
+
+Chunked prefill (DESIGN.md §8) needs nothing new here: every path is
+driven by PER-ROW ``cache_pos``/positions, so one forward mixes decoding
+rows (small verify window against a long cache) with prefilling rows (a
+prompt chunk at the row's cursor) — the serving executor's fused step is
+just such a batch. Under tree verification a prefilling row carries a
+causal all-lower-bits ancestor mask and ``win_len`` = its chunk's real
+token count, making the chunk an ordinary causal window to
+``tree_allowed`` and both tree kernels.
 """
 from __future__ import annotations
 

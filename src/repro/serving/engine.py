@@ -1,168 +1,61 @@
-"""Batched serving engine with continuous batching — the Transformers+/vLLM
-analogue of the paper's evaluation stack.
+"""Batched serving engine — the thin facade over the layered serving stack
+(DESIGN.md §8).
+
+The engine is three layers with one owner each:
+
+  * ``serving.scheduler.Scheduler`` (host): request queue, FIFO-fair
+    skip-ahead admission, chunked-prefill budgeting, prefix-cache matching,
+    adaptive tree-template control, per-request latency accounting (queue
+    wait, TTFT, per-token p50/p95);
+  * ``serving.executor.Executor`` (device): the ONE ``DecodeState``
+    (core.spec_decode), the cache pools in either KV layout, and the fused
+    jitted step functions;
+  * ``Engine`` (this module): construction + the run loop, preserving the
+    original public API (``submit`` / ``run`` / ``stats`` / KV accounting)
+    so existing callers and tests keep working.
 
 Design (all fixed shapes, jit-once):
-  * ONE ``DecodeState`` (core.spec_decode) holds the generation buffer,
-    per-slot (n, m, done) counters, block tables and the target + draft
-    cache handles; the decode steps are the exact jitted step functions
-    ``SpecDecoder`` uses for uniform-batch generation — no duplicated
-    AR/prefill machinery;
+  * PREFILL IS A STEP WORKLOAD, not an admission one: admission only claims
+    a slot + KV blocks and writes the prompt into the generation buffer;
+    the fused step then advances decoding rows AND consumes a bounded
+    prompt chunk for every prefilling row in the SAME forward (Sarathi-
+    style chunked prefill) — no per-request ``[1, P_bucket]`` prefill
+    forwards, no jit cache over prompt buckets, and admission never stalls
+    live decode rows;
   * KV layout is either "paged" (default; serving/kv_pool.py — fixed-size
-    blocks, per-slot block tables, free-list allocation, copy-free
-    admission, O(1) release) or "contiguous" (one full-length row per slot,
-    admission scatters the prefilled row into the pool);
-  * admission: a free slot gets a PREFILL — the request's caches are
-    computed in a [1, P_bucket] forward (prompt lengths bucketed to powers
-    of two to bound recompilation). Paged: the forward writes straight into
-    the slot's allocated blocks through its block-table row. When the pool
-    has no free blocks, requests wait in the queue (memory backpressure)
-    and admit as completions release blocks;
+    blocks, per-slot block tables, refcounted free-list allocation, O(1)
+    release) or "contiguous" (one full-length row per slot);
+  * ``prefix_cache=True`` (paged only) reuses prompt KV across requests:
+    full prompt blocks register in a content-keyed index, admission maps
+    the longest computed block-aligned prefix copy-free into the new row's
+    table (refcount + 1, target and draft keyed together) and only
+    prefills the tail; refcount-0 cached blocks are evicted LRU;
   * decode: ONE jitted speculative step advances all active slots together;
     finished slots free immediately and new requests admit on the next tick
     (continuous batching);
   * modes: "ar" (AR+ baseline), "vsd", "pard" — same engine, same pool;
-    passing ``tree=`` (a core.spec_decode.TreeTemplate, a branching list,
-    or a TemplateBank) upgrades "pard" to tree-structured drafting with
-    ancestor-mask verification (DESIGN.md §6) — allocation slack and the
-    decode step come from the same SpecDecoder, so paged KV invariants
-    are unchanged. With a TemplateBank the tree shape is PER REQUEST
-    (``submit(..., tree_idx=)`` pins one; paged rows allocate blocks for
-    their own template's window, not the bank-wide widest), and
-    ``adaptive_tree=True`` adds the EWMA acceptance-statistics controller
-    (``TreeController``) that selects each request's template at admission
-    and reshapes it between windows (DESIGN.md §7);
-  * sampling is per REQUEST: ``submit(..., temperature=)`` overrides the
-    engine default, so one batch mixes greedy (exact argmax) and sampled
-    rows — every mode including tree drafting, whose multi-round sibling
-    acceptance (core/acceptance.py) preserves the target distribution
-    exactly. Each request draws from its own (seed, rid) PRNG key, so
-    sampled output is deterministic per request across batch compositions
-    and KV layouts.
+    ``tree=`` upgrades "pard" to tree-structured drafting (DESIGN.md §6),
+    per-request via a TemplateBank, ``adaptive_tree=True`` adds the EWMA
+    controller (DESIGN.md §7);
+  * sampling is per REQUEST (``submit(..., temperature=)``), each request
+    drawing from its own (seed, rid) PRNG key — deterministic per request
+    across batch compositions and KV layouts.
 
-SSM/hybrid targets work unchanged: the spec step's collect_ssm rollback is
-per-row, SSM states stay batch-indexed in both KV layouts, and prefill
-produces the row's (conv, ssm) state like any cache (DESIGN.md §3/§5).
+SSM/hybrid targets work unchanged: chunked prefill gathers the recurrent
+state after each chunk's last real token (DESIGN.md §3), admission zeroes
+the recycled slot's state, and SSM states stay batch-indexed in both KV
+layouts.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from collections import deque
-from typing import Any, Dict, List, Optional
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from ..core import acceptance
-from ..core.spec_decode import (DecodeState, SpecDecoder, TemplateBank,
-                                prefill_row)
-from ..models import init_caches
+from ..core.spec_decode import SpecDecoder, TemplateBank
 from ..models.config import ModelConfig
 from . import kv_pool
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray          # 1-D int32
-    max_new: int
-    temperature: Optional[float] = None   # None = the engine default
-    tree_idx: Optional[int] = None        # pinned bank template (None =
-    #                                       controller / template 0)
-
-
-@dataclasses.dataclass
-class Completion:
-    rid: int
-    tokens: np.ndarray          # prompt + generated
-    generated: int
-    wall_submitted: float
-    wall_done: float
-
-
-def _bucket(n: int) -> int:
-    b = 8
-    while b < n:
-        b *= 2
-    return b
-
-
-class TreeController:
-    """Acceptance-statistics template selection (DESIGN.md §7).
-
-    Maintains, per slot and per (depth d, sibling rank c), an EWMA of the
-    indicator "depth d was evaluated this step and rank c's candidate was
-    the accepted one" — updated ONLY at steps where rank c was actually
-    OFFERED (c < the in-use template's branching at d), so the estimate is
-    the conditional accept probability P(rank c wins | depth d reached,
-    rank c offered) regardless of which template happened to be active.
-    A template's score is its expected accepted length under independence
-    across ranks: E(t) = sum_d prod_{d' <= d} min(1, sum_{c < b_d'} p[d',c]).
-
-    New requests have no history, so admission selects on a GLOBAL EWMA
-    that every retiring request folds its learned row into; per-slot rows
-    are seeded from the global one at admission and drive the between-
-    windows re-selection (``Engine._reshape_slots``).
-    """
-
-    def __init__(self, bank: TemplateBank, max_batch: int, ewma: float = 0.2):
-        self.bank = bank
-        self.ewma = ewma
-        d, mb = bank.max_depth, bank.max_branching
-        self.offer = np.zeros((len(bank), d), np.int32)   # [T, D] branching
-        for t, tpl in enumerate(bank.templates):
-            self.offer[t] = tpl.branching
-        # optimistic prior: rank 0 accepts half the time, each extra rank
-        # adds a little — wide templates stay in play until data arrives
-        prior = np.zeros((d, mb))
-        prior[:, 0] = 0.5
-        if mb > 1:
-            prior[:, 1:] = 0.15
-        self.global_p = prior.copy()
-        self.slot_p = np.tile(prior, (max_batch, 1, 1))
-
-    def seed_slot(self, slot: int) -> None:
-        self.slot_p[slot] = self.global_p
-
-    def retire_slot(self, slot: int) -> None:
-        """Fold a finished request's learned statistics into the admission
-        prior (an EWMA over requests, like the per-step one over windows)."""
-        self.global_p += 0.5 * (self.slot_p[slot] - self.global_p)
-
-    def update(self, live: np.ndarray, tree_idx: np.ndarray, a: np.ndarray,
-               rank: np.ndarray) -> None:
-        """live [B] (rows live BEFORE the step), tree_idx [B], a [B]
-        accepted depths, rank [B, D] accepted sibling rank per depth (-1
-        where the depth rejected or was never reached)."""
-        d = self.slot_p.shape[1]
-        for slot in np.nonzero(live)[0]:
-            br = self.offer[tree_idx[slot]]
-            # depths 1..a were accepted; depth a+1 was evaluated and
-            # rejected (if it exists); deeper depths carry no information
-            for dep in range(min(int(a[slot]) + 1, d)):
-                r = int(rank[slot, dep])
-                for c in range(int(br[dep])):
-                    obs = 1.0 if r == c else 0.0
-                    self.slot_p[slot, dep, c] += \
-                        self.ewma * (obs - self.slot_p[slot, dep, c])
-
-    def select(self, slot: Optional[int] = None,
-               feasible=None) -> int:
-        """Best-scoring template (per-slot stats, or the global prior for
-        admission). ``feasible``: optional iterable of permitted template
-        indices (allocation / max_len constraints)."""
-        p = self.global_p if slot is None else self.slot_p[slot]
-        cands = range(len(self.bank)) if feasible is None else list(feasible)
-        best, best_e = next(iter(cands)), -1.0
-        for t in cands:
-            surv, e = 1.0, 0.0
-            for dep in range(p.shape[0]):
-                surv *= min(1.0, float(p[dep, :self.offer[t, dep]].sum()))
-                e += surv
-            if e > best_e + 1e-9:
-                best, best_e = t, e
-        return best
+from .executor import Executor
+from .scheduler import (Completion, Request, Scheduler,  # noqa: F401
+                        TreeController)
 
 
 class Engine:
@@ -174,7 +67,9 @@ class Engine:
                  kv_layout: str = "paged", kv_block_size: int = 64,
                  kv_num_blocks: Optional[int] = None, tree=None,
                  adaptive_tree: bool = False, tree_ewma: float = 0.2,
-                 tree_reselect_every: int = 4):
+                 tree_reselect_every: int = 4, prefix_cache: bool = False,
+                 prefill_chunk: int = 8, prefill_budget: Optional[int] = None,
+                 admit_window: int = 8):
         assert mode in ("ar", "vsd", "pard")
         assert kv_layout in ("paged", "contiguous")
         assert tree is None or mode == "pard", \
@@ -186,13 +81,14 @@ class Engine:
             assert isinstance(tree, TemplateBank), \
                 "adaptive_tree selects from a TemplateBank"
         self.adaptive = adaptive_tree
-        self.tree_reselect_every = tree_reselect_every
         self.mode = mode
         self.paged = kv_layout == "paged"
+        assert not (prefix_cache and not self.paged), \
+            "prefix_cache requires the paged KV layout"
         self.k = k if mode != "ar" else 1
         if mode == "ar":
             # the AR baseline never reads draft caches: drop the draft model
-            # so admission skips its prefill and KV accounting excludes it
+            # so admission skips its KV accounting entirely
             draft_params = draft_cfg = None
         self.max_batch = max_batch
         self.max_len = max_len
@@ -202,415 +98,109 @@ class Engine:
             target_params, target_cfg, draft_params, draft_cfg, k=self.k,
             max_len=max_len, temperature=temperature,
             kv_block_size=kv_block_size if self.paged else 0,
-            tree=tree if mode == "pard" else None)
+            tree=tree if mode == "pard" else None,
+            prefill_chunk=prefill_chunk)
         self.k = self.dec.k          # a tree template overrides k (== depth)
         self.bank = self.dec.tree    # TemplateBank (or None: no tree)
-        self.ctrl = (TreeController(self.bank, max_batch, tree_ewma)
-                     if self.adaptive else None)
         self.tc, self.dc = target_cfg, draft_cfg
-        # per-request sampling keys derive from (seed, rid) at admission, so
-        # a request's sampled trajectory is independent of batch composition
-        # and KV layout (seeded determinism)
-        self._rng_base = jax.random.PRNGKey(seed)
 
-        # cache pools + unified decode state
         if self.paged:
             nb = kv_num_blocks or kv_pool.default_num_blocks(
                 max_batch, max_len, kv_block_size)
             self.alloc = kv_pool.BlockAllocator(nb, kv_block_size, max_batch,
                                                 max_len)
-            tcache = kv_pool.init_paged_caches(target_cfg, max_batch, nb,
-                                               kv_block_size)
-            dcache = (kv_pool.init_paged_caches(draft_cfg, max_batch, nb,
-                                                kv_block_size)
-                      if draft_cfg is not None else None)
-            tables = jnp.asarray(self.alloc.tables)
-            self._kv_per_block = (
-                kv_pool.kv_bytes_per_block(target_cfg, tcache, nb)
-                + (kv_pool.kv_bytes_per_block(draft_cfg, dcache, nb)
-                   if dcache is not None else 0))
         else:
+            nb = None
             self.alloc = None
-            tcache = init_caches(target_cfg, max_batch, max_len)
-            dcache = (init_caches(draft_cfg, max_batch, max_len)
-                      if draft_cfg is not None else None)
-            tables = None
-            self._kv_per_block = 0
-        self._kv_capacity = (
-            kv_pool.kv_capacity_bytes(target_cfg, tcache)
-            + (kv_pool.kv_capacity_bytes(draft_cfg, dcache)
-               if dcache is not None else 0))
+        self.ex = Executor(self.dec, target_cfg, draft_cfg, mode, max_batch,
+                           max_len, self.paged, kv_block_size, nb, seed)
+        ctrl = (TreeController(self.bank, max_batch, tree_ewma)
+                if adaptive_tree else None)
+        self.sched = Scheduler(
+            self.dec, self.ex, self.alloc, mode=mode, max_batch=max_batch,
+            max_len=max_len, temperature=temperature, eos_id=eos_id,
+            bank=self.bank, ctrl=ctrl, prefix_cache=prefix_cache,
+            admit_window=admit_window, prefill_budget=prefill_budget,
+            tree_reselect_every=tree_reselect_every)
+        self.ctrl = ctrl
         # contiguous rows are committed whole-pool up front, so their peak
         # IS the capacity — consumers read this field for either layout
-        self.peak_kv_bytes_in_use = 0 if self.paged else self._kv_capacity
-
-        self.state = DecodeState(
-            gen=jnp.zeros((max_batch, max_len), jnp.int32),
-            n=jnp.ones((max_batch,), jnp.int32) * 2,   # dummy-safe
-            m=jnp.ones((max_batch,), jnp.int32),
-            done=jnp.ones((max_batch,), bool),         # empty slots = done
-            tcache=tcache, dcache=dcache, tables=tables,
-            temp=jnp.zeros((max_batch,), jnp.float32),
-            rngs=acceptance.make_row_keys(seed, np.arange(max_batch)),
-            tree_idx=(jnp.zeros((max_batch,), jnp.int32)
-                      if self.bank is not None else None))
-        self._tables_version = self.alloc.version if self.paged else 0
-
-        # host state
-        self.slots: List[Optional[Request]] = [None] * max_batch
-        self.slot_limit = np.zeros(max_batch, np.int64)
-        self.slot_submit_t = np.zeros(max_batch)
-        # host shadows of per-slot tree state: the active template index
-        # and the step count since admission (re-selection cadence)
-        self.slot_tree = np.zeros(max_batch, np.int32)
-        self.slot_steps = np.zeros(max_batch, np.int64)
-        self.queue: deque[Request] = deque()
-        self.completions: List[Completion] = []
-        self._next_rid = 0
-        self._spec_step = None
-        self._ar_step = None
-        self._prefill_cache: Dict[Any, Any] = {}
-        self.stats = dict(steps=0, committed=0, accepted=0, live_steps=0,
-                          draft_forwards=0, target_forwards=0,
-                          round_hist=None)
-        if self.bank is not None:
-            # live-steps decoded under each template + controller switches
-            self.stats["tree_hist"] = np.zeros(len(self.bank), np.int64)
-            self.stats["tree_switches"] = 0
+        self.peak_kv_bytes_in_use = 0 if self.paged else self.ex.kv_capacity
 
     # ------------------------------------------------------------- public
     def submit(self, prompt, max_new: int,
                temperature: Optional[float] = None,
                tree_idx: Optional[int] = None) -> int:
-        """Queue a request. ``temperature`` overrides the engine default for
-        this request only (0 = greedy) — one batch mixes greedy and sampled
-        rows, each sampling under its own (seed, rid)-derived key.
-        ``tree_idx`` pins the request to one bank template (tree engines);
-        left None, the adaptive controller (or template 0) decides at
-        admission and may reshape the request between windows.
+        """Queue a request. ``temperature`` overrides the engine default
+        for this request only (0 = greedy); ``tree_idx`` pins one bank
+        template (tree engines). Validation happens here, with the
+        request's OWN window slack in the paged layout — see
+        Scheduler.submit."""
+        return self.sched.submit(prompt, max_new, temperature, tree_idx)
 
-        In the paged layout the max_len feasibility check uses the
-        request's own window slack: a pinned template's slack exactly,
-        otherwise the smallest slack any bank template needs — admission
-        and re-selection then only ever consider templates that actually
-        fit, and rows allocate blocks for their OWN template rather than
-        the bank-wide widest. Contiguous rows are written batch-wide (the
-        widest window), so there the bank-wide slack is always required."""
-        prompt = np.asarray(prompt, np.int32)
-        if tree_idx is not None and (
-                self.bank is None or not 0 <= tree_idx < len(self.bank)):
-            raise ValueError(
-                f"tree_idx={tree_idx} needs a TemplateBank with more "
-                f"than {tree_idx} templates")
-        if not self.paged or self.bank is None:
-            # contiguous rows are written batch-wide (the widest window,
-            # clamped dynamic_update_slice would corrupt committed KV past
-            # max_len), so the bank-wide slack is the real requirement
-            # whatever template the request pins
-            slack = self.dec.window_slack
-        elif tree_idx is not None:
-            slack = self.dec.row_slack(tree_idx)
-        else:
-            slack = self.dec.min_row_slack
-        need = len(prompt) + max_new + slack
-        if len(prompt) < 2 or need > self.max_len:
-            # a raised error, not an assert: past this point an oversized
-            # request would outgrow its cache rows/blocks and silently
-            # attend garbage
-            raise ValueError(
-                f"request needs {need} cache positions (prompt="
-                f"{len(prompt)}, max_new={max_new}, window slack="
-                f"{slack}) but max_len={self.max_len}; "
-                f"prompts also need >= 2 tokens")
-        rid = self._next_rid
-        self._next_rid += 1
-        self.queue.append(Request(rid, prompt, max_new, temperature,
-                                  tree_idx))
-        return rid
-
-    def run(self, max_steps: int = 100000) -> List[Completion]:
-        while (self.queue or any(s is not None for s in self.slots)) \
-                and self.stats["steps"] < max_steps:
-            self._admit()
-            if self.queue and all(s is None for s in self.slots):
-                # every slot (hence every block) is free and the head of the
-                # queue STILL could not admit: it can never fit — fail loudly
-                # instead of spinning on backpressure forever
-                req = self.queue[0]
+    def run(self, max_steps: int = 100000):
+        sched, ex = self.sched, self.ex
+        while sched.has_work() and sched.stats["steps"] < max_steps:
+            admitted = sched.admit()
+            if sched.queue and not admitted \
+                    and all(s is None for s in sched.slots):
+                # every slot (hence every block) is free and NOTHING in the
+                # admission window could admit: the head can never fit —
+                # fail loudly instead of spinning on backpressure forever
+                req = sched.queue[0]
                 raise RuntimeError(
                     f"request {req.rid} (prompt={len(req.prompt)}, "
                     f"max_new={req.max_new}) needs more KV blocks than the "
                     f"pool holds; raise kv_num_blocks or max_len")
-            self._step()
-            self._harvest()
-        return self.completions
+            ex.sync_tables(self.alloc)
+            if self.paged:
+                self.peak_kv_bytes_in_use = max(self.peak_kv_bytes_in_use,
+                                                self.kv_bytes_in_use())
+            if any(s is not None for s in sched.slots):
+                a, rank, rhist, n_draft = ex.step(
+                    sched.prefilling_count() > 0)
+                sched.note_step(a, rank, rhist, n_draft)
+            sched.harvest()
+        return sched.completions
+
+    def mean_accepted(self) -> float:
+        return self.sched.mean_accepted()
+
+    def prefix_hit_rate(self) -> float:
+        return self.sched.prefix_hit_rate()
+
+    def latency_summary(self):
+        return self.sched.latency_summary()
 
     def kv_capacity_bytes(self) -> int:
         """HBM resident for the attention KV cache (target + draft)."""
-        return self._kv_capacity
+        return self.ex.kv_capacity
 
     def kv_bytes_in_use(self) -> int:
         """KV bytes backing live requests. Contiguous rows are committed
-        whole-pool up front; paged usage scales with actual allocation."""
+        whole-pool up front; paged usage counts each UNIQUE mapped block
+        once (prefix-shared blocks are the point of sharing)."""
         if not self.paged:
-            return self._kv_capacity
-        return self.alloc.blocks_in_use * self._kv_per_block
+            return self.ex.kv_capacity
+        return self.alloc.blocks_in_use * self.ex.kv_per_block
 
-    # ------------------------------------------------------------ internals
-    def _sync_tables(self):
-        """Push the host block tables to the device state when stale. This
-        runs before any forward that could consume them, so released rows'
-        stale writes always route to the garbage block (kv_pool I4)."""
-        if self.paged and self._tables_version != self.alloc.version:
-            self.state = dataclasses.replace(
-                self.state, tables=jnp.asarray(self.alloc.tables))
-            self._tables_version = self.alloc.version
+    # --------------------------------------------------- facade accessors
+    @property
+    def state(self):
+        return self.ex.state
 
-    def _prefill_fns(self, p_bucket: int):
-        key = p_bucket
-        if key in self._prefill_cache:
-            return self._prefill_cache[key]
-        paged = self.paged
-        bs = self.dec.kv_block_size
+    @property
+    def stats(self):
+        return self.sched.stats
 
-        def one(params, cfg, slot, toks, plen, pool, tables):
-            if paged:
-                row_t = jax.lax.dynamic_index_in_dim(tables, slot, 0,
-                                                     keepdims=True)
-                cin = kv_pool.prefill_cache_view(cfg, pool, True)
-            else:
-                row_t = None
-                cin = init_caches(cfg, 1, self.max_len)
-            row = prefill_row(params, cfg, toks, plen, cin, tables=row_t,
-                              block_size=bs)
-            return kv_pool.scatter_row_caches(cfg, pool, row, slot, paged)
+    @property
+    def queue(self):
+        return self.sched.queue
 
-        def prefill(tp, dp, slot, toks, plen, tcache, dcache, tables):
-            # single-row prefill; tokens right-padded to the bucket. Padded
-            # tail KV lands at positions >= plen — never valid (kv_len
-            # bookkeeping) — and SSM state is rolled back (DESIGN.md §3).
-            tcache = one(tp, self.tc, slot, toks, plen, tcache, tables)
-            if self.dc is not None:
-                dcache = one(dp, self.dc, slot, toks, plen, dcache, tables)
-            return tcache, dcache
+    @property
+    def slots(self):
+        return self.sched.slots
 
-        fn = jax.jit(prefill, donate_argnums=(5, 6))
-        self._prefill_cache[key] = fn
-        return fn
-
-    def _feasible_templates(self, req: Request) -> List[int]:
-        """Bank templates whose window slack fits ``req`` inside max_len.
-        Never empty: submit() validated the smallest slack (paged) or the
-        bank-wide one (contiguous, where every template fits by then)."""
-        budget = self.max_len - len(req.prompt) - req.max_new
-        return [t for t in range(len(self.bank))
-                if self.dec.row_slack(t) <= budget]
-
-    def _pick_template(self, req: Request) -> int:
-        """Admission-time template choice: the request's pinned index, the
-        adaptive controller's global-prior pick over templates that fit the
-        request in max_len, or template 0."""
-        if self.bank is None:
-            return 0
-        if req.tree_idx is not None:
-            return req.tree_idx
-        feasible = self._feasible_templates(req)
-        if self.ctrl is None:
-            return 0 if 0 in feasible else feasible[0]
-        return self.ctrl.select(feasible=feasible)
-
-    def _admit(self):
-        # phase 1 (host): claim slots and, in paged mode, KV blocks sized
-        # for the request's OWN template (per-request window slack). When
-        # the pool is exhausted the queue waits — completions release blocks
-        pending = []
-        for slot in range(self.max_batch):
-            if self.slots[slot] is not None or not self.queue:
-                continue
-            req = self.queue[0]
-            p = len(req.prompt)
-            tmpl = self._pick_template(req)
-            # validated at submit(); covers draft + verify windows (I3) —
-            # for the row's own template; the batch's wider window writes
-            # route to the garbage block and are never read
-            slack = self.dec.row_slack(tmpl) if self.bank is not None \
-                else self.dec.window_slack
-            need = p + req.max_new + slack
-            if self.paged:
-                if not self.alloc.can_allocate(self.alloc.blocks_needed(need)) \
-                        and self.bank is not None and req.tree_idx is None:
-                    # the controller's pick outgrows the pool: serve the
-                    # request on the narrowest feasible template instead of
-                    # head-of-line blocking (reshaping can widen it later
-                    # as completions free blocks); pinned requests keep
-                    # their shape and wait
-                    tmpl = min(self._feasible_templates(req),
-                               key=self.dec.row_slack)
-                    need = p + req.max_new + self.dec.row_slack(tmpl)
-                nb = self.alloc.blocks_needed(need)
-                if not self.alloc.can_allocate(nb):
-                    break                      # memory backpressure
-                self.alloc.allocate(slot, need)
-            self.queue.popleft()
-            self.slots[slot] = req
-            self.slot_limit[slot] = p + req.max_new
-            self.slot_submit_t[slot] = time.perf_counter()
-            self.slot_tree[slot] = tmpl
-            self.slot_steps[slot] = 0
-            if self.ctrl is not None:
-                self.ctrl.seed_slot(slot)
-            pending.append((slot, req))
-        if not pending:
-            return
-        self._sync_tables()
-        if self.paged:
-            self.peak_kv_bytes_in_use = max(self.peak_kv_bytes_in_use,
-                                            self.kv_bytes_in_use())
-
-        # phase 2 (device): per-request prefill — paged admission writes
-        # directly into the slot's blocks (no full-pool row scatter)
-        for slot, req in pending:
-            p = len(req.prompt)
-            bucket = _bucket(p - 1)
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, :p - 1] = req.prompt[:-1]
-            fn = self._prefill_fns(bucket)
-            st = self.state
-            tcache, dcache = fn(self.dec.tp, self.dec.dp, slot,
-                                jnp.asarray(toks), p - 1, st.tcache,
-                                st.dcache, st.tables)
-            gen_row = np.zeros((self.max_len,), np.int32)
-            gen_row[:p] = req.prompt
-            t = self.temperature if req.temperature is None \
-                else req.temperature
-            self.state = dataclasses.replace(
-                st,
-                gen=st.gen.at[slot].set(jnp.asarray(gen_row)),
-                n=st.n.at[slot].set(p),
-                m=st.m.at[slot].set(p - 1),
-                done=st.done.at[slot].set(False),
-                temp=st.temp.at[slot].set(float(t)),
-                rngs=st.rngs.at[slot].set(
-                    jax.random.fold_in(self._rng_base, req.rid)),
-                tree_idx=(st.tree_idx if st.tree_idx is None else
-                          st.tree_idx.at[slot].set(
-                              int(self.slot_tree[slot]))),
-                tcache=tcache, dcache=dcache)
-
-    def _step(self):
-        if bool(jnp.all(self.state.done)):
-            return
-        self._sync_tables()
-        if self.mode == "ar":
-            self._step_ar()
-        else:
-            self._step_spec()
-        self.stats["steps"] += 1
-
-    def _step_spec(self):
-        if self._spec_step is None:
-            if self.dec.tree is not None:
-                builder = self.dec._build_tree_step()
-            else:
-                builder = self.dec._build_spec_step(
-                    "pard" if self.mode == "pard" else "vsd")
-            self._spec_step = jax.jit(builder, donate_argnums=(0,))
-        live_mask = ~np.asarray(jax.device_get(self.state.done))
-        live = int(live_mask.sum())
-        self.state, a, hist, rhist, rank, n_draft = \
-            self._spec_step(self.state)
-        self.stats["draft_forwards"] += int(n_draft)
-        self.stats["target_forwards"] += 1
-        self.stats["accepted"] += int(jnp.sum(a))
-        self.stats["live_steps"] += live
-        rh = np.asarray(jax.device_get(rhist))
-        self.stats["round_hist"] = rh if self.stats["round_hist"] is None \
-            else self.stats["round_hist"] + rh
-        self.stats["committed"] += int(jnp.sum(a) +
-                                       jnp.sum(~self.state.done))
-        if self.bank is not None:
-            np.add.at(self.stats["tree_hist"], self.slot_tree[live_mask], 1)
-            self.slot_steps[live_mask] += 1
-        if self.ctrl is not None and live:
-            self.ctrl.update(live_mask, self.slot_tree,
-                             np.asarray(jax.device_get(a)),
-                             np.asarray(jax.device_get(rank)))
-            self._reshape_slots(live_mask)
-
-    def _reshape_slots(self, live_mask) -> None:
-        """Between-windows template re-selection (the adaptive controller).
-        Every ``tree_reselect_every`` live steps a slot re-scores the bank
-        under its own EWMA statistics and switches when a different
-        template wins AND the slot can hold it: within max_len, and — paged
-        — growable in place (``BlockAllocator.grow``; when the pool is too
-        tight the slot just keeps its current shape). Greedy losslessness
-        is shape-independent, so reshaping mid-request never changes
-        committed tokens' correctness, only how many arrive per step."""
-        for slot in np.nonzero(live_mask)[0]:
-            req = self.slots[slot]
-            if req is None or req.tree_idx is not None:
-                continue            # pinned requests keep their shape
-            if self.slot_steps[slot] % self.tree_reselect_every:
-                continue
-            best = self.ctrl.select(slot=int(slot),
-                                    feasible=self._feasible_templates(req))
-            if best == int(self.slot_tree[slot]):
-                continue
-            need = len(req.prompt) + req.max_new + self.dec.row_slack(best)
-            if self.paged and not self.alloc.grow(int(slot), need):
-                continue            # pool too tight: keep the old shape
-            self.slot_tree[slot] = best
-            self.state = dataclasses.replace(
-                self.state,
-                tree_idx=self.state.tree_idx.at[int(slot)].set(int(best)))
-            self.stats["tree_switches"] += 1
-
-    def mean_accepted(self) -> float:
-        """Mean committed tokens per live row per verify step (a + 1) —
-        the tree/flat drafting quality metric gated in CI."""
-        if not self.stats["live_steps"]:
-            return 0.0
-        return 1.0 + self.stats["accepted"] / self.stats["live_steps"]
-
-    def _step_ar(self):
-        if self._ar_step is None:
-            self._ar_step = jax.jit(self.dec._build_ar_step(),
-                                    donate_argnums=(0,))
-        self.state = self._ar_step(self.state)
-        self.stats["target_forwards"] += 1
-        self.stats["committed"] += int(jnp.sum(~self.state.done))
-
-    def _harvest(self):
-        n_host = np.asarray(jax.device_get(self.state.n))
-        gen_host = None
-        for slot, req in enumerate(self.slots):
-            if req is None:
-                continue
-            limit = self.slot_limit[slot]
-            hit_eos = False
-            if self.eos_id is not None:
-                if gen_host is None:
-                    gen_host = np.asarray(jax.device_get(self.state.gen))
-                row = gen_host[slot, len(req.prompt):n_host[slot]]
-                hit_eos = self.eos_id in row.tolist()
-            if n_host[slot] >= limit or hit_eos:
-                if gen_host is None:
-                    gen_host = np.asarray(jax.device_get(self.state.gen))
-                end = min(n_host[slot], limit)
-                toks = gen_host[slot, :end].copy()
-                self.completions.append(Completion(
-                    rid=req.rid, tokens=toks,
-                    generated=int(end - len(req.prompt)),
-                    wall_submitted=self.slot_submit_t[slot],
-                    wall_done=time.perf_counter()))
-                self.slots[slot] = None
-                # temp resets with the slot: a retired sampled request must
-                # not keep forcing later all-greedy batches onto the
-                # sampled lax.cond branch (jnp.any(temp > 0))
-                self.state = dataclasses.replace(
-                    self.state, done=self.state.done.at[slot].set(True),
-                    temp=self.state.temp.at[slot].set(0.0))
-                if self.ctrl is not None:
-                    self.ctrl.retire_slot(slot)
-                if self.paged:
-                    self.alloc.release(slot)   # O(1); blocks reusable at once
+    @property
+    def completions(self):
+        return self.sched.completions

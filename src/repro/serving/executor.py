@@ -1,0 +1,235 @@
+"""Device-side half of the serving stack (DESIGN.md §8).
+
+The ``Executor`` owns everything that lives on the accelerator: the cache
+pools (paged or contiguous), the single ``DecodeState`` pytree, and the
+jitted step functions — built from the SAME ``SpecDecoder`` step builders
+the uniform-batch ``generate_*`` paths use, but with ``chunked=True`` so
+every step advances decoding rows AND consumes prompt chunks for
+prefilling rows in one fused forward (no standalone prefill forwards, no
+admission stall).
+
+The host-side ``serving.scheduler.Scheduler`` decides WHO runs (queues,
+admission, block allocation, template selection, latency accounting); the
+executor only moves the device state: row admission writes the prompt into
+``gen`` and arms the prefill cursor, retirement freezes the row, and
+``sync_tables`` pushes the allocator's host block tables whenever they
+change so released rows' stale writes route to the garbage block
+(kv_pool I4). ``serving.engine.Engine`` wires the two together and keeps
+the public API.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import acceptance
+from ..core.spec_decode import DecodeState, SpecDecoder
+from ..models import init_caches
+from ..models.config import SSM, ModelConfig, scan_plan
+from . import kv_pool
+
+
+def _zero_ssm_rows(cfg: ModelConfig, cache, slot: int):
+    """Reset one batch row's SSM/conv states to the init state (zeros).
+
+    Chunked prefill reuses slots in place — there is no per-request prefill
+    forward whose fresh one-row state gets scattered in — so a recycled
+    slot's recurrent state must be cleared before its first chunk
+    (attention KV needs nothing: validity is ``kv_index < kv_len``)."""
+    plan = scan_plan(cfg)
+
+    def zero(entry, scanned):
+        def one(leaf):
+            if scanned:                      # [R, B, ...]
+                return leaf.at[:, slot].set(0)
+            return leaf.at[slot].set(0)      # [B, ...]
+        return jax.tree.map(one, entry)
+
+    return {
+        "prefix": [zero(e, False) if s.mixer == SSM else e
+                   for s, e in zip(plan.prefix, cache["prefix"])],
+        "scan": [zero(e, True) if s.mixer == SSM else e
+                 for s, e in zip(plan.period, cache["scan"])],
+    }
+
+
+def _copy_block(cfg: ModelConfig, cache, src: int, dst: int):
+    """Copy one pool block's KV ``src -> dst`` across all attention leaves
+    (copy-on-write: the caller just remapped a shared block)."""
+    plan = scan_plan(cfg)
+
+    def cp(entry, scanned):
+        def one(leaf):
+            if scanned:                      # [R, NB, bs, ...]
+                return leaf.at[:, dst].set(leaf[:, src])
+            return leaf.at[dst].set(leaf[src])
+        return jax.tree.map(one, entry)
+
+    return {
+        "prefix": [cp(e, False) if s.mixer in kv_pool.ATTN_MIXERS else e
+                   for s, e in zip(plan.prefix, cache["prefix"])],
+        "scan": [cp(e, True) if s.mixer in kv_pool.ATTN_MIXERS else e
+                 for s, e in zip(plan.period, cache["scan"])],
+    }
+
+
+class Executor:
+    """Owns the DecodeState + cache pools and runs the fused jitted steps."""
+
+    def __init__(self, dec: SpecDecoder, target_cfg: ModelConfig,
+                 draft_cfg: Optional[ModelConfig], mode: str, max_batch: int,
+                 max_len: int, paged: bool, kv_block_size: int,
+                 num_blocks: Optional[int], seed: int):
+        self.dec = dec
+        self.mode = mode
+        self.tc, self.dc = target_cfg, draft_cfg
+        self.max_batch, self.max_len = max_batch, max_len
+        self.paged = paged
+        self._rng_base = jax.random.PRNGKey(seed)
+        self._step_fns = {}
+        self._tables_version = -1
+
+        if paged:
+            tcache = kv_pool.init_paged_caches(target_cfg, max_batch,
+                                               num_blocks, kv_block_size)
+            dcache = (kv_pool.init_paged_caches(draft_cfg, max_batch,
+                                                num_blocks, kv_block_size)
+                      if draft_cfg is not None else None)
+            tables = jnp.zeros((max_batch, kv_pool.blocks_for(
+                max_len, kv_block_size)), jnp.int32)
+            self.kv_per_block = (
+                kv_pool.kv_bytes_per_block(target_cfg, tcache, num_blocks)
+                + (kv_pool.kv_bytes_per_block(draft_cfg, dcache, num_blocks)
+                   if dcache is not None else 0))
+        else:
+            tcache = init_caches(target_cfg, max_batch, max_len)
+            dcache = (init_caches(draft_cfg, max_batch, max_len)
+                      if draft_cfg is not None else None)
+            tables = None
+            self.kv_per_block = 0
+        self.kv_capacity = (
+            kv_pool.kv_capacity_bytes(target_cfg, tcache)
+            + (kv_pool.kv_capacity_bytes(draft_cfg, dcache)
+               if dcache is not None else 0))
+
+        self.state = DecodeState(
+            gen=jnp.zeros((max_batch, max_len), jnp.int32),
+            n=jnp.ones((max_batch,), jnp.int32) * 2,   # dummy-safe
+            m=jnp.ones((max_batch,), jnp.int32),
+            done=jnp.ones((max_batch,), bool),         # empty slots = done
+            tcache=tcache, dcache=dcache, tables=tables,
+            temp=jnp.zeros((max_batch,), jnp.float32),
+            rngs=acceptance.make_row_keys(seed, np.arange(max_batch)),
+            tree_idx=(jnp.zeros((max_batch,), jnp.int32)
+                      if dec.tree is not None else None),
+            pf_pos=jnp.zeros((max_batch,), jnp.int32),
+            pf_len=jnp.zeros((max_batch,), jnp.int32))
+
+    # ------------------------------------------------------------- tables
+    def sync_tables(self, alloc: Optional[kv_pool.BlockAllocator]) -> None:
+        """Push the host block tables to the device state when stale. Runs
+        before any forward that could consume them, so released rows' stale
+        writes always route to the garbage block (kv_pool I4)."""
+        if alloc is not None and self._tables_version != alloc.version:
+            self.state = dataclasses.replace(
+                self.state, tables=jnp.asarray(alloc.tables))
+            self._tables_version = alloc.version
+
+    # ---------------------------------------------------------- row admin
+    def admit_row(self, slot: int, prompt: np.ndarray, temperature: float,
+                  rid: int, tree_idx: int, pf_start: int) -> None:
+        """Arm ``slot`` for a new request: prompt into ``gen``, counters to
+        the committed state, prefill cursor at ``pf_start`` (``> 0`` when a
+        cached prefix already covers the leading blocks). NO device forward
+        happens here — the fused steps prefill chunk by chunk."""
+        p = len(prompt)
+        st = self.state
+        gen_row = np.zeros((self.max_len,), np.int32)
+        gen_row[:p] = prompt
+        self.state = dataclasses.replace(
+            st,
+            gen=st.gen.at[slot].set(jnp.asarray(gen_row)),
+            n=st.n.at[slot].set(p),
+            m=st.m.at[slot].set(p - 1),
+            done=st.done.at[slot].set(False),
+            temp=st.temp.at[slot].set(float(temperature)),
+            rngs=st.rngs.at[slot].set(
+                jax.random.fold_in(self._rng_base, rid)),
+            tree_idx=(st.tree_idx if st.tree_idx is None else
+                      st.tree_idx.at[slot].set(int(tree_idx))),
+            pf_pos=st.pf_pos.at[slot].set(int(pf_start)),
+            pf_len=st.pf_len.at[slot].set(p - 1),
+            tcache=_zero_ssm_rows(self.tc, st.tcache, slot),
+            dcache=(None if st.dcache is None else
+                    _zero_ssm_rows(self.dc, st.dcache, slot)))
+
+    def retire_row(self, slot: int) -> None:
+        # temp resets with the slot: a retired sampled request must not
+        # keep forcing later all-greedy batches onto the sampled lax.cond
+        # branch (jnp.any(temp > 0))
+        self.state = dataclasses.replace(
+            self.state, done=self.state.done.at[slot].set(True),
+            temp=self.state.temp.at[slot].set(0.0))
+
+    def set_tree_idx(self, slot: int, tree_idx: int) -> None:
+        self.state = dataclasses.replace(
+            self.state,
+            tree_idx=self.state.tree_idx.at[slot].set(int(tree_idx)))
+
+    def copy_block(self, src: int, dst: int) -> None:
+        """Device half of allocator.copy_on_write: duplicate one block's KV
+        in every pool (target + draft share block indices)."""
+        st = self.state
+        self.state = dataclasses.replace(
+            st, tcache=_copy_block(self.tc, st.tcache, src, dst),
+            dcache=(None if st.dcache is None else
+                    _copy_block(self.dc, st.dcache, src, dst)))
+
+    # -------------------------------------------------------------- steps
+    def _build(self, variant: str):
+        if self.mode == "ar":
+            # two compiled variants: the 1-wide pure-decode window (the
+            # AR+ hot path — pad slots would cost real attention compute
+            # every step) and the prefill_chunk-wide mixed window, selected
+            # per tick by whether any row is actually prefilling
+            builder = self.dec._build_ar_step(chunked=variant == "mixed")
+
+            def step(state):
+                return builder(state), None, None, None, None, 0
+            return step
+        # spec/tree windows already fit the chunk (same shapes either way:
+        # the chunk substitution is a few jnp.where selects), so one
+        # compiled step serves both pure-decode and mixed ticks
+        if self.dec.tree is not None:
+            return self.dec._build_tree_step(chunked=True)
+        return self.dec._build_spec_step(
+            "pard" if self.mode == "pard" else "vsd", chunked=True)
+
+    def step(self, any_prefilling: bool = True):
+        """One fused prefill+decode step. Returns host copies of the
+        per-row accepted depths / sibling ranks (None for mode="ar") and
+        the draft-forward count. ``any_prefilling``: host hint (the
+        scheduler's cursor mirrors) selecting the AR window variant."""
+        variant = "mixed" if (any_prefilling and self.mode == "ar") \
+            else "decode"
+        if variant not in self._step_fns:
+            self._step_fns[variant] = jax.jit(self._build(variant),
+                                              donate_argnums=(0,))
+        self.state, a, _hist, rhist, rank, n_draft = \
+            self._step_fns[variant](self.state)
+        if a is None:
+            return None, None, None, 0
+        return (np.asarray(jax.device_get(a)),
+                np.asarray(jax.device_get(rank)),
+                np.asarray(jax.device_get(rhist)), int(n_draft))
+
+    # --------------------------------------------------------------- host
+    def read_n(self) -> np.ndarray:
+        return np.asarray(jax.device_get(self.state.n))
+
+    def read_gen(self) -> np.ndarray:
+        return np.asarray(jax.device_get(self.state.gen))

@@ -1,0 +1,527 @@
+"""Host-side half of the serving stack (DESIGN.md §8).
+
+The ``Scheduler`` owns every decision that does NOT touch the device:
+
+  * request queue + FIFO-fair skip-ahead admission: a bounded prefix of the
+    queue (``admit_window``) is scanned per free slot, so one pool-oversized
+    request cannot starve smaller ones behind it while blocks are free —
+    the head admits the moment its resources exist, and nothing beyond the
+    window may overtake it;
+  * chunked-prefill budgeting: admission caps CONCURRENT prefilling rows at
+    ``prefill_budget // chunk_width`` lanes so a burst of long prompts
+    cannot crowd decode compute out of the fused steps (None = no throttle;
+    full-prefix cache hits consume no lane);
+  * prefix-cache admission: the longest computed block-aligned prefix of
+    the new prompt is mapped copy-free from ``kv_pool.BlockAllocator``'s
+    hash index, and only the uncovered tail is prefilled (the prefill
+    cursor starts past the hit);
+  * per-request latency accounting: queue wait, TTFT, and per-token
+    inter-commit latency percentiles, recorded on every ``Completion`` and
+    summarised by ``latency_summary``;
+  * the adaptive tree-template controller (``TreeController``) and the
+    between-windows reshaping cadence.
+
+Device work (cache pools, jitted fused steps, row state) lives in
+``serving.executor.Executor``; ``serving.engine.Engine`` is the thin
+facade wiring the two together.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core.spec_decode import SpecDecoder, TemplateBank
+from . import kv_pool
+from .executor import Executor
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # 1-D int32
+    max_new: int
+    temperature: Optional[float] = None   # None = the engine default
+    tree_idx: Optional[int] = None        # pinned bank template (None =
+    #                                       controller / template 0)
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray          # prompt + generated
+    generated: int
+    wall_submitted: float
+    wall_done: float
+    queue_wait: float = 0.0     # submit -> admission
+    ttft: float = 0.0           # submit -> first generated token committed
+    tok_p50: float = 0.0        # per-token inter-commit latency percentiles
+    tok_p95: float = 0.0
+
+
+def _weighted_percentile(samples: List, q: float) -> float:
+    """Percentile over (value, weight) pairs — weights are token counts, so
+    a step that committed 3 tokens contributes its per-token latency x3."""
+    if not samples:
+        return 0.0
+    vals = np.repeat([v for v, _ in samples], [c for _, c in samples])
+    return float(np.percentile(vals, q))
+
+
+class TreeController:
+    """Acceptance-statistics template selection (DESIGN.md §7).
+
+    Maintains, per slot and per (depth d, sibling rank c), an EWMA of the
+    indicator "depth d was evaluated this step and rank c's candidate was
+    the accepted one" — updated ONLY at steps where rank c was actually
+    OFFERED (c < the in-use template's branching at d), so the estimate is
+    the conditional accept probability P(rank c wins | depth d reached,
+    rank c offered) regardless of which template happened to be active.
+    A template's score is its expected accepted length under independence
+    across ranks: E(t) = sum_d prod_{d' <= d} min(1, sum_{c < b_d'} p[d',c]).
+
+    New requests have no history, so admission selects on a GLOBAL EWMA
+    that every retiring request folds its learned row into; per-slot rows
+    are seeded from the global one at admission and drive the between-
+    windows re-selection (``Scheduler._reshape_slots``).
+    """
+
+    def __init__(self, bank: TemplateBank, max_batch: int, ewma: float = 0.2):
+        self.bank = bank
+        self.ewma = ewma
+        d, mb = bank.max_depth, bank.max_branching
+        self.offer = np.zeros((len(bank), d), np.int32)   # [T, D] branching
+        for t, tpl in enumerate(bank.templates):
+            self.offer[t] = tpl.branching
+        # optimistic prior: rank 0 accepts half the time, each extra rank
+        # adds a little — wide templates stay in play until data arrives
+        prior = np.zeros((d, mb))
+        prior[:, 0] = 0.5
+        if mb > 1:
+            prior[:, 1:] = 0.15
+        self.global_p = prior.copy()
+        self.slot_p = np.tile(prior, (max_batch, 1, 1))
+
+    def seed_slot(self, slot: int) -> None:
+        self.slot_p[slot] = self.global_p
+
+    def retire_slot(self, slot: int) -> None:
+        """Fold a finished request's learned statistics into the admission
+        prior (an EWMA over requests, like the per-step one over windows)."""
+        self.global_p += 0.5 * (self.slot_p[slot] - self.global_p)
+
+    def update(self, live: np.ndarray, tree_idx: np.ndarray, a: np.ndarray,
+               rank: np.ndarray) -> None:
+        """live [B] (rows decoding BEFORE the step), tree_idx [B], a [B]
+        accepted depths, rank [B, D] accepted sibling rank per depth (-1
+        where the depth rejected or was never reached)."""
+        d = self.slot_p.shape[1]
+        for slot in np.nonzero(live)[0]:
+            br = self.offer[tree_idx[slot]]
+            # depths 1..a were accepted; depth a+1 was evaluated and
+            # rejected (if it exists); deeper depths carry no information
+            for dep in range(min(int(a[slot]) + 1, d)):
+                r = int(rank[slot, dep])
+                for c in range(int(br[dep])):
+                    obs = 1.0 if r == c else 0.0
+                    self.slot_p[slot, dep, c] += \
+                        self.ewma * (obs - self.slot_p[slot, dep, c])
+
+    def select(self, slot: Optional[int] = None,
+               feasible=None) -> int:
+        """Best-scoring template (per-slot stats, or the global prior for
+        admission). ``feasible``: optional iterable of permitted template
+        indices (allocation / max_len constraints)."""
+        p = self.global_p if slot is None else self.slot_p[slot]
+        cands = range(len(self.bank)) if feasible is None else list(feasible)
+        best, best_e = next(iter(cands)), -1.0
+        for t in cands:
+            surv, e = 1.0, 0.0
+            for dep in range(p.shape[0]):
+                surv *= min(1.0, float(p[dep, :self.offer[t, dep]].sum()))
+                e += surv
+            if e > best_e + 1e-9:
+                best, best_e = t, e
+        return best
+
+
+class Scheduler:
+    """Queues, admission and accounting over one Executor (see module
+    docstring). The Engine drives ``admit() -> Executor.step() ->
+    note_step() -> harvest()`` once per tick."""
+
+    def __init__(self, dec: SpecDecoder, executor: Executor,
+                 alloc: Optional[kv_pool.BlockAllocator], *, mode: str,
+                 max_batch: int, max_len: int, temperature: float,
+                 eos_id: Optional[int], bank: Optional[TemplateBank],
+                 ctrl: Optional[TreeController], prefix_cache: bool,
+                 admit_window: int, prefill_budget: Optional[int],
+                 tree_reselect_every: int):
+        self.dec, self.ex, self.alloc = dec, executor, alloc
+        self.mode = mode
+        self.paged = alloc is not None
+        self.max_batch, self.max_len = max_batch, max_len
+        self.temperature = temperature
+        self.eos_id = eos_id
+        self.bank, self.ctrl = bank, ctrl
+        self.prefix_cache = prefix_cache
+        self.admit_window = admit_window
+        self.tree_reselect_every = tree_reselect_every
+        self.chunk = dec.chunk_width
+        # token budget per step for prompt chunks -> concurrent lanes
+        self.prefill_lanes = (None if prefill_budget is None
+                              else max(1, prefill_budget // self.chunk))
+
+        self.queue: deque[Request] = deque()
+        self.completions: List[Completion] = []
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.slot_limit = np.zeros(max_batch, np.int64)
+        self.slot_tree = np.zeros(max_batch, np.int32)
+        self.slot_steps = np.zeros(max_batch, np.int64)
+        # host mirrors of the device prefill cursor (advanced in lockstep)
+        self.slot_pf = np.zeros(max_batch, np.int64)
+        self.slot_pf_len = np.zeros(max_batch, np.int64)
+        # latency accounting
+        self.slot_submit_t = np.zeros(max_batch)
+        self.slot_admit_t = np.zeros(max_batch)
+        self.slot_first_t = np.full(max_batch, np.nan)
+        self.slot_last_t = np.zeros(max_batch)
+        self.slot_last_n = np.zeros(max_batch, np.int64)
+        self.slot_samples: List[List] = [[] for _ in range(max_batch)]
+
+        self._next_rid = 0
+        self._submit_t_of: Dict[int, float] = {}   # rid -> submit wall time
+        self.stats: Dict = dict(
+            steps=0, committed=0, accepted=0, live_steps=0,
+            draft_forwards=0, target_forwards=0, round_hist=None,
+            prefill_chunks=0, prefill_tokens=0,
+            prefix_lookup_blocks=0, prefix_hit_blocks=0)
+        if bank is not None:
+            self.stats["tree_hist"] = np.zeros(len(bank), np.int64)
+            self.stats["tree_switches"] = 0
+
+    # ------------------------------------------------------------- submit
+    def submit(self, prompt, max_new: int,
+               temperature: Optional[float] = None,
+               tree_idx: Optional[int] = None) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if tree_idx is not None and (
+                self.bank is None or not 0 <= tree_idx < len(self.bank)):
+            raise ValueError(
+                f"tree_idx={tree_idx} needs a TemplateBank with more "
+                f"than {tree_idx} templates")
+        if not self.paged or self.bank is None:
+            # contiguous rows are written batch-wide (the widest window,
+            # clamped dynamic_update_slice would corrupt committed KV past
+            # max_len), so the bank-wide slack is the real requirement
+            # whatever template the request pins
+            slack = self.dec.window_slack
+        elif tree_idx is not None:
+            slack = self.dec.row_slack(tree_idx)
+        else:
+            slack = self.dec.min_row_slack
+        need = len(prompt) + max_new + slack
+        if len(prompt) < 2 or need > self.max_len:
+            # a raised error, not an assert: past this point an oversized
+            # request would outgrow its cache rows/blocks and silently
+            # attend garbage
+            raise ValueError(
+                f"request needs {need} cache positions (prompt="
+                f"{len(prompt)}, max_new={max_new}, window slack="
+                f"{slack}) but max_len={self.max_len}; "
+                f"prompts also need >= 2 tokens")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, prompt, max_new, temperature,
+                                  tree_idx))
+        self._submit_t_of[rid] = time.perf_counter()
+        return rid
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    def live_decode_mask(self) -> np.ndarray:
+        """Rows occupied AND past their prefill (the rows a step commits
+        tokens for)."""
+        occ = np.asarray([s is not None for s in self.slots])
+        return occ & (self.slot_pf >= self.slot_pf_len)
+
+    def prefilling_count(self) -> int:
+        occ = np.asarray([s is not None for s in self.slots])
+        return int((occ & (self.slot_pf < self.slot_pf_len)).sum())
+
+    # ---------------------------------------------------------- admission
+    def _feasible_templates(self, req: Request) -> List[int]:
+        """Bank templates whose window slack fits ``req`` inside max_len.
+        Never empty: submit() validated the smallest slack (paged) or the
+        bank-wide one (contiguous, where every template fits by then)."""
+        budget = self.max_len - len(req.prompt) - req.max_new
+        return [t for t in range(len(self.bank))
+                if self.dec.row_slack(t) <= budget]
+
+    def _pick_template(self, req: Request) -> int:
+        if self.bank is None:
+            return 0
+        if req.tree_idx is not None:
+            return req.tree_idx
+        feasible = self._feasible_templates(req)
+        if self.ctrl is None:
+            return 0 if 0 in feasible else feasible[0]
+        return self.ctrl.select(feasible=feasible)
+
+    def _try_admit(self, slot: int, req: Request) -> bool:
+        """Admit ``req`` into ``slot`` if its resources exist right now:
+        KV blocks (paged; after prefix matching) and a prefill lane.
+        Returns False without side effects when they don't."""
+        p = len(req.prompt)
+        tmpl = self._pick_template(req)
+        slack = self.dec.row_slack(tmpl) if self.bank is not None \
+            else self.dec.window_slack
+        need = p + req.max_new + slack
+
+        keys: List[bytes] = []
+        hit: List[int] = []
+        if self.paged:
+            if self.prefix_cache:
+                keys = kv_pool.prefix_block_keys(req.prompt,
+                                                 self.alloc.block_size)
+                hit = self.alloc.match_prefix(keys)
+            nb = self.alloc.blocks_needed(need)
+            if not self.alloc.can_allocate(nb - len(hit), hit) \
+                    and self.bank is not None and req.tree_idx is None:
+                # the controller's pick outgrows the pool: serve the
+                # request on the narrowest feasible template instead of
+                # head-of-line blocking (reshaping can widen it later as
+                # completions free blocks); pinned requests keep their
+                # shape and wait
+                tmpl = min(self._feasible_templates(req),
+                           key=self.dec.row_slack)
+                need = p + req.max_new + self.dec.row_slack(tmpl)
+                nb = self.alloc.blocks_needed(need)
+            if not self.alloc.can_allocate(nb - len(hit), hit):
+                return False                       # memory backpressure
+        pf_start = len(hit) * (self.alloc.block_size if self.paged else 0)
+        if pf_start < p - 1 and self.prefill_lanes is not None \
+                and self.prefilling_count() >= self.prefill_lanes:
+            return False                           # prefill budget exhausted
+
+        now = time.perf_counter()
+        if self.paged:
+            if self.prefix_cache:
+                self.alloc.allocate(slot, need, prefix=hit, keys=keys)
+            else:
+                # plain positional call — tests spy on allocate(slot, n)
+                self.alloc.allocate(slot, need)
+            self.stats["prefix_lookup_blocks"] += len(keys)
+            self.stats["prefix_hit_blocks"] += len(hit)
+            # defensive COW (kv_pool I2): with block-aligned matching the
+            # first writable position always lands past the shared prefix,
+            # but if a future matching policy maps the boundary block this
+            # is what keeps shared KV immutable
+            first_write_block = min(pf_start, p - 1) // self.alloc.block_size
+            for i in sorted(self.alloc.read_only.get(slot, ())):
+                if i >= first_write_block:
+                    pair = self.alloc.copy_on_write(slot, i)
+                    if pair is not None:
+                        self.ex.copy_block(*pair)
+        t = self.temperature if req.temperature is None else req.temperature
+        self.ex.admit_row(slot, req.prompt, float(t), req.rid, int(tmpl),
+                          pf_start)
+        self.slots[slot] = req
+        self.slot_limit[slot] = p + req.max_new
+        self.slot_tree[slot] = tmpl
+        self.slot_steps[slot] = 0
+        self.slot_pf[slot] = pf_start
+        self.slot_pf_len[slot] = p - 1
+        self.slot_submit_t[slot] = self._submit_t_of.pop(req.rid, now)
+        self.slot_admit_t[slot] = now
+        self.slot_first_t[slot] = np.nan
+        self.slot_last_t[slot] = now
+        self.slot_last_n[slot] = p
+        self.slot_samples[slot] = []
+        if self.ctrl is not None:
+            self.ctrl.seed_slot(slot)
+        return True
+
+    def admit(self) -> int:
+        """Fill free slots from a bounded prefix of the queue (FIFO-fair
+        skip-ahead): position 0 is always tried first, and a later request
+        (within ``admit_window``) may only overtake when every earlier one
+        cannot currently fit — so smaller requests flow around a
+        pool-oversized head instead of starving behind it, while nothing
+        beyond the window ever jumps the line."""
+        admitted = 0
+        for slot in range(self.max_batch):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            window = min(len(self.queue), self.admit_window)
+            for qi in range(window):
+                if self._try_admit(slot, self.queue[qi]):
+                    del self.queue[qi]
+                    admitted += 1
+                    break
+        return admitted
+
+    # ----------------------------------------------------------- stepping
+    def note_step(self, a: Optional[np.ndarray],
+                  rank: Optional[np.ndarray],
+                  rhist: Optional[np.ndarray], n_draft: int) -> None:
+        """Account one fused step: decode stats for decoding rows, cursor
+        advance + computed-block flags for prefilling rows, controller
+        updates and reshaping."""
+        live = self.live_decode_mask()               # decoding BEFORE step
+        n_live = int(live.sum())
+        self.stats["steps"] += 1
+        self.stats["target_forwards"] += 1
+        self.stats["draft_forwards"] += n_draft
+        if a is not None:
+            self.stats["accepted"] += int(a.sum())
+            self.stats["live_steps"] += n_live
+            self.stats["committed"] += int(a.sum()) + n_live
+            if rhist is not None:
+                self.stats["round_hist"] = (
+                    rhist if self.stats["round_hist"] is None
+                    else self.stats["round_hist"] + rhist)
+        else:                                        # mode="ar"
+            self.stats["committed"] += n_live
+        if self.bank is not None:
+            np.add.at(self.stats["tree_hist"], self.slot_tree[live], 1)
+        self.slot_steps[live] += 1
+
+        # advance the host prefill mirrors in lockstep with the device
+        for slot in range(self.max_batch):
+            if self.slots[slot] is None:
+                continue
+            pf, pfl = self.slot_pf[slot], self.slot_pf_len[slot]
+            if pf < pfl:
+                cl = int(min(self.chunk, pfl - pf))
+                self.slot_pf[slot] = pf + cl
+                self.stats["prefill_chunks"] += 1
+                self.stats["prefill_tokens"] += cl
+                if self.paged and self.prefix_cache:
+                    self.alloc.mark_computed(slot, int(self.slot_pf[slot]))
+
+        if self.ctrl is not None and n_live:
+            self.ctrl.update(live, self.slot_tree, a, rank)
+            self._reshape_slots(live)
+
+    def _reshape_slots(self, live_mask) -> None:
+        """Between-windows template re-selection (the adaptive controller).
+        Every ``tree_reselect_every`` live steps a slot re-scores the bank
+        under its own EWMA statistics and switches when a different
+        template wins AND the slot can hold it: within max_len, and — paged
+        — growable in place (``BlockAllocator.grow``; when the pool is too
+        tight the slot just keeps its current shape). Greedy losslessness
+        is shape-independent, so reshaping mid-request never changes
+        committed tokens' correctness, only how many arrive per step."""
+        for slot in np.nonzero(live_mask)[0]:
+            req = self.slots[slot]
+            if req is None or req.tree_idx is not None:
+                continue            # pinned requests keep their shape
+            if self.slot_steps[slot] % self.tree_reselect_every:
+                continue
+            best = self.ctrl.select(slot=int(slot),
+                                    feasible=self._feasible_templates(req))
+            if best == int(self.slot_tree[slot]):
+                continue
+            need = len(req.prompt) + req.max_new + self.dec.row_slack(best)
+            if self.paged and not self.alloc.grow(int(slot), need):
+                continue            # pool too tight: keep the old shape
+            self.slot_tree[slot] = best
+            self.ex.set_tree_idx(int(slot), int(best))
+            self.stats["tree_switches"] += 1
+
+    # ------------------------------------------------------------ harvest
+    def harvest(self) -> None:
+        n_host = self.ex.read_n()
+        now = time.perf_counter()
+        gen_host = None
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            p = len(req.prompt)
+            # latency: tokens committed since the last tick
+            c = int(n_host[slot] - self.slot_last_n[slot])
+            if c > 0:
+                if np.isnan(self.slot_first_t[slot]):
+                    self.slot_first_t[slot] = now
+                self.slot_samples[slot].append(
+                    ((now - self.slot_last_t[slot]) / c, c))
+                self.slot_last_t[slot] = now
+                self.slot_last_n[slot] = n_host[slot]
+
+            limit = self.slot_limit[slot]
+            end, hit_eos = None, False
+            if self.eos_id is not None and n_host[slot] > p:
+                if gen_host is None:
+                    gen_host = self.ex.read_gen()
+                row = gen_host[slot, p:n_host[slot]].tolist()
+                if self.eos_id in row:
+                    # truncate AT the EOS: tokens speculatively committed
+                    # after it in the same window are dropped from the
+                    # completion (the old engine kept them — ISSUE 5)
+                    end = min(p + row.index(self.eos_id) + 1, int(limit))
+                    hit_eos = True
+            if n_host[slot] >= limit or hit_eos:
+                if gen_host is None:
+                    gen_host = self.ex.read_gen()
+                if end is None:
+                    end = int(min(n_host[slot], limit))
+                samples = self.slot_samples[slot]
+                ttft = (self.slot_first_t[slot] - self.slot_submit_t[slot]
+                        if not np.isnan(self.slot_first_t[slot]) else 0.0)
+                self.completions.append(Completion(
+                    rid=req.rid, tokens=gen_host[slot, :end].copy(),
+                    generated=int(end - p),
+                    wall_submitted=self.slot_submit_t[slot],
+                    wall_done=now,
+                    queue_wait=self.slot_admit_t[slot]
+                    - self.slot_submit_t[slot],
+                    ttft=float(ttft),
+                    tok_p50=_weighted_percentile(samples, 50),
+                    tok_p95=_weighted_percentile(samples, 95)))
+                self.slots[slot] = None
+                self.slot_pf_len[slot] = 0
+                self.slot_pf[slot] = 0
+                self.ex.retire_row(slot)
+                if self.ctrl is not None:
+                    self.ctrl.retire_slot(slot)
+                if self.paged:
+                    self.alloc.release(slot)  # O(1); blocks reusable at once
+
+    # ------------------------------------------------------------ summary
+    def mean_accepted(self) -> float:
+        """Mean committed tokens per live row per verify step (a + 1) —
+        the tree/flat drafting quality metric gated in CI."""
+        if not self.stats["live_steps"]:
+            return 0.0
+        return 1.0 + self.stats["accepted"] / self.stats["live_steps"]
+
+    def prefix_hit_rate(self) -> float:
+        """Fraction of looked-up prompt blocks served from the prefix
+        cache (0.0 when caching is off or nothing was looked up)."""
+        lookups = self.stats["prefix_lookup_blocks"]
+        return self.stats["prefix_hit_blocks"] / lookups if lookups else 0.0
+
+    def latency_summary(self) -> Dict[str, float]:
+        """Percentiles over harvested completions, in milliseconds."""
+        comps = self.completions
+
+        def pct(vals, q):
+            return float(np.percentile(vals, q)) * 1e3 if vals else 0.0
+
+        ttfts = [c.ttft for c in comps]
+        waits = [c.queue_wait for c in comps]
+        return dict(
+            requests=len(comps),
+            queue_wait_p50_ms=pct(waits, 50),
+            ttft_p50_ms=pct(ttfts, 50),
+            ttft_p95_ms=pct(ttfts, 95),
+            tok_p50_ms=_weighted_percentile(
+                [(c.tok_p50, max(1, c.generated)) for c in comps], 50) * 1e3,
+            tok_p95_ms=_weighted_percentile(
+                [(c.tok_p95, max(1, c.generated)) for c in comps], 95) * 1e3,
+        )
