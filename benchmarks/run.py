@@ -18,12 +18,18 @@ sampling) acceptance, recorded under BENCH_serve.json's "tree_sampled"
 section. ``--scenario sched`` runs the layered-scheduler benchmark
 (serve_sched: shared-prefix workload, ``--prefix-share`` requests per
 system prompt, TTFT/per-token latency + prefix hit rate recorded under
-"serve_sched"). ``--smoke-floor`` turns the run into the CI regression
-gate: it exits non-zero with a one-line diagnostic naming the failing
-mode/metric unless every PARD mean accepted length recorded in the
-section that this run wrote ("tree"/"tree_sampled"/...) stays at or above
-the floor — for ``--scenario sched`` the floor applies to the cached
-prefix hit rate instead, and TTFT must have been recorded.
+"serve_sched"). ``--pipelined`` runs the overlap-pipeline benchmark
+(serve_pipelined: sync vs depth-2 loops, byte-identity asserted, tok/s +
+steps/sec + host-overhead recorded under "serve_pipelined").
+``--smoke-floor`` turns the run into the CI regression gate: it exits
+non-zero with a one-line diagnostic naming the failing mode/metric unless
+every PARD mean accepted length recorded in the section that this run
+wrote ("tree"/"tree_sampled"/...) stays at or above the floor — for
+``--scenario sched`` the floor applies to the cached prefix hit rate
+instead (TTFT must have been recorded), and for ``--pipelined`` it
+applies to the tree-pipelined / flat-synchronous tokens/sec ratio
+(normally 1.0: the ROADMAP gate that tree WINS throughput once host
+overhead is hidden).
 
 The roofline/dry-run numbers (deliverable e/g) are produced separately by
 ``python -m repro.launch.dryrun --all --both-meshes`` and summarised with
@@ -49,11 +55,35 @@ def check_floor(floor: float, section: str = "tree") -> int:
     if not tree:
         flag = {"tree": "--tree", "tree_sampled": "--tree --temperature 0.8",
                 "tree_adaptive": "--adaptive-tree",
-                "serve_sched": "--scenario sched"}.get(section, "--tree")
+                "serve_sched": "--scenario sched",
+                "serve_pipelined": "--pipelined"}.get(section, "--tree")
         print(f"smoke-floor: no '{section}' section in {common.BENCH_SERVE}"
               f" — run with {flag}", file=sys.stderr)
         return 2
     failed = False
+    if section == "serve_pipelined":
+        # the ROADMAP gate: tree-mode pipelined tokens/sec must clear the
+        # flat-K synchronous baseline (ratio >= floor, normally 1.0), and
+        # byte-identity must have been asserted by the benchmark run
+        gate = tree.get("gate", {})
+        ratio = gate.get("tree_pipelined_vs_flat_sync")
+        ok = ratio is not None and ratio >= floor
+        failed |= not ok
+        print(f"smoke-floor: serve_pipelined tree-pipelined/flat-sync tok/s"
+              f"={ratio if ratio is None else f'{ratio:.3f}'} "
+              f"{'>=' if ok else '< FAIL'} {floor} "
+              f"(tree_pipelined={gate.get('tree_pipelined_tps')} "
+              f"flat_sync={gate.get('flat_sync_tps')})", file=sys.stderr)
+        for name, entry in sorted(tree.items()):
+            if not name.endswith(".pipelined"):
+                continue
+            ok = entry.get("token_identical_to_sync") is True
+            failed |= not ok
+            print(f"smoke-floor: serve_pipelined.{name} "
+                  f"token_identical_to_sync="
+                  f"{entry.get('token_identical_to_sync')} "
+                  f"{'ok' if ok else 'MISSING/FAIL'}", file=sys.stderr)
+        return 1 if failed else 0
     if section == "serve_sched":
         hit = tree.get("cached", {}).get("prefix_hit_rate")
         ok = hit is not None and hit >= floor
@@ -92,12 +122,22 @@ def main() -> None:
                          "BENCH_serve section and asserts the controller "
                          "matches the static (2,2,2,1) baseline)")
     ap.add_argument("--scenario", default=None,
-                    choices=["sched", "serve", "tree", "adaptive"],
+                    choices=["sched", "serve", "tree", "adaptive",
+                             "pipelined"],
                     help="named serving scenario: 'sched' runs the "
                          "scheduler/prefix-cache benchmark (serve_sched, "
                          "records the 'serve_sched' BENCH_serve section); "
-                         "'serve'/'tree'/'adaptive' alias the other serve "
-                         "tables so CI and local runs share one entrypoint")
+                         "'serve'/'tree'/'adaptive'/'pipelined' alias the "
+                         "other serve tables so CI and local runs share one "
+                         "entrypoint")
+    ap.add_argument("--pipelined", action="store_true",
+                    help="run the overlap-pipelined serve benchmark "
+                         "(serve_pipelined: sync vs depth-2 dispatch/"
+                         "harvest loops, flat and tree; asserts byte-"
+                         "identical output and records the 'serve_"
+                         "pipelined' BENCH_serve section; with "
+                         "--smoke-floor F the CI gate requires tree-"
+                         "pipelined tok/s >= F * flat-sync tok/s)")
     ap.add_argument("--prefix-share", type=int, default=8, metavar="N",
                     help="serve_sched workload mix: requests per distinct "
                          "system prompt (1 = all-unique cold workload)")
@@ -121,14 +161,18 @@ def main() -> None:
               file=sys.stderr)
 
     scenario_table = {"sched": "serve_sched", "serve": "serve",
-                      "tree": "serve_tree", "adaptive": "serve_adaptive"}
-    scoped = args.tree or args.adaptive_tree or args.scenario
+                      "tree": "serve_tree", "adaptive": "serve_adaptive",
+                      "pipelined": "serve_pipelined"}
+    scoped = args.tree or args.adaptive_tree or args.pipelined \
+        or args.scenario
     names = args.only.split(",") if args.only else \
         ([] if scoped else list(tables.ALL))
     if args.tree and "serve_tree" not in names:
         names.append("serve_tree")
     if args.adaptive_tree and "serve_adaptive" not in names:
         names.append("serve_adaptive")
+    if args.pipelined and "serve_pipelined" not in names:
+        names.append("serve_pipelined")
     if args.scenario and scenario_table[args.scenario] not in names:
         names.append(scenario_table[args.scenario])
     t0 = time.time()
@@ -153,6 +197,8 @@ def main() -> None:
     if args.smoke_floor is not None:
         if args.scenario == "sched":
             section = "serve_sched"
+        elif args.pipelined or args.scenario == "pipelined":
+            section = "serve_pipelined"
         elif args.adaptive_tree:
             section = "tree_adaptive"
         else:

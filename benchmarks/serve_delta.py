@@ -17,9 +17,11 @@ import json
 import sys
 
 # the sections the bench-smoke job re-measures in CI (see ci.yml);
-# serve_sched entries additionally carry TTFT/latency fields, but only
+# serve_sched entries additionally carry TTFT/latency fields and
+# serve_pipelined ones steps/sec + host-overhead percentiles, but only
 # tokens/sec is tabulated here (absence-tolerant like the others)
-CI_SECTIONS = ("tree", "tree_sampled", "tree_adaptive", "serve_sched")
+CI_SECTIONS = ("tree", "tree_sampled", "tree_adaptive", "serve_sched",
+               "serve_pipelined")
 
 
 def load(path):

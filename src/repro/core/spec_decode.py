@@ -49,6 +49,7 @@ layout (the seeded-determinism tests in tests/test_sampled_tree.py).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -151,6 +152,24 @@ def _pick_next(logits: Array, temp: Array, keys: Array) -> Array:
         return jnp.where(temp > 0, s, greedy)
 
     return jax.lax.cond(jnp.any(temp > 0), samp, lambda: greedy)
+
+
+def _topk_indices(logits: Array, k: int) -> Array:
+    """Indices of the ``k`` largest logits along the last axis, descending,
+    lowest-index tie-break — exactly ``lax.top_k``'s order — via ``k``
+    argmax-and-mask passes. XLA:CPU lowers ``top_k`` to a full sort of the
+    vocab axis (the single most expensive op in a tree step on small
+    models); for the tiny branching factors trees use, a few fused reduce
+    passes are far cheaper on every backend."""
+    idx = []
+    cur = logits
+    ar = jnp.arange(logits.shape[-1], dtype=jnp.int32)
+    for j in range(k):
+        i = jnp.argmax(cur, axis=-1).astype(jnp.int32)
+        idx.append(i)
+        if j + 1 < k:
+            cur = jnp.where(ar == i[..., None], -jnp.inf, cur)
+    return jnp.stack(idx, axis=-1)
 
 
 def _has_ssm(cfg: ModelConfig) -> bool:
@@ -492,6 +511,8 @@ class SpecStats:
     mean_accepted: float      # mean committed tokens per iteration (a+1)
     round_hist: Any = None    # [max_b] — accepts per sibling rank (tree:
     #                           multi-round rounds / top-k ranks; chain: [1])
+    host_overhead_p50_ms: float = 0.0   # wall time between one iteration's
+    host_overhead_p95_ms: float = 0.0   # blocking reads and the next dispatch
 
 
 class SpecDecoder:
@@ -736,7 +757,8 @@ class SpecDecoder:
         return lg, dcache
 
     # ------------------------------------------------------------- shared
-    def _build_spec_step(self, mode: str, chunked: bool = False):
+    def _build_spec_step(self, mode: str, chunked: bool = False,
+                         greedy_only: bool = False):
         """One flat speculative step. ``chunked=True`` (the serving
         engine's unified step, DESIGN.md §8) additionally consumes a
         ``chunk_width``-token prompt chunk for every PREFILLING row
@@ -744,7 +766,11 @@ class SpecDecoder:
         forwards: prefilling rows substitute chunk tokens / cursor
         positions for the draft and verify windows, commit nothing, and
         advance ``pf_pos`` on device — admission never runs a standalone
-        prefill forward and decoding rows never stall."""
+        prefill forward and decoding rows never stall.
+
+        ``greedy_only=True``: compile-time removal of the sampled branches
+        and the per-step PRNG key splitting (see _build_tree_step) — token-
+        identical for batches where no live row samples."""
         k = self.k
         tc, dc = self.tc, self.dc
         mask_id = dc.mask_token_id
@@ -755,8 +781,10 @@ class SpecDecoder:
         def propose_pard(gen, n, m, dcache, tables, temp, dkeys, pfinfo):
             lg, dcache = self._pard_depth_logits(gen, n, m, dcache, tables,
                                                  pfinfo)
-            scaled = acceptance.scale_logits(lg, temp)      # [B, K, V]
             greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            if greedy_only:
+                return greedy, None, dcache, 1              # 1 draft forward
+            scaled = acceptance.scale_logits(lg, temp)      # [B, K, V]
 
             def samp():
                 s = jax.vmap(lambda kk, row: jax.random.categorical(kk, row))(
@@ -791,8 +819,11 @@ class SpecDecoder:
             cur_pos = n
             for j in range(k - 1 + 1):
                 lgj = lg_list[-1]
-                pj = _pick_next(lgj, temp,
-                                acceptance.fold_row_keys(dkeys, j))
+                if greedy_only:
+                    pj = jnp.argmax(lgj, axis=-1).astype(jnp.int32)
+                else:
+                    pj = _pick_next(lgj, temp,
+                                    acceptance.fold_row_keys(dkeys, j))
                 props.append(pj)
                 if j == k - 1:
                     break
@@ -801,6 +832,8 @@ class SpecDecoder:
                 cur_pos = cur_pos + 1
                 lg_list.append(lgn[:, 0])
             props = jnp.stack(props, axis=1)                # [B, K]
+            if greedy_only:
+                return props, None, snapshot, k             # K draft forwards
             scaled = acceptance.scale_logits(
                 jnp.stack(lg_list, axis=1), temp)           # [B, K, V]
             return props, scaled, snapshot, k               # K draft forwards
@@ -811,9 +844,13 @@ class SpecDecoder:
             gen, n, m, done = state.gen, state.n, state.m, state.done
             tcache, dcache, tables = state.tcache, state.dcache, state.tables
             temp = state.temp
-            next_keys, use = acceptance.split_row_keys(state.rngs)
-            dkeys = acceptance.fold_row_keys(use, 0)
-            akeys = acceptance.fold_row_keys(use, 1)
+            if greedy_only:
+                next_keys = state.rngs          # streams never consumed
+                dkeys = akeys = None
+            else:
+                next_keys, use = acceptance.split_row_keys(state.rngs)
+                dkeys = acceptance.fold_row_keys(use, 0)
+                akeys = acceptance.fold_row_keys(use, 1)
             pfinfo = None
             if chunked:
                 prefilling, pf = _phase(state)
@@ -822,8 +859,9 @@ class SpecDecoder:
                 # a prefilling row does not consume its sampling stream, so
                 # a request's sampled trajectory is invariant to HOW its
                 # prompt was prefilled (chunk schedule, prefix-cache hits)
-                next_keys = jnp.where(prefilling[:, None], state.rngs,
-                                      next_keys)
+                if not greedy_only:
+                    next_keys = jnp.where(prefilling[:, None], state.rngs,
+                                          next_keys)
             props, scaled_q, dcache, n_draft = propose(gen, n, m, dcache,
                                                        tables, temp, dkeys,
                                                        pfinfo)
@@ -846,20 +884,23 @@ class SpecDecoder:
             a_g, acc_g, commit_g = acceptance.greedy_chain_accept(
                 logits, props)
 
-            def samp_accept():
-                qprob = jax.nn.softmax(scaled_q, axis=-1)    # [B, K, V]
-                p_full = acceptance.temp_softmax(logits, temp)
-                return acceptance.leviathan_accept(p_full, qprob, props,
-                                                   akeys)
+            if greedy_only:
+                a, accepted, commit_tok = a_g, acc_g, commit_g
+            else:
+                def samp_accept():
+                    qprob = jax.nn.softmax(scaled_q, axis=-1)   # [B, K, V]
+                    p_full = acceptance.temp_softmax(logits, temp)
+                    return acceptance.leviathan_accept(p_full, qprob, props,
+                                                       akeys)
 
-            a_s, acc_s, commit_s = jax.lax.cond(
-                jnp.any(temp > 0), samp_accept,
-                lambda: (jnp.zeros_like(a_g), jnp.zeros_like(acc_g),
-                         jnp.zeros_like(commit_g)))
-            sampled = temp > 0
-            a = jnp.where(sampled, a_s, a_g)
-            accepted = jnp.where(sampled[:, None], acc_s, acc_g)
-            commit_tok = jnp.where(sampled, commit_s, commit_g)
+                a_s, acc_s, commit_s = jax.lax.cond(
+                    jnp.any(temp > 0), samp_accept,
+                    lambda: (jnp.zeros_like(a_g), jnp.zeros_like(acc_g),
+                             jnp.zeros_like(commit_g)))
+                sampled = temp > 0
+                a = jnp.where(sampled, a_s, a_g)
+                accepted = jnp.where(sampled[:, None], acc_s, acc_g)
+                commit_tok = jnp.where(sampled, commit_s, commit_g)
 
             # frozen rows commit nothing: done rows stay done, prefilling
             # rows consumed a prompt chunk instead of a verify window
@@ -911,9 +952,18 @@ class SpecDecoder:
         return step
 
     # --------------------------------------------------------------- tree
-    def _build_tree_step(self, chunked: bool = False):
+    def _build_tree_step(self, chunked: bool = False,
+                         greedy_only: bool = False):
         """One tree-verification step over PER-ROW templates (DESIGN.md
         §6/§7).
+
+        ``greedy_only=True`` compiles a variant with the sampled machinery
+        removed at trace time — no ``lax.cond`` fusion barriers, no per-step
+        threefry key splitting (the per-row serial while-loops XLA:CPU
+        lowers them to). Callers select it when no live row samples (host
+        knowledge at dispatch time); tokens are identical either way because
+        greedy output never reads the PRNG streams, and a sampled row's key
+        is freshly (seed, rid)-derived at admission.
 
         Each row's packed tree metadata (ancestor bitmasks, parent/depth/
         choice arrays, child map, slot count) is gathered from the static
@@ -961,9 +1011,13 @@ class SpecDecoder:
             gen, n, m, done = state.gen, state.n, state.m, state.done
             tcache, dcache, tables = state.tcache, state.dcache, state.tables
             temp = state.temp
-            next_keys, use = acceptance.split_row_keys(state.rngs)
-            dkeys = acceptance.fold_row_keys(use, 0)
-            akeys = acceptance.fold_row_keys(use, 1)
+            if greedy_only:
+                next_keys = state.rngs          # streams never consumed
+                dkeys = akeys = None
+            else:
+                next_keys, use = acceptance.split_row_keys(state.rngs)
+                dkeys = acceptance.fold_row_keys(use, 0)
+                akeys = acceptance.fold_row_keys(use, 1)
 
             # per-row template metadata, gathered from the static bank
             sel = state.tree_idx
@@ -980,33 +1034,37 @@ class SpecDecoder:
                 # prefilling rows keep their sampling stream untouched (see
                 # _build_spec_step): sampled output is prefill-schedule- and
                 # prefix-cache-invariant
-                next_keys = jnp.where(prefilling[:, None], state.rngs,
-                                      next_keys)
+                if not greedy_only:
+                    next_keys = jnp.where(prefilling[:, None], state.rngs,
+                                          next_keys)
 
             # draft: depth distributions -> per-row template tokens. One
-            # top-max_b per depth covers every template's ranks; lax.top_k
-            # and argmax share lowest-index tie-breaking, so rank 0 IS the
-            # flat path's argmax (degenerate-chain identity).
+            # top-max_b per depth covers every template's ranks;
+            # _topk_indices and argmax share lowest-index tie-breaking, so
+            # rank 0 IS the flat path's argmax (degenerate-chain identity).
             lg, dcache = self._pard_depth_logits(gen, n, m, dcache, tables,
                                                  pfinfo)
-            topk = jax.lax.top_k(lg, max_b)[1].astype(jnp.int32)   # [B,D,MB]
+            topk = _topk_indices(lg, max_b)                        # [B,D,MB]
             di = jnp.maximum(node_depth - 1, 0)
             per_node = jnp.take_along_axis(
                 topk, di[:, :, None], axis=1)                      # [B,N,MB]
             props_g = jnp.take_along_axis(
                 per_node, choice[:, 1:, None], axis=2)[..., 0]     # [B, N]
-            # sampled rows: i.i.d. candidates per node (multi-round
-            # acceptance requires sibling draws from q, not top-k); the
-            # per-node draws only execute when some row actually samples
-            scaled = acceptance.scale_logits(lg, temp)             # [B,D,V]
-            any_sampled = jnp.any(temp > 0)
-            props_s = jax.lax.cond(
-                any_sampled,
-                lambda: acceptance.sample_tree_props_rows(
-                    scaled, node_depth, dkeys),
-                lambda: props_g)
-            sampled = temp > 0
-            props = jnp.where(sampled[:, None], props_s, props_g)
+            if greedy_only:
+                props = props_g
+            else:
+                # sampled rows: i.i.d. candidates per node (multi-round
+                # acceptance requires sibling draws from q, not top-k); the
+                # per-node draws only execute when some row actually samples
+                scaled = acceptance.scale_logits(lg, temp)         # [B,D,V]
+                any_sampled = jnp.any(temp > 0)
+                props_s = jax.lax.cond(
+                    any_sampled,
+                    lambda: acceptance.sample_tree_props_rows(
+                        scaled, node_depth, dkeys),
+                    lambda: props_g)
+                sampled = temp > 0
+                props = jnp.where(sampled[:, None], props_s, props_g)
 
             # verify: one target forward over the packed tree; per-row
             # win_len bounds each row's window to its own template
@@ -1043,22 +1101,26 @@ class SpecDecoder:
                 acceptance.greedy_tree_accept_rows(
                     logits, props, parent, depth, choice, anc, nslots, d)
 
-            def samp_accept():
-                p_full = acceptance.temp_softmax(logits, temp)   # [B, S, V]
-                q_depth = jax.nn.softmax(scaled, axis=-1)        # [B, D, V]
-                return acceptance.sampled_tree_accept_rows(
-                    p_full, q_depth, props, cmap, akeys, d, max_b)
+            if greedy_only:
+                a, tok_depth, src_slot = a_g, tok_g, slot_g
+                commit_tok, rank = commit_g, rank_g
+            else:
+                def samp_accept():
+                    p_full = acceptance.temp_softmax(logits, temp)  # [B,S,V]
+                    q_depth = jax.nn.softmax(scaled, axis=-1)       # [B,D,V]
+                    return acceptance.sampled_tree_accept_rows(
+                        p_full, q_depth, props, cmap, akeys, d, max_b)
 
-            a_s, tok_s, slot_s, commit_s, rank_s = jax.lax.cond(
-                any_sampled, samp_accept,
-                lambda: (jnp.zeros_like(a_g), jnp.zeros_like(tok_g),
-                         jnp.zeros_like(slot_g), jnp.zeros_like(commit_g),
-                         jnp.full_like(rank_g, -1)))
-            a = jnp.where(sampled, a_s, a_g)
-            tok_depth = jnp.where(sampled[:, None], tok_s, tok_g)
-            src_slot = jnp.where(sampled[:, None], slot_s, slot_g)
-            commit_tok = jnp.where(sampled, commit_s, commit_g)
-            rank = jnp.where(sampled[:, None], rank_s, rank_g)  # [B, D]
+                a_s, tok_s, slot_s, commit_s, rank_s = jax.lax.cond(
+                    any_sampled, samp_accept,
+                    lambda: (jnp.zeros_like(a_g), jnp.zeros_like(tok_g),
+                             jnp.zeros_like(slot_g), jnp.zeros_like(commit_g),
+                             jnp.full_like(rank_g, -1)))
+                a = jnp.where(sampled, a_s, a_g)
+                tok_depth = jnp.where(sampled[:, None], tok_s, tok_g)
+                src_slot = jnp.where(sampled[:, None], slot_s, slot_g)
+                commit_tok = jnp.where(sampled, commit_s, commit_g)
+                rank = jnp.where(sampled[:, None], rank_s, rank_g)  # [B, D]
 
             # frozen rows commit nothing: done rows stay done, prefilling
             # rows consumed a prompt chunk instead of a verify window
@@ -1139,12 +1201,18 @@ class SpecDecoder:
             donate=(1,))
         # donate the whole state: the steady state then updates gen + both
         # cache pools in place (no per-iteration multi-MB buffer copies)
+        # greedy batches compile the sampled machinery out entirely (no
+        # per-step threefry splits, no lax.cond fusion barriers)
+        go = self.temperature == 0.0
+        sfx = "_g" if go else ""
         if self.tree is not None:
-            step = self._fn(f"tree_step_{self.tree.key}",
-                            self._build_tree_step(), donate=(0,))
+            step = self._fn(f"tree_step_{self.tree.key}{sfx}",
+                            self._build_tree_step(greedy_only=go),
+                            donate=(0,))
         else:
-            step = self._fn(f"spec_step_{mode}",
-                            self._build_spec_step(mode), donate=(0,))
+            step = self._fn(f"spec_step_{mode}{sfx}",
+                            self._build_spec_step(mode, greedy_only=go),
+                            donate=(0,))
 
         state = dataclasses.replace(
             state, tcache=prefill_t(prompt[:, :-1], state.tcache),
@@ -1155,8 +1223,13 @@ class SpecDecoder:
         round_hist = None
         acc_total, live_iters = 0, 0
         target_n = p + max_new
+        host_overhead_ms = []       # blocking-reads-done -> next dispatch
+        t_reads_done = None
         while True:
             live = int(jnp.sum(~state.done))
+            if t_reads_done is not None:
+                host_overhead_ms.append(
+                    (time.perf_counter() - t_reads_done) * 1e3)
             state, a, hist, rhist, _rank, n_draft = step(state)
             iters += 1
             live_iters += live
@@ -1166,7 +1239,9 @@ class SpecDecoder:
             round_hist = rhist if round_hist is None else round_hist + rhist
             acc_total += int(jnp.sum(a))
             state = dataclasses.replace(state, done=state.n >= target_n)
-            if bool(jnp.all(state.done)) or iters > max_new + 2:
+            stop = bool(jnp.all(state.done)) or iters > max_new + 2
+            t_reads_done = time.perf_counter()
+            if stop:
                 break
 
         n, gen = state.n, state.gen
@@ -1181,5 +1256,9 @@ class SpecDecoder:
             acceptance_rate=acc_total / (live_iters * k),
             mean_accepted=acc_total / live_iters + 1.0,
             round_hist=jax.device_get(round_hist),
+            host_overhead_p50_ms=(float(np.percentile(host_overhead_ms, 50))
+                                  if host_overhead_ms else 0.0),
+            host_overhead_p95_ms=(float(np.percentile(host_overhead_ms, 95))
+                                  if host_overhead_ms else 0.0),
         )
         return tokens, stats

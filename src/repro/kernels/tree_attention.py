@@ -45,8 +45,8 @@ NEG_INF = -1e30
 
 
 def _kernel(qpos_ref, kvlen_ref, winstart_ref, winlen_ref, anc_ref, q_ref,
-            k_ref, v_ref, o_ref, m_s, l_s, acc_s, *, scale, window, softcap,
-            block_k, tq, g):
+            k_ref, v_ref, o_ref, m_s, l_s, acc_s, qp_s, anc_s, *, scale,
+            window, softcap, block_k, tq, g):
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -55,6 +55,11 @@ def _kernel(qpos_ref, kvlen_ref, winstart_ref, winlen_ref, anc_ref, q_ref,
         m_s[...] = jnp.full_like(m_s, NEG_INF)
         l_s[...] = jnp.zeros_like(l_s)
         acc_s[...] = jnp.zeros_like(acc_s)
+        # the per-row mask operands are k-block-invariant: expand the
+        # [tq] position / ancestor-bitmask vectors to query-row shape ONCE
+        # per (batch, head) program instead of on every k-block visit
+        qp_s[...] = jnp.repeat(qpos_ref[0, :], g)[:, None]
+        anc_s[...] = jnp.repeat(anc_ref[0, :], g)[:, None]
 
     kv_len = kvlen_ref[0]                              # scalar for this row
     ws = winstart_ref[0]
@@ -73,10 +78,10 @@ def _kernel(qpos_ref, kvlen_ref, winstart_ref, winlen_ref, anc_ref, q_ref,
         if softcap:
             s = jnp.tanh(s / softcap) * softcap
 
-        # rows are (window slot i, group member): the mask depends only on i
-        qp = qpos_ref[0, :]                            # [tq] logical q pos
-        qp_rows = jnp.repeat(qp, g)[:, None]           # [tq*g, 1] — static
-        anc_rows = jnp.repeat(anc_ref[0, :], g)[:, None]  # [tq*g, 1] uint32
+        # rows are (window slot i, group member): the mask depends only on
+        # i — read the expansions hoisted into scratch at ki == 0
+        qp_rows = qp_s[...]                            # [tq*g, 1] int32
+        anc_rows = anc_s[...]                          # [tq*g, 1] uint32
         k_pos = k_start + jax.lax.broadcasted_iota(
             jnp.int32, (tq * g, block_k), 1)
         ctx = k_pos < ws                               # committed context
@@ -151,6 +156,8 @@ def tree_attention(q, k, v, kv_len, q_pos, win_start, anc, *, win_len=None,
             pltpu.VMEM((tq * g, 1), jnp.float32),
             pltpu.VMEM((tq * g, 1), jnp.float32),
             pltpu.VMEM((tq * g, d), jnp.float32),
+            pltpu.VMEM((tq * g, 1), jnp.int32),     # hoisted q positions
+            pltpu.VMEM((tq * g, 1), jnp.uint32),    # hoisted ancestor masks
         ],
         interpret=interpret,
     )(q_pos.astype(jnp.int32), kv_len.astype(jnp.int32),
@@ -160,11 +167,12 @@ def tree_attention(q, k, v, kv_len, q_pos, win_start, anc, *, win_len=None,
 
 
 def _paged_kernel(bt_ref, qpos_ref, kvlen_ref, winstart_ref, winlen_ref,
-                  anc_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, **kw):
+                  anc_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s,
+                  qp_s, anc_s, **kw):
     # bt_ref (the scalar-prefetched block table) is consumed only by the
     # BlockSpec index_maps; the compute body is the contiguous kernel's.
     _kernel(qpos_ref, kvlen_ref, winstart_ref, winlen_ref, anc_ref, q_ref,
-            k_ref, v_ref, o_ref, m_s, l_s, acc_s, **kw)
+            k_ref, v_ref, o_ref, m_s, l_s, acc_s, qp_s, anc_s, **kw)
 
 
 def tree_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
@@ -213,6 +221,8 @@ def tree_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
             pltpu.VMEM((tq * g, 1), jnp.float32),
             pltpu.VMEM((tq * g, 1), jnp.float32),
             pltpu.VMEM((tq * g, d), jnp.float32),
+            pltpu.VMEM((tq * g, 1), jnp.int32),     # hoisted q positions
+            pltpu.VMEM((tq * g, 1), jnp.uint32),    # hoisted ancestor masks
         ],
     )
     out = pl.pallas_call(

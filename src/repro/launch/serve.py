@@ -75,6 +75,10 @@ def main():
                     help="max prompt tokens consumed per step across "
                          "prefilling rows (chunked-prefill lanes; default "
                          "unthrottled)")
+    ap.add_argument("--pipelined", action="store_true",
+                    help="two-deep dispatch/harvest pipeline: step t+1 is "
+                         "dispatched while step t is in flight (DESIGN.md "
+                         "§9); token-identical to the synchronous loop")
     args = ap.parse_args()
 
     tc = get_config(args.target)
@@ -131,7 +135,7 @@ def main():
         else:
             prompt = corpus.prompts(rng, 1, args.prompt_len)[0]
         eng.submit(prompt, args.max_new, temperature=temp)
-    comps = eng.run()
+    comps = eng.run(pipelined=args.pipelined)
     wall = time.perf_counter() - t0
 
     total = sum(c.generated for c in comps)
@@ -142,9 +146,12 @@ def main():
         label += f"[T={args.temperature}" + (
             f",greedy×{args.greedy_requests}]" if args.greedy_requests
             else "]")
+    if args.pipelined:
+        label += "[pipelined]"
     print(f"\nmode={label} requests={len(comps)} "
           f"generated={total} tokens wall={wall:.2f}s "
           f"throughput={total / wall:.1f} tok/s "
+          f"steps/s={eng.stats['steps'] / wall:.1f} "
           f"mean_accepted={eng.mean_accepted():.2f}")
     lats = sorted(c.wall_done - c.wall_submitted for c in comps)
     lat = eng.latency_summary()
@@ -153,6 +160,9 @@ def main():
           f"ttft_p95={lat['ttft_p95_ms']:.0f}ms "
           f"tok_p50={lat['tok_p50_ms']:.1f}ms "
           f"tok_p95={lat['tok_p95_ms']:.1f}ms")
+    print(f"host overhead (harvest->dispatch) "
+          f"p50={lat['host_overhead_p50_ms']:.2f}ms "
+          f"p95={lat['host_overhead_p95_ms']:.2f}ms")
     print(f"kv layout={args.kv_layout} "
           f"capacity={eng.kv_capacity_bytes() / 1e6:.2f}MB "
           f"peak_in_use={eng.peak_kv_bytes_in_use / 1e6:.2f}MB")

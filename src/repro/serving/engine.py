@@ -33,6 +33,11 @@ Design (all fixed shapes, jit-once):
   * decode: ONE jitted speculative step advances all active slots together;
     finished slots free immediately and new requests admit on the next tick
     (continuous batching);
+  * ``run(pipelined=True)`` / ``run_pipelined()`` overlap host scheduling
+    with device execution: step t+1 is dispatched (donated state buffers,
+    staged mutations) while step t's results are still in flight, and every
+    step's outputs arrive in one batched transfer (DESIGN.md §9) —
+    token-identical to the synchronous loop;
   * modes: "ar" (AR+ baseline), "vsd", "pard" — same engine, same pool;
     ``tree=`` upgrades "pard" to tree-structured drafting (DESIGN.md §6),
     per-request via a TemplateBank, ``adaptive_tree=True`` adds the EWMA
@@ -48,6 +53,7 @@ layouts.
 """
 from __future__ import annotations
 
+from collections import deque
 from typing import Optional
 
 from ..core.spec_decode import SpecDecoder, TemplateBank
@@ -138,30 +144,50 @@ class Engine:
         Scheduler.submit."""
         return self.sched.submit(prompt, max_new, temperature, tree_idx)
 
-    def run(self, max_steps: int = 100000):
+    def run(self, max_steps: int = 100000, pipelined: bool = False):
+        """Drive the serve loop to completion. ``pipelined=False`` runs
+        the depth-1 (synchronous) pipeline: each step is dispatched and
+        its results processed back-to-back — the exact historical
+        semantics. ``pipelined=True`` runs depth 2: step t+1 is dispatched
+        (with the mutations staged from step t-1's results) BEFORE step
+        t's results are harvested, so host-side scheduling overlaps device
+        execution (DESIGN.md §9). Both depths share this one loop; the
+        only difference is how many handles may be in flight."""
         sched, ex = self.sched, self.ex
-        while sched.has_work() and sched.stats["steps"] < max_steps:
-            admitted = sched.admit()
-            if sched.queue and not admitted \
-                    and all(s is None for s in sched.slots):
-                # every slot (hence every block) is free and NOTHING in the
-                # admission window could admit: the head can never fit —
-                # fail loudly instead of spinning on backpressure forever
-                req = sched.queue[0]
-                raise RuntimeError(
-                    f"request {req.rid} (prompt={len(req.prompt)}, "
-                    f"max_new={req.max_new}) needs more KV blocks than the "
-                    f"pool holds; raise kv_num_blocks or max_len")
-            ex.sync_tables(self.alloc)
-            if self.paged:
-                self.peak_kv_bytes_in_use = max(self.peak_kv_bytes_in_use,
-                                                self.kv_bytes_in_use())
-            if any(s is not None for s in sched.slots):
-                a, rank, rhist, n_draft = ex.step(
-                    sched.prefilling_count() > 0)
-                sched.note_step(a, rank, rhist, n_draft)
-            sched.harvest()
+        depth = 2 if pipelined else 1
+        inflight = deque()
+        sched._harvest_done_t = None   # don't count inter-run wall time
+        while sched.has_work() or inflight:
+            dispatched = False
+            if sched.has_work() and sched.stats["steps"] < max_steps:
+                admitted = sched.admit()
+                if sched.queue and not admitted and not inflight \
+                        and all(s is None for s in sched.slots):
+                    # every slot (hence every block) is free, nothing is in
+                    # flight that could free more, and NOTHING in the
+                    # admission window could admit: the head can never fit
+                    # — fail loudly instead of spinning forever
+                    req = sched.queue[0]
+                    raise RuntimeError(
+                        f"request {req.rid} (prompt={len(req.prompt)}, "
+                        f"max_new={req.max_new}) needs more KV blocks than "
+                        f"the pool holds; raise kv_num_blocks or max_len")
+                ex.sync_tables(self.alloc)
+                if self.paged:
+                    self.peak_kv_bytes_in_use = max(
+                        self.peak_kv_bytes_in_use, self.kv_bytes_in_use())
+                if any(s is not None for s in sched.slots):
+                    inflight.append(sched.dispatch())
+                    dispatched = True
+            if inflight and (len(inflight) >= depth or not dispatched):
+                sched.process(inflight.popleft())
+            elif not dispatched and not inflight:
+                break                  # step budget exhausted, fully drained
         return sched.completions
+
+    def run_pipelined(self, max_steps: int = 100000):
+        """``run`` with the two-deep dispatch/harvest pipeline."""
+        return self.run(max_steps, pipelined=True)
 
     def mean_accepted(self) -> float:
         return self.sched.mean_accepted()

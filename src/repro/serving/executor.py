@@ -16,11 +16,23 @@ executor only moves the device state: row admission writes the prompt into
 change so released rows' stale writes route to the garbage block
 (kv_pool I4). ``serving.engine.Engine`` wires the two together and keeps
 the public API.
+
+Stepping is split into a non-blocking ``dispatch`` and a blocking
+``harvest`` (DESIGN.md §9) so the engine can run a two-deep pipeline:
+``dispatch`` enqueues ONE fused XLA computation — staged mutations
+(retirement mask, per-row template re-selection, commit-limit freeze)
+folded in AHEAD of the inner step — and returns a ``StepHandle`` of device
+futures immediately; ``harvest`` materializes every per-step output
+``(a, rank, rhist, live, n, gen)`` in a single batched ``jax.device_get``
+instead of one transfer per array. The handle's arrays are ordinary jit
+OUTPUTS, distinct buffers from the ones inside the returned ``DecodeState``
+— donating the state into the next dispatch therefore never invalidates a
+still-unharvested handle (the donation invariant §9 relies on).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +43,43 @@ from ..core.spec_decode import DecodeState, SpecDecoder
 from ..models import init_caches
 from ..models.config import SSM, ModelConfig, scan_plan
 from . import kv_pool
+
+# "no staged commit limit" sentinel: n never reaches int32 max, so the
+# device-side freeze ``done |= n >= limits`` is a no-op for these rows
+NO_LIMIT = np.int32(np.iinfo(np.int32).max)
+
+
+@dataclasses.dataclass
+class StepHandle:
+    """One in-flight step: device futures plus host metadata snapshotted at
+    dispatch time. ``a``/``rank``/``rhist`` are None for mode="ar";
+    ``tree_sel`` is the host copy of the per-slot template indices the step
+    was dispatched with (stats/controller attribution must use THIS, not
+    the scheduler's mirrors, which may be re-staged before harvest)."""
+    a: Optional[Any]
+    rank: Optional[Any]
+    rhist: Optional[Any]
+    live: Any                 # [B] bool — rows the step commits tokens for
+    n: Any                    # [B] post-step committed counts
+    gen: Any                  # [B, L] post-step token buffer
+    n_draft: int
+    tree_sel: Optional[np.ndarray] = None
+    # scheduler-stamped: rid per slot at dispatch time (-1 = empty). A slot
+    # re-admitted while this step was in flight fails the rid match at
+    # process time, so the stale step's n/gen are never attributed to the
+    # new request (the one-step-stale commit horizon, DESIGN.md §9)
+    rids: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class StepResult:
+    """Host-materialized ``StepHandle`` (one batched transfer)."""
+    a: Optional[np.ndarray]
+    rank: Optional[np.ndarray]
+    rhist: Optional[np.ndarray]
+    live: np.ndarray
+    n: np.ndarray
+    gen: np.ndarray
 
 
 def _zero_ssm_rows(cfg: ModelConfig, cache, slot: int):
@@ -92,6 +141,11 @@ class Executor:
         self._rng_base = jax.random.PRNGKey(seed)
         self._step_fns = {}
         self._tables_version = -1
+        # draft forwards per step are a STATIC property of the mode (pard /
+        # tree: one mask-window forward; vsd: k AR forwards; ar: none) — a
+        # host constant, never read back from the jit output, so dispatch
+        # stays non-blocking
+        self._n_draft = 0 if mode == "ar" else (dec.k if mode == "vsd" else 1)
 
         if paged:
             tcache = kv_pool.init_paged_caches(target_cfg, max_batch,
@@ -190,7 +244,7 @@ class Executor:
                     _copy_block(self.dc, st.dcache, src, dst)))
 
     # -------------------------------------------------------------- steps
-    def _build(self, variant: str):
+    def _build(self, variant: str, greedy_only: bool = False):
         if self.mode == "ar":
             # two compiled variants: the 1-wide pure-decode window (the
             # AR+ hot path — pad slots would cost real attention compute
@@ -205,27 +259,112 @@ class Executor:
         # the chunk substitution is a few jnp.where selects), so one
         # compiled step serves both pure-decode and mixed ticks
         if self.dec.tree is not None:
-            return self.dec._build_tree_step(chunked=True)
+            return self.dec._build_tree_step(chunked=True,
+                                             greedy_only=greedy_only)
         return self.dec._build_spec_step(
-            "pard" if self.mode == "pard" else "vsd", chunked=True)
+            "pard" if self.mode == "pard" else "vsd", chunked=True,
+            greedy_only=greedy_only)
 
-    def step(self, any_prefilling: bool = True):
-        """One fused prefill+decode step. Returns host copies of the
-        per-row accepted depths / sibling ranks (None for mode="ar") and
-        the draft-forward count. ``any_prefilling``: host hint (the
-        scheduler's cursor mirrors) selecting the AR window variant."""
+    def _build_fused(self, variant: str, apply_tree: bool,
+                     greedy_only: bool = False):
+        """One XLA dispatch per tick: staged host decisions (retirement,
+        template re-selection, commit-limit freeze) fold into the SAME
+        computation as the inner step, replacing the eager per-slot
+        ``.at[].set`` dispatches the synchronous loop issued between steps.
+
+        The wrapper also computes the LIVE mask (rows the step commits
+        tokens for) on the post-mutation, pre-step state and returns it
+        with the step outputs — the pipelined scheduler cannot derive it
+        from host mirrors, which run one step ahead of unharvested
+        results — and re-returns ``n``/``gen`` as explicit outputs so a
+        harvest needs no read of the (soon-to-be-donated) state."""
+        inner = self._build(variant, greedy_only)
+
+        def fused(state, retire, tree_sel, limits):
+            # staged retirement + the device-side limit freeze: a row whose
+            # committed count reached its limit is frozen even if the host
+            # has not harvested that result yet (the pipelined loop's
+            # one-step-stale horizon must not let it overrun its blocks)
+            done = state.done | retire | (state.n >= limits)
+            # temp resets with retirement (see retire_row)
+            temp = jnp.where(retire, 0.0, state.temp)
+            tree_idx = state.tree_idx
+            if apply_tree and tree_idx is not None:
+                tree_idx = tree_sel
+            st = dataclasses.replace(state, done=done, temp=temp,
+                                     tree_idx=tree_idx)
+            live = ~(st.done | (st.pf_pos < st.pf_len))
+            new_state, a, _hist, rhist, rank, _nd = inner(st)
+            return new_state, a, rank, rhist, live, new_state.n, new_state.gen
+        return fused
+
+    def dispatch(self, retire: Optional[np.ndarray] = None,
+                 tree_sel: Optional[np.ndarray] = None,
+                 limits: Optional[np.ndarray] = None,
+                 any_prefilling: bool = True,
+                 any_sampled: bool = True) -> StepHandle:
+        """Enqueue one fused prefill+decode step and return immediately
+        with a handle of device futures (the jitted call is asynchronous;
+        nothing here blocks). ``retire`` [B] bool / ``tree_sel`` [B] int /
+        ``limits`` [B] int are the scheduler's staged mutations (None =
+        no-op); ``any_prefilling``: host hint selecting the AR window
+        variant; ``any_sampled=False``: host hint (no OCCUPIED slot has
+        temperature > 0) selecting the greedy-specialized spec/tree step —
+        token-identical, with the sampled machinery compiled out. Greedy
+        rows never consume their PRNG streams and a sampled row's key is
+        freshly (seed, rid)-derived at admission, so alternating between
+        the two compiled variants across steps is safe."""
         variant = "mixed" if (any_prefilling and self.mode == "ar") \
             else "decode"
-        if variant not in self._step_fns:
-            self._step_fns[variant] = jax.jit(self._build(variant),
-                                              donate_argnums=(0,))
-        self.state, a, _hist, rhist, rank, n_draft = \
-            self._step_fns[variant](self.state)
-        if a is None:
+        greedy_only = not any_sampled and self.mode != "ar"
+        key = (variant, tree_sel is not None, greedy_only)
+        if key not in self._step_fns:
+            self._step_fns[key] = jax.jit(
+                self._build_fused(variant, apply_tree=tree_sel is not None,
+                                  greedy_only=greedy_only),
+                donate_argnums=(0,))
+        b = self.max_batch
+        retire_d = (jnp.zeros((b,), bool) if retire is None
+                    else jnp.asarray(retire, bool))
+        limits_d = (jnp.full((b,), NO_LIMIT, jnp.int32) if limits is None
+                    else jnp.asarray(limits, jnp.int32))
+        tree_d = (jnp.zeros((b,), jnp.int32) if tree_sel is None
+                  else jnp.asarray(tree_sel, jnp.int32))
+        self.state, a, rank, rhist, live, n, gen = \
+            self._step_fns[key](self.state, retire_d, tree_d, limits_d)
+        return StepHandle(a=a, rank=rank, rhist=rhist, live=live, n=n,
+                          gen=gen, n_draft=self._n_draft,
+                          tree_sel=None if tree_sel is None
+                          else np.asarray(tree_sel))
+
+    def harvest(self, handle: StepHandle) -> StepResult:
+        """Materialize one in-flight step's outputs in a SINGLE batched
+        host transfer (blocks until that step completes on device). Safe
+        to call after later dispatches: the handle's arrays are distinct
+        jit-output buffers, untouched by the state donation."""
+        if handle.a is None:                          # mode="ar"
+            live, n, gen = jax.device_get(
+                (handle.live, handle.n, handle.gen))
+            return StepResult(None, None, None, np.asarray(live),
+                              np.asarray(n), np.asarray(gen))
+        a, rank, rhist, live, n, gen = jax.device_get(
+            (handle.a, handle.rank, handle.rhist, handle.live, handle.n,
+             handle.gen))
+        return StepResult(np.asarray(a), np.asarray(rank),
+                          np.asarray(rhist), np.asarray(live),
+                          np.asarray(n), np.asarray(gen))
+
+    def step(self, any_prefilling: bool = True):
+        """One SYNCHRONOUS fused step (dispatch + immediate harvest, no
+        staged mutations): the depth-1 special case, kept for tests and
+        callers outside the engine's pipeline. Returns host copies of the
+        per-row accepted depths / sibling ranks (None for mode="ar") and
+        the draft-forward count."""
+        handle = self.dispatch(any_prefilling=any_prefilling)
+        res = self.harvest(handle)
+        if res.a is None:
             return None, None, None, 0
-        return (np.asarray(jax.device_get(a)),
-                np.asarray(jax.device_get(rank)),
-                np.asarray(jax.device_get(rhist)), int(n_draft))
+        return res.a, res.rank, res.rhist, handle.n_draft
 
     # --------------------------------------------------------------- host
     def read_n(self) -> np.ndarray:

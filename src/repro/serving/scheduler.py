@@ -15,11 +15,27 @@ The ``Scheduler`` owns every decision that does NOT touch the device:
     the new prompt is mapped copy-free from ``kv_pool.BlockAllocator``'s
     hash index, and only the uncovered tail is prefilled (the prefill
     cursor starts past the hit);
-  * per-request latency accounting: queue wait, TTFT, and per-token
-    inter-commit latency percentiles, recorded on every ``Completion`` and
-    summarised by ``latency_summary``;
+  * per-request latency accounting: queue wait, TTFT, per-token
+    inter-commit latency percentiles, and per-step host overhead (the
+    wall time from harvest-complete to the next dispatch), recorded on
+    every ``Completion`` and summarised by ``latency_summary``;
   * the adaptive tree-template controller (``TreeController``) and the
     between-windows reshaping cadence.
+
+Stepping follows the executor's dispatch/harvest split (DESIGN.md §9):
+``dispatch()`` issues one fused step non-blocking — applying every staged
+mutation (retirements from the previous harvest, template re-selection)
+on device ahead of the inner step — and immediately advances all
+DISPATCH-DETERMINISTIC accounting: step counters, the prefill cursor
+mirrors (the chunk schedule depends only on the cursor, never on step
+results), computed-block flags. ``process(handle)`` harvests a step's
+results in one batched transfer and folds in everything RESULT-DEPENDENT:
+acceptance stats and controller updates from the device-reported live
+mask, completions (EOS / max_new), and retirement — STAGED, applied at
+the next dispatch boundary. The synchronous loop is the depth-1 special
+case of the same protocol (dispatch immediately followed by process), so
+the pipelined loop's semantics are the synchronous ones shifted by at
+most one step.
 
 Device work (cache pools, jitted fused steps, row state) lives in
 ``serving.executor.Executor``; ``serving.engine.Engine`` is the thin
@@ -36,7 +52,7 @@ import numpy as np
 
 from ..core.spec_decode import SpecDecoder, TemplateBank
 from . import kv_pool
-from .executor import Executor
+from .executor import NO_LIMIT, Executor, StepHandle, StepResult
 
 
 @dataclasses.dataclass
@@ -150,8 +166,9 @@ class TreeController:
 
 class Scheduler:
     """Queues, admission and accounting over one Executor (see module
-    docstring). The Engine drives ``admit() -> Executor.step() ->
-    note_step() -> harvest()`` once per tick."""
+    docstring). The Engine drives ``admit() -> dispatch()`` once per tick
+    and ``process(handle)`` once per completed step — back-to-back in the
+    synchronous loop, one step apart in the pipelined one."""
 
     def __init__(self, dec: SpecDecoder, executor: Executor,
                  alloc: Optional[kv_pool.BlockAllocator], *, mode: str,
@@ -191,6 +208,14 @@ class Scheduler:
         self.slot_last_t = np.zeros(max_batch)
         self.slot_last_n = np.zeros(max_batch, np.int64)
         self.slot_samples: List[List] = [[] for _ in range(max_batch)]
+
+        # staged mutation protocol (DESIGN.md §9): decisions made while a
+        # step may be in flight are applied at the NEXT dispatch boundary
+        self.pending_retire = np.zeros(max_batch, bool)
+        self._occ_cache: Optional[np.ndarray] = None
+        # per-step host overhead: harvest-complete -> next dispatch, ms
+        self.host_overhead_ms: List[float] = []
+        self._harvest_done_t: Optional[float] = None
 
         self._next_rid = 0
         self._submit_t_of: Dict[int, float] = {}   # rid -> submit wall time
@@ -243,14 +268,21 @@ class Scheduler:
     def has_work(self) -> bool:
         return bool(self.queue) or any(s is not None for s in self.slots)
 
+    def occupied_mask(self) -> np.ndarray:
+        """[B] bool — slots holding a live request. Built once per slot
+        mutation, not per query: admission and completion invalidate the
+        cache; every mask consumer between them shares one array."""
+        if self._occ_cache is None:
+            self._occ_cache = np.asarray([s is not None for s in self.slots])
+        return self._occ_cache
+
     def live_decode_mask(self) -> np.ndarray:
         """Rows occupied AND past their prefill (the rows a step commits
         tokens for)."""
-        occ = np.asarray([s is not None for s in self.slots])
-        return occ & (self.slot_pf >= self.slot_pf_len)
+        return self.occupied_mask() & (self.slot_pf >= self.slot_pf_len)
 
     def prefilling_count(self) -> int:
-        occ = np.asarray([s is not None for s in self.slots])
+        occ = self.occupied_mask()
         return int((occ & (self.slot_pf < self.slot_pf_len)).sum())
 
     # ---------------------------------------------------------- admission
@@ -330,7 +362,14 @@ class Scheduler:
         t = self.temperature if req.temperature is None else req.temperature
         self.ex.admit_row(slot, req.prompt, float(t), req.rid, int(tmpl),
                           pf_start)
+        # admission fully reinitializes the row (the eager admit_row writes
+        # enqueue AFTER any in-flight step, so its trailing writes to this
+        # slot land first), making a still-staged retire of the previous
+        # occupant a stale no-op — it MUST be cancelled or the next
+        # dispatch would kill the fresh request
+        self.pending_retire[slot] = False
         self.slots[slot] = req
+        self._occ_cache = None
         self.slot_limit[slot] = p + req.max_new
         self.slot_tree[slot] = tmpl
         self.slot_steps[slot] = 0
@@ -366,35 +405,48 @@ class Scheduler:
         return admitted
 
     # ----------------------------------------------------------- stepping
-    def note_step(self, a: Optional[np.ndarray],
-                  rank: Optional[np.ndarray],
-                  rhist: Optional[np.ndarray], n_draft: int) -> None:
-        """Account one fused step: decode stats for decoding rows, cursor
-        advance + computed-block flags for prefilling rows, controller
-        updates and reshaping."""
-        live = self.live_decode_mask()               # decoding BEFORE step
-        n_live = int(live.sum())
+    def dispatch(self) -> StepHandle:
+        """Issue one fused step, non-blocking. The staged mutations from
+        every ``process`` since the last dispatch (retirements, template
+        re-selections — already mirrored in ``slot_tree``) are applied on
+        device AHEAD of the inner step; per-slot commit limits ride along
+        so a row that filled its budget in a still-unharvested step
+        freezes itself. All dispatch-deterministic accounting advances
+        immediately: the step counters, and the prefill cursor mirrors +
+        computed-block flags (the chunk schedule is a pure function of the
+        cursor, so admission decisions made while this step is in flight
+        see exact cursors)."""
+        occ = self.occupied_mask()
+        limits = np.where(occ, self.slot_limit, NO_LIMIT).astype(np.int64)
+        tree_sel = (self.slot_tree.astype(np.int32, copy=True)
+                    if self.bank is not None else None)
+        now = time.perf_counter()
+        if self._harvest_done_t is not None:
+            self.host_overhead_ms.append((now - self._harvest_done_t) * 1e3)
+            self._harvest_done_t = None
+        # greedy-specialization hint: retired slots' device temps are
+        # zeroed by THIS dispatch's staged mutations before the inner step
+        # runs, so occupied host mirrors are exactly the rows whose temp
+        # survives — when none samples, the executor picks the compiled
+        # variant with the sampled machinery removed (token-identical)
+        any_sampled = any(
+            s is not None
+            and (self.temperature if s.temperature is None
+                 else s.temperature) > 0
+            for s in self.slots)
+        handle = self.ex.dispatch(
+            retire=self.pending_retire, tree_sel=tree_sel, limits=limits,
+            any_prefilling=self.prefilling_count() > 0,
+            any_sampled=any_sampled)
+        handle.rids = np.asarray(
+            [-1 if s is None else s.rid for s in self.slots], np.int64)
+        self.pending_retire = np.zeros(self.max_batch, bool)
+
         self.stats["steps"] += 1
         self.stats["target_forwards"] += 1
-        self.stats["draft_forwards"] += n_draft
-        if a is not None:
-            self.stats["accepted"] += int(a.sum())
-            self.stats["live_steps"] += n_live
-            self.stats["committed"] += int(a.sum()) + n_live
-            if rhist is not None:
-                self.stats["round_hist"] = (
-                    rhist if self.stats["round_hist"] is None
-                    else self.stats["round_hist"] + rhist)
-        else:                                        # mode="ar"
-            self.stats["committed"] += n_live
-        if self.bank is not None:
-            np.add.at(self.stats["tree_hist"], self.slot_tree[live], 1)
-        self.slot_steps[live] += 1
-
+        self.stats["draft_forwards"] += handle.n_draft
         # advance the host prefill mirrors in lockstep with the device
-        for slot in range(self.max_batch):
-            if self.slots[slot] is None:
-                continue
+        for slot in np.nonzero(occ)[0]:
             pf, pfl = self.slot_pf[slot], self.slot_pf_len[slot]
             if pf < pfl:
                 cl = int(min(self.chunk, pfl - pf))
@@ -402,11 +454,56 @@ class Scheduler:
                 self.stats["prefill_chunks"] += 1
                 self.stats["prefill_tokens"] += cl
                 if self.paged and self.prefix_cache:
+                    # the blocks become readable once THIS step completes
+                    # on device — before any later-dispatched step could
+                    # read them through a prefix match (sequential stream)
                     self.alloc.mark_computed(slot, int(self.slot_pf[slot]))
+        return handle
 
-        if self.ctrl is not None and n_live:
-            self.ctrl.update(live, self.slot_tree, a, rank)
-            self._reshape_slots(live)
+    def process(self, handle: StepHandle) -> None:
+        """Harvest one in-flight step (ONE batched device transfer) and
+        fold its results in: stats + controller from the device-reported
+        live mask, then completions, with retirement staged for the next
+        dispatch boundary."""
+        res = self.ex.harvest(handle)
+        self._harvest_done_t = time.perf_counter()
+        self._note_results(handle, res)
+        self._harvest_completions(handle, res)
+
+    def _note_results(self, handle: StepHandle, res: StepResult) -> None:
+        """Result-dependent accounting. ``res.live`` is the mask of rows
+        the step actually committed for, computed ON DEVICE from the
+        post-mutation pre-step state — the host mirrors cannot stand in
+        for it here, because by harvest time they already reflect
+        decisions staged for the NEXT step (and a request completed at the
+        previous harvest may legitimately run one final in-flight step)."""
+        live = res.live
+        n_live = int(live.sum())
+        if res.a is not None:
+            self.stats["accepted"] += int(res.a.sum())
+            self.stats["live_steps"] += n_live
+            self.stats["committed"] += int(res.a.sum()) + n_live
+            if res.rhist is not None:
+                self.stats["round_hist"] = (
+                    res.rhist if self.stats["round_hist"] is None
+                    else self.stats["round_hist"] + res.rhist)
+        else:                                        # mode="ar"
+            self.stats["committed"] += n_live
+        if self.bank is not None:
+            # attribute to the templates the step was DISPATCHED with —
+            # slot_tree may hold re-selections staged after that
+            np.add.at(self.stats["tree_hist"], handle.tree_sel[live], 1)
+        # per-SLOT accounting (step cadence, controller EWMAs) only where
+        # the slot still holds the request this step was dispatched for —
+        # a re-admitted slot must not inherit the previous occupant's final
+        # in-flight step
+        cur = np.asarray([-1 if s is None else s.rid for s in self.slots],
+                         np.int64)
+        acct = live & (handle.rids == cur)
+        self.slot_steps[acct] += 1
+        if self.ctrl is not None and acct.any():
+            self.ctrl.update(acct, handle.tree_sel, res.a, res.rank)
+            self._reshape_slots(acct)
 
     def _reshape_slots(self, live_mask) -> None:
         """Between-windows template re-selection (the adaptive controller).
@@ -430,17 +527,37 @@ class Scheduler:
             need = len(req.prompt) + req.max_new + self.dec.row_slack(best)
             if self.paged and not self.alloc.grow(int(slot), need):
                 continue            # pool too tight: keep the old shape
+            # STAGED: the mirror update is picked up by the next dispatch's
+            # tree_sel (no eager device scatter); growing the block table
+            # above only ever widens a row, so a still-in-flight step using
+            # the old table + old template stays within its allocation
             self.slot_tree[slot] = best
-            self.ex.set_tree_idx(int(slot), int(best))
             self.stats["tree_switches"] += 1
 
     # ------------------------------------------------------------ harvest
-    def harvest(self) -> None:
-        n_host = self.ex.read_n()
+    def _harvest_completions(self, handle: StepHandle,
+                             res: StepResult) -> None:
+        """Detect finished requests from one harvested step's ``n``/``gen``
+        (already on host — no extra transfers) and build their
+        Completions. Retirement is STAGED (``pending_retire``), applied at
+        the next dispatch boundary; the completion's tokens come from THIS
+        step's snapshot, so anything a later in-flight step speculates for
+        the slot never reaches the output. Block release is immediate and
+        safe under the pipeline: an in-flight step's trailing writes for a
+        released row land at positions >= its prompt length — never inside
+        a prefix-cache-registered (prompt-covered) block — and complete on
+        the sequential device stream before any step dispatched after the
+        release could read the reused blocks."""
+        n_host, gen_host = res.n, res.gen
         now = time.perf_counter()
-        gen_host = None
         for slot, req in enumerate(self.slots):
             if req is None:
+                continue
+            if int(handle.rids[slot]) != req.rid:
+                # the slot was re-admitted while this step was in flight:
+                # the snapshot belongs to the PREVIOUS occupant (already
+                # completed) — attributing its n/gen to the new request
+                # would instantly "finish" it with someone else's tokens
                 continue
             p = len(req.prompt)
             # latency: tokens committed since the last tick
@@ -456,8 +573,6 @@ class Scheduler:
             limit = self.slot_limit[slot]
             end, hit_eos = None, False
             if self.eos_id is not None and n_host[slot] > p:
-                if gen_host is None:
-                    gen_host = self.ex.read_gen()
                 row = gen_host[slot, p:n_host[slot]].tolist()
                 if self.eos_id in row:
                     # truncate AT the EOS: tokens speculatively committed
@@ -466,8 +581,6 @@ class Scheduler:
                     end = min(p + row.index(self.eos_id) + 1, int(limit))
                     hit_eos = True
             if n_host[slot] >= limit or hit_eos:
-                if gen_host is None:
-                    gen_host = self.ex.read_gen()
                 if end is None:
                     end = int(min(n_host[slot], limit))
                 samples = self.slot_samples[slot]
@@ -484,9 +597,10 @@ class Scheduler:
                     tok_p50=_weighted_percentile(samples, 50),
                     tok_p95=_weighted_percentile(samples, 95)))
                 self.slots[slot] = None
+                self._occ_cache = None
                 self.slot_pf_len[slot] = 0
                 self.slot_pf[slot] = 0
-                self.ex.retire_row(slot)
+                self.pending_retire[slot] = True
                 if self.ctrl is not None:
                     self.ctrl.retire_slot(slot)
                 if self.paged:
@@ -507,7 +621,9 @@ class Scheduler:
         return self.stats["prefix_hit_blocks"] / lookups if lookups else 0.0
 
     def latency_summary(self) -> Dict[str, float]:
-        """Percentiles over harvested completions, in milliseconds."""
+        """Percentiles over harvested completions, in milliseconds, plus
+        the per-step host overhead (harvest-complete -> next dispatch) —
+        the serial host time the pipeline exists to hide."""
         comps = self.completions
 
         def pct(vals, q):
@@ -515,6 +631,7 @@ class Scheduler:
 
         ttfts = [c.ttft for c in comps]
         waits = [c.queue_wait for c in comps]
+        ovh = self.host_overhead_ms
         return dict(
             requests=len(comps),
             queue_wait_p50_ms=pct(waits, 50),
@@ -524,4 +641,8 @@ class Scheduler:
                 [(c.tok_p50, max(1, c.generated)) for c in comps], 50) * 1e3,
             tok_p95_ms=_weighted_percentile(
                 [(c.tok_p95, max(1, c.generated)) for c in comps], 95) * 1e3,
+            host_overhead_p50_ms=(float(np.percentile(ovh, 50))
+                                  if ovh else 0.0),
+            host_overhead_p95_ms=(float(np.percentile(ovh, 95))
+                                  if ovh else 0.0),
         )

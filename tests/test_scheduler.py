@@ -203,13 +203,13 @@ def test_prefill_budget_caps_concurrent_lanes(models):
                  prefill_budget=5)               # chunk=K+1=5 -> 1 lane
     assert eng.sched.prefill_lanes == 1
     seen = []
-    orig = eng.ex.step
+    orig = eng.ex.dispatch
 
-    def spy(*args):
+    def spy(*args, **kw):
         seen.append(eng.sched.prefilling_count())
-        return orig(*args)
+        return orig(*args, **kw)
 
-    eng.ex.step = spy
+    eng.ex.dispatch = spy
     for p in prompts:
         eng.submit(p, 8)
     comps = eng.run()
@@ -218,13 +218,13 @@ def test_prefill_budget_caps_concurrent_lanes(models):
     # control: without a budget the same workload overlaps prefills
     eng2 = Engine(tp, tc, dp, dc, mode="pard", k=4, max_batch=4, max_len=256)
     seen2 = []
-    orig2 = eng2.ex.step
+    orig2 = eng2.ex.dispatch
 
-    def spy2(*args):
+    def spy2(*args, **kw):
         seen2.append(eng2.sched.prefilling_count())
-        return orig2(*args)
+        return orig2(*args, **kw)
 
-    eng2.ex.step = spy2
+    eng2.ex.dispatch = spy2
     for p in prompts:
         eng2.submit(p, 8)
     eng2.run()
