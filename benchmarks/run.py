@@ -29,7 +29,9 @@ wrote ("tree"/"tree_sampled"/...) stays at or above the floor — for
 instead (TTFT must have been recorded), and for ``--pipelined`` it
 applies to the tree-pipelined / flat-synchronous tokens/sec ratio
 (normally 1.0: the ROADMAP gate that tree WINS throughput once host
-overhead is hidden).
+overhead is hidden), and for ``--kv-quant`` it applies to the int8
+pool-byte reduction vs fp32 (normally 2.0) with a fixed secondary
+0.95x fp32 tokens/sec floor ("kv_quant" section, quant-gate job).
 
 The roofline/dry-run numbers (deliverable e/g) are produced separately by
 ``python -m repro.launch.dryrun --all --both-meshes`` and summarised with
@@ -39,6 +41,11 @@ import argparse
 import json
 import sys
 import time
+
+
+# the secondary kv_quant gate ratio: int8 tokens/sec must stay within 5%
+# of fp32 (the primary --smoke-floor applies to the byte-reduction ratio)
+KV_QUANT_TPS_FLOOR = 0.95
 
 
 def check_floor(floor: float, section: str = "tree") -> int:
@@ -56,7 +63,8 @@ def check_floor(floor: float, section: str = "tree") -> int:
         flag = {"tree": "--tree", "tree_sampled": "--tree --temperature 0.8",
                 "tree_adaptive": "--adaptive-tree",
                 "serve_sched": "--scenario sched",
-                "serve_pipelined": "--pipelined"}.get(section, "--tree")
+                "serve_pipelined": "--pipelined",
+                "kv_quant": "--kv-quant"}.get(section, "--tree")
         print(f"smoke-floor: no '{section}' section in {common.BENCH_SERVE}"
               f" — run with {flag}", file=sys.stderr)
         return 2
@@ -83,6 +91,32 @@ def check_floor(floor: float, section: str = "tree") -> int:
                   f"token_identical_to_sync="
                   f"{entry.get('token_identical_to_sync')} "
                   f"{'ok' if ok else 'MISSING/FAIL'}", file=sys.stderr)
+        return 1 if failed else 0
+    if section == "kv_quant":
+        # the quantized-KV acceptance gate: int8 paged serving must record
+        # >= floor x byte reduction vs fp32 (scales included) AND hold
+        # >= KV_QUANT_TPS_FLOOR x the fp32 tokens/sec (dequant-in-kernel
+        # must not eat the win); every dtype must have recorded a tok/s
+        gate = tree.get("gate", {})
+        ratio = gate.get("int8_byte_reduction_vs_fp32")
+        ok = ratio is not None and ratio >= floor
+        failed |= not ok
+        print(f"smoke-floor: kv_quant int8 byte reduction vs fp32="
+              f"{ratio if ratio is None else f'{ratio:.3f}'}x "
+              f"{'>=' if ok else '< FAIL'} {floor}", file=sys.stderr)
+        tps = gate.get("int8_vs_fp32_tps")
+        ok = tps is not None and tps >= KV_QUANT_TPS_FLOOR
+        failed |= not ok
+        print(f"smoke-floor: kv_quant int8/fp32 tok/s="
+              f"{tps if tps is None else f'{tps:.3f}'} "
+              f"{'>=' if ok else '< FAIL'} {KV_QUANT_TPS_FLOOR}",
+              file=sys.stderr)
+        for name in ("fp32", "int8", "fp8"):
+            ok = tree.get(name, {}).get("tokens_per_sec") is not None
+            failed |= not ok
+            print(f"smoke-floor: kv_quant.{name} tokens_per_sec="
+                  f"{tree.get(name, {}).get('tokens_per_sec')} "
+                  f"{'recorded' if ok else 'MISSING'}", file=sys.stderr)
         return 1 if failed else 0
     if section == "serve_sched":
         hit = tree.get("cached", {}).get("prefix_hit_rate")
@@ -121,9 +155,16 @@ def main() -> None:
                          "(serve_adaptive; records the 'tree_adaptive' "
                          "BENCH_serve section and asserts the controller "
                          "matches the static (2,2,2,1) baseline)")
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="run the quantized-KV serve benchmark "
+                         "(serve_kv_quant: fp32 vs int8 vs fp8 paged "
+                         "caches, records the 'kv_quant' BENCH_serve "
+                         "section; with --smoke-floor F the CI gate "
+                         "requires the int8 byte reduction >= F and "
+                         "int8 tok/s >= 0.95x fp32)")
     ap.add_argument("--scenario", default=None,
                     choices=["sched", "serve", "tree", "adaptive",
-                             "pipelined"],
+                             "pipelined", "kv-quant"],
                     help="named serving scenario: 'sched' runs the "
                          "scheduler/prefix-cache benchmark (serve_sched, "
                          "records the 'serve_sched' BENCH_serve section); "
@@ -162,9 +203,10 @@ def main() -> None:
 
     scenario_table = {"sched": "serve_sched", "serve": "serve",
                       "tree": "serve_tree", "adaptive": "serve_adaptive",
-                      "pipelined": "serve_pipelined"}
+                      "pipelined": "serve_pipelined",
+                      "kv-quant": "serve_kv_quant"}
     scoped = args.tree or args.adaptive_tree or args.pipelined \
-        or args.scenario
+        or args.kv_quant or args.scenario
     names = args.only.split(",") if args.only else \
         ([] if scoped else list(tables.ALL))
     if args.tree and "serve_tree" not in names:
@@ -173,6 +215,8 @@ def main() -> None:
         names.append("serve_adaptive")
     if args.pipelined and "serve_pipelined" not in names:
         names.append("serve_pipelined")
+    if args.kv_quant and "serve_kv_quant" not in names:
+        names.append("serve_kv_quant")
     if args.scenario and scenario_table[args.scenario] not in names:
         names.append(scenario_table[args.scenario])
     t0 = time.time()
@@ -199,6 +243,8 @@ def main() -> None:
             section = "serve_sched"
         elif args.pipelined or args.scenario == "pipelined":
             section = "serve_pipelined"
+        elif args.kv_quant or args.scenario == "kv-quant":
+            section = "kv_quant"
         elif args.adaptive_tree:
             section = "tree_adaptive"
         else:

@@ -17,11 +17,13 @@ import json
 import sys
 
 # the sections the bench-smoke job re-measures in CI (see ci.yml);
-# serve_sched entries additionally carry TTFT/latency fields and
-# serve_pipelined ones steps/sec + host-overhead percentiles, but only
-# tokens/sec is tabulated here (absence-tolerant like the others)
+# serve_sched entries additionally carry TTFT/latency fields,
+# serve_pipelined ones steps/sec + host-overhead percentiles, and
+# kv_quant ones pool capacity bytes + the gate ratios, but only
+# tokens/sec is tabulated here (absence-tolerant like the others: a
+# previous artifact written before a section existed shows "new")
 CI_SECTIONS = ("tree", "tree_sampled", "tree_adaptive", "serve_sched",
-               "serve_pipelined")
+               "serve_pipelined", "kv_quant")
 
 
 def load(path):

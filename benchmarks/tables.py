@@ -662,8 +662,85 @@ def serve_pipelined() -> List:
     return rows
 
 
+def serve_kv_quant() -> List:
+    """Quantized paged KV (DESIGN.md §10): the same ragged PARD workload
+    through the paged engine under the fp32 reference cache and the int8 /
+    fp8 quantized caches (per-(position, head) scales stored beside the
+    pool, dequantized inside the streaming kernels). Records tokens/sec,
+    pool capacity bytes (scales included — the ratio is the honest one) and
+    mean accepted length per dtype under BENCH_serve.json's "kv_quant"
+    section, plus a ``gate`` entry with the two CI ratios:
+
+      * ``int8_byte_reduction_vs_fp32`` — pool bytes fp32/int8, floored at
+        2.0 by ``benchmarks.run --kv-quant --smoke-floor 2.0`` (the
+        acceptance criterion; measured ~3.5x: 4-byte values -> 1-byte
+        values + one f32 scale per 128-value (block, head) row);
+      * ``int8_vs_fp32_tps`` — int8/fp32 tokens/sec, floored at 0.95 (the
+        dequant-in-kernel overhead must not eat the win).
+
+    Greedy int8 decoding is self-consistent (spec == AR within the dtype,
+    asserted by tests/test_kv_quant.py); here the benchmark additionally
+    asserts the int8 run commits full-length completions for every
+    request, so a quantization bug that stalls acceptance cannot record a
+    plausible-looking tok/s."""
+    tp, tc = load_model("tiny-target")
+    dp, dc = load_model("tiny-draft")
+    rng = np.random.default_rng(0)
+    reqs = [np.asarray(common.corpus().prompts(rng, 1, int(n_tok))[0])
+            for n_tok in rng.integers(8, 24, size=6)]
+    max_len, max_new, reps = 512, 48, 3
+
+    rows, record = [], {}
+    for dtype in ("fp32", "int8", "fp8"):
+        eng = Engine(tp, tc, dp, dc, mode="pard", k=4, max_batch=2,
+                     max_len=max_len, kv_layout="paged", kv_block_size=64,
+                     kv_dtype=dtype)
+        for r in reqs:                          # warm pass: compile steps
+            eng.submit(r, max_new)
+        eng.run()
+        eng.peak_kv_bytes_in_use = eng.kv_bytes_in_use()
+        # median-of-reps timing: the >= 0.95 tok/s ratio gate compares
+        # near-equal configs, too tight for single passes on a busy CI box
+        tps_reps, comps = [], []
+        for _ in range(reps):
+            eng.stats.update(accepted=0, live_steps=0)
+            for r in reqs:
+                eng.submit(r, max_new)
+            t0 = time.perf_counter()
+            comps = eng.run()
+            wall = time.perf_counter() - t0
+            tps_reps.append(
+                sum(c.generated for c in comps[-len(reqs):]) / wall)
+        tps = float(np.median(tps_reps))
+        cap = eng.kv_capacity_bytes()
+        peak = eng.peak_kv_bytes_in_use
+        acc = eng.mean_accepted()
+        assert all(c.generated == max_new for c in comps[-len(reqs):]), \
+            f"{dtype}: short completions — acceptance stalled"
+        rows.append((f"serve_kv_quant.{dtype}", 1e6 / tps,
+                     f"tps={tps:.1f};kv_capacity_mb={cap / 1e6:.2f};"
+                     f"kv_peak_mb={peak / 1e6:.2f};mean_acc={acc:.2f}"))
+        record[dtype] = dict(
+            tokens_per_sec=round(tps, 2), kv_capacity_bytes=cap,
+            kv_peak_bytes_in_use=peak, mean_accepted=round(acc, 4))
+    record["gate"] = dict(
+        int8_byte_reduction_vs_fp32=round(
+            record["fp32"]["kv_capacity_bytes"]
+            / record["int8"]["kv_capacity_bytes"], 4),
+        fp8_byte_reduction_vs_fp32=round(
+            record["fp32"]["kv_capacity_bytes"]
+            / record["fp8"]["kv_capacity_bytes"], 4),
+        int8_vs_fp32_tps=round(
+            record["int8"]["tokens_per_sec"]
+            / record["fp32"]["tokens_per_sec"], 4))
+    common.update_bench_serve("kv_quant", record)
+    emit(rows, "serve_kv_quant", persist=False)
+    return rows
+
+
 ALL = {"table1": table1, "table2": table2, "table3": table3,
        "table4": table4, "table5": table5, "table6": table6,
        "fig6a": fig6a, "fig6b": fig6b, "serve": serve,
        "serve_tree": serve_tree, "serve_adaptive": serve_adaptive,
-       "serve_sched": serve_sched, "serve_pipelined": serve_pipelined}
+       "serve_sched": serve_sched, "serve_pipelined": serve_pipelined,
+       "serve_kv_quant": serve_kv_quant}

@@ -57,7 +57,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import forward, init_caches
-from ..models.attention import TreeAttnInfo, paged_flat_index
+from ..models.attention import (TreeAttnInfo, paged_flat_index,
+                                resolve_kv_dtype)
 from ..models.config import (ATTN_GLOBAL, ATTN_LOCAL, ATTN_MLA, SSM,
                              ModelConfig, scan_plan)
 from . import acceptance
@@ -528,7 +529,7 @@ class SpecDecoder:
                  k: int = 8, max_len: int = 2048, temperature: float = 0.0,
                  enc_out=None, draft_enc_out=None, kv_block_size: int = 0,
                  tree: Optional[TreeTemplate] = None,
-                 prefill_chunk: int = 8):
+                 prefill_chunk: int = 8, kv_dtype: str = "bf16"):
         self.tp, self.tc = target_params, target_cfg
         self.dp, self.dc = draft_params, draft_cfg
         if tree is not None:
@@ -560,6 +561,10 @@ class SpecDecoder:
         # and tree chunk widths are bounded by the draft/verify windows —
         # see chunk_width)
         self.prefill_chunk = prefill_chunk
+        # KV cache storage dtype ("bf16"/"fp32"/"int8"/"fp8"); quantized
+        # dtypes add *_scale cache leaves and change step pytree structure,
+        # so it participates in the jit-cache key (_fn)
+        self.kv_dtype = kv_dtype
         if draft_cfg is not None:
             assert draft_cfg.vocab_size == target_cfg.vocab_size, \
                 "speculative decoding requires a shared tokenizer/vocab"
@@ -613,6 +618,7 @@ class SpecDecoder:
 
     # -- jitted primitives ------------------------------------------------
     def _fn(self, name, builder, donate=()):
+        name = f"{name}@{self.kv_dtype}"
         if name not in self._jit_cache:
             self._jit_cache[name] = jax.jit(builder, donate_argnums=donate)
         return self._jit_cache[name]
@@ -690,8 +696,10 @@ class SpecDecoder:
         return DecodeState(
             gen=gen, n=jnp.full((b,), p, jnp.int32),
             m=jnp.full((b,), p - 1, jnp.int32), done=jnp.zeros((b,), bool),
-            tcache=init_caches(self.tc, b, self.max_len),
-            dcache=(init_caches(self.dc, b, self.max_len)
+            tcache=init_caches(self.tc, b, self.max_len,
+                               dtype=resolve_kv_dtype(self.kv_dtype)),
+            dcache=(init_caches(self.dc, b, self.max_len,
+                                dtype=resolve_kv_dtype(self.kv_dtype))
                     if with_draft and self.dc is not None else None),
             temp=jnp.full((b,), self.temperature, jnp.float32),
             rngs=acceptance.make_row_keys(seed, np.arange(b)),

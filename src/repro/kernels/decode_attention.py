@@ -49,8 +49,15 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _kernel(qpos_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s,
-            *, scale, window, softcap, block_k, tq, g):
+def _kernel(qpos_ref, kvlen_ref, q_ref, k_ref, v_ref, *rest, scale, window,
+            softcap, block_k, tq, g, quant=False):
+    if quant:
+        # quantized KV stream (DESIGN.md §10): per-(slot, head) float32
+        # scales ride in two extra refs right after k/v
+        ks_ref, vs_ref, o_ref, m_s, l_s, acc_s = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_s, l_s, acc_s = rest
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -70,6 +77,11 @@ def _kernel(qpos_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s,
         q2 = q.reshape(tq * g, d)
         k = k_ref[0, :, 0, :].astype(jnp.float32)      # [bk, d]
         v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quant:
+            # dequant fused into the sweep: the block expands against its
+            # scales right after the DMA, still inside VMEM
+            k = k * ks_ref[0, :, 0][:, None]
+            v = v * vs_ref[0, :, 0][:, None]
         s = jnp.dot(q2, k.T, preferred_element_type=jnp.float32) * scale
         if softcap:
             s = jnp.tanh(s / softcap) * softcap
@@ -100,13 +112,17 @@ def _kernel(qpos_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s,
             tq, g * acc_s.shape[-1]).astype(o_ref.dtype)
 
 
-def decode_attention(q, k, v, kv_len, q_pos, *, window=0, softcap=0.0,
-                     scale=None, block_k=256, interpret=False):
+def decode_attention(q, k, v, kv_len, q_pos, *, k_scale=None, v_scale=None,
+                     window=0, softcap=0.0, scale=None, block_k=256,
+                     interpret=False):
     """q: [B, Tq, Hq, D] (Tq small); k, v: [B, S, Hkv, D];
-    kv_len: [B] int32 valid cache entries; q_pos: [B, Tq] absolute."""
+    kv_len: [B] int32 valid cache entries; q_pos: [B, Tq] absolute.
+    k_scale/v_scale: optional [B, S, Hkv] float32 dequant scales for
+    quantized k/v (int8 / fp8); dequant is fused into the stream."""
     b, tq, hq, d = q.shape
     s_len, hkv = k.shape[1], k.shape[2]
     g = hq // hkv
+    quant = k_scale is not None
     if scale is None:
         scale = 1.0 / (d ** 0.5)
 
@@ -115,21 +131,30 @@ def decode_attention(q, k, v, kv_len, q_pos, *, window=0, softcap=0.0,
     grid = (b, hkv, pl.cdiv(s_len, block_k))
 
     kern = functools.partial(_kernel, scale=scale, window=window,
-                             softcap=softcap, block_k=block_k, tq=tq, g=g)
+                             softcap=softcap, block_k=block_k, tq=tq, g=g,
+                             quant=quant)
+
+    in_specs = [
+        pl.BlockSpec((1, tq), lambda bi, h, ki: (bi, 0)),       # q_pos
+        pl.BlockSpec((1,), lambda bi, h, ki: (bi,)),            # kv_len
+        pl.BlockSpec((1, tq, 1, g, d),
+                     lambda bi, h, ki: (bi, 0, h, 0, 0)),       # q
+        pl.BlockSpec((1, block_k, 1, d),
+                     lambda bi, h, ki: (bi, ki, h, 0)),         # k
+        pl.BlockSpec((1, block_k, 1, d),
+                     lambda bi, h, ki: (bi, ki, h, 0)),         # v
+    ]
+    args = [q_pos.astype(jnp.int32), kv_len.astype(jnp.int32), qg, k, v]
+    if quant:
+        for _ in range(2):                                      # k/v scales
+            in_specs.append(pl.BlockSpec((1, block_k, 1),
+                                         lambda bi, h, ki: (bi, ki, h)))
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
 
     out = pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, tq), lambda bi, h, ki: (bi, 0)),       # q_pos
-            pl.BlockSpec((1,), lambda bi, h, ki: (bi,)),            # kv_len
-            pl.BlockSpec((1, tq, 1, g, d),
-                         lambda bi, h, ki: (bi, 0, h, 0, 0)),       # q
-            pl.BlockSpec((1, block_k, 1, d),
-                         lambda bi, h, ki: (bi, ki, h, 0)),         # k
-            pl.BlockSpec((1, block_k, 1, d),
-                         lambda bi, h, ki: (bi, ki, h, 0)),         # v
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, tq, 1, g * d),
                                lambda bi, h, ki: (bi, 0, h, 0)),
         out_shape=jax.ShapeDtypeStruct((b, tq, hkv, g * d), q.dtype),
@@ -139,51 +164,64 @@ def decode_attention(q, k, v, kv_len, q_pos, *, window=0, softcap=0.0,
             pltpu.VMEM((tq * g, d), jnp.float32),
         ],
         interpret=interpret,
-    )(q_pos.astype(jnp.int32), kv_len.astype(jnp.int32), qg, k, v)
+    )(*args)
     return out.reshape(b, tq, hq, d)
 
 
-def _paged_kernel(bt_ref, qpos_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_s, l_s, acc_s, **kw):
+def _paged_kernel(bt_ref, qpos_ref, kvlen_ref, q_ref, k_ref, v_ref, *rest,
+                  **kw):
     # bt_ref (the scalar-prefetched block table) is consumed only by the
     # BlockSpec index_maps; the compute body is the contiguous kernel's.
-    _kernel(qpos_ref, kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s,
-            **kw)
+    _kernel(qpos_ref, kvlen_ref, q_ref, k_ref, v_ref, *rest, **kw)
 
 
 def decode_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
-                           *, window=0, softcap=0.0, scale=None,
-                           interpret=False):
+                           *, k_scale=None, v_scale=None, window=0,
+                           softcap=0.0, scale=None, interpret=False):
     """Paged-pool decode/verify attention.
 
     q: [B, Tq, Hq, D]; k_pages, v_pages: [NB, block, Hkv, D] shared pools;
     block_tables: [B, MBS] int32 (block 0 = reserved garbage block);
     kv_len: [B] int32 valid entries; q_pos: [B, Tq] absolute positions.
+    k_scale/v_scale: optional [NB, block, Hkv] float32 per-slot dequant
+    scales when the pools are quantized (int8 / fp8); the scale blocks
+    ride the same table indirection as their pages.
     """
     b, tq, hq, d = q.shape
     block, hkv = k_pages.shape[1], k_pages.shape[2]
     mbs = block_tables.shape[1]
     g = hq // hkv
+    quant = k_scale is not None
     if scale is None:
         scale = 1.0 / (d ** 0.5)
 
     qg = q.reshape(b, tq, hkv, g, d)
     kern = functools.partial(_paged_kernel, scale=scale, window=window,
-                             softcap=softcap, block_k=block, tq=tq, g=g)
+                             softcap=softcap, block_k=block, tq=tq, g=g,
+                             quant=quant)
+
+    in_specs = [
+        pl.BlockSpec((1, tq), lambda bi, h, ki, bt: (bi, 0)),   # q_pos
+        pl.BlockSpec((1,), lambda bi, h, ki, bt: (bi,)),        # kv_len
+        pl.BlockSpec((1, tq, 1, g, d),
+                     lambda bi, h, ki, bt: (bi, 0, h, 0, 0)),   # q
+        pl.BlockSpec((1, block, 1, d),
+                     lambda bi, h, ki, bt: (bt[bi, ki], 0, h, 0)),  # k
+        pl.BlockSpec((1, block, 1, d),
+                     lambda bi, h, ki, bt: (bt[bi, ki], 0, h, 0)),  # v
+    ]
+    args = [block_tables.astype(jnp.int32), q_pos.astype(jnp.int32),
+            kv_len.astype(jnp.int32), qg, k_pages, v_pages]
+    if quant:
+        for _ in range(2):                                      # k/v scales
+            in_specs.append(pl.BlockSpec(
+                (1, block, 1), lambda bi, h, ki, bt: (bt[bi, ki], 0, h)))
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, hkv, mbs),
-        in_specs=[
-            pl.BlockSpec((1, tq), lambda bi, h, ki, bt: (bi, 0)),   # q_pos
-            pl.BlockSpec((1,), lambda bi, h, ki, bt: (bi,)),        # kv_len
-            pl.BlockSpec((1, tq, 1, g, d),
-                         lambda bi, h, ki, bt: (bi, 0, h, 0, 0)),   # q
-            pl.BlockSpec((1, block, 1, d),
-                         lambda bi, h, ki, bt: (bt[bi, ki], 0, h, 0)),  # k
-            pl.BlockSpec((1, block, 1, d),
-                         lambda bi, h, ki, bt: (bt[bi, ki], 0, h, 0)),  # v
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, tq, 1, g * d),
                                lambda bi, h, ki, bt: (bi, 0, h, 0)),
         scratch_shapes=[
@@ -197,6 +235,5 @@ def decode_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, tq, hkv, g * d), q.dtype),
         interpret=interpret,
-    )(block_tables.astype(jnp.int32), q_pos.astype(jnp.int32),
-      kv_len.astype(jnp.int32), qg, k_pages, v_pages)
+    )(*args)
     return out.reshape(b, tq, hq, d)

@@ -57,8 +57,9 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
 
 @functools.partial(jax.jit, static_argnames=(
     "window", "softcap", "scale", "block_k", "interpret"))
-def decode_attention(q, k, v, kv_len, q_pos, *, window=0, softcap=0.0,
-                     scale=None, block_k=256, interpret=None):
+def decode_attention(q, k, v, kv_len, q_pos, *, k_scale=None, v_scale=None,
+                     window=0, softcap=0.0, scale=None, block_k=256,
+                     interpret=None):
     interpret = _interpret(interpret)
     b, tq, hq, d = q.shape
     block_k = min(block_k, max(8, 1 << (k.shape[1] - 1).bit_length()))
@@ -66,7 +67,11 @@ def decode_attention(q, k, v, kv_len, q_pos, *, window=0, softcap=0.0,
         scale = 1.0 / (d ** 0.5)
     k, _ = _pad_axis(k, 1, block_k)
     v, _ = _pad_axis(v, 1, block_k)
-    return _dec.decode_attention(q, k, v, kv_len, q_pos, window=window,
+    if k_scale is not None:
+        k_scale, _ = _pad_axis(k_scale, 1, block_k)
+        v_scale, _ = _pad_axis(v_scale, 1, block_k)
+    return _dec.decode_attention(q, k, v, kv_len, q_pos, k_scale=k_scale,
+                                 v_scale=v_scale, window=window,
                                  softcap=softcap, scale=scale,
                                  block_k=block_k, interpret=interpret)
 
@@ -74,17 +79,20 @@ def decode_attention(q, k, v, kv_len, q_pos, *, window=0, softcap=0.0,
 @functools.partial(jax.jit, static_argnames=(
     "window", "softcap", "scale", "interpret"))
 def decode_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
-                           *, window=0, softcap=0.0, scale=None,
-                           interpret=None):
+                           *, k_scale=None, v_scale=None, window=0,
+                           softcap=0.0, scale=None, interpret=None):
     """Paged-pool variant: k/v are [NB, block, Hkv, D] pools indirected by
     ``block_tables`` [B, MBS]. The pool's block size IS the kernel's kv
-    block, so no padding is needed — the grid sweeps the table entries."""
+    block, so no padding is needed — the grid sweeps the table entries.
+    k_scale/v_scale: optional [NB, block, Hkv] dequant scales for
+    quantized pools."""
     interpret = _interpret(interpret)
     d = q.shape[-1]
     if scale is None:
         scale = 1.0 / (d ** 0.5)
     return _dec.decode_attention_paged(q, k_pages, v_pages, block_tables,
-                                       kv_len, q_pos, window=window,
+                                       kv_len, q_pos, k_scale=k_scale,
+                                       v_scale=v_scale, window=window,
                                        softcap=softcap, scale=scale,
                                        interpret=interpret)
 
@@ -92,13 +100,14 @@ def decode_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
 @functools.partial(jax.jit, static_argnames=(
     "window", "softcap", "scale", "block_k", "interpret"))
 def tree_attention(q, k, v, kv_len, q_pos, win_start, anc, *, win_len=None,
-                   window=0, softcap=0.0, scale=None, block_k=256,
-                   interpret=None):
+                   k_scale=None, v_scale=None, window=0, softcap=0.0,
+                   scale=None, block_k=256, interpret=None):
     """Tree-verification attention against a contiguous cache. ``anc`` is
     the [B, Tq] uint32 packed ancestor bitmask (bit j = window slot j
     visible); ``win_start`` the cache index of window slot 0; ``win_len``
     the optional [B] per-row count of meaningful window slots (per-request
-    tree templates — None means all Tq slots)."""
+    tree templates — None means all Tq slots); k_scale/v_scale: optional
+    [B, S, Hkv] dequant scales for quantized k/v."""
     interpret = _interpret(interpret)
     d = q.shape[-1]
     block_k = min(block_k, max(8, 1 << (k.shape[1] - 1).bit_length()))
@@ -106,8 +115,12 @@ def tree_attention(q, k, v, kv_len, q_pos, win_start, anc, *, win_len=None,
         scale = 1.0 / (d ** 0.5)
     k, _ = _pad_axis(k, 1, block_k)
     v, _ = _pad_axis(v, 1, block_k)
+    if k_scale is not None:
+        k_scale, _ = _pad_axis(k_scale, 1, block_k)
+        v_scale, _ = _pad_axis(v_scale, 1, block_k)
     return _tree.tree_attention(q, k, v, kv_len, q_pos, win_start, anc,
-                                win_len=win_len, window=window,
+                                win_len=win_len, k_scale=k_scale,
+                                v_scale=v_scale, window=window,
                                 softcap=softcap, scale=scale,
                                 block_k=block_k, interpret=interpret)
 
@@ -115,19 +128,23 @@ def tree_attention(q, k, v, kv_len, q_pos, win_start, anc, *, win_len=None,
 @functools.partial(jax.jit, static_argnames=(
     "window", "softcap", "scale", "interpret"))
 def tree_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
-                         win_start, anc, *, win_len=None, window=0,
-                         softcap=0.0, scale=None, interpret=None):
+                         win_start, anc, *, win_len=None, k_scale=None,
+                         v_scale=None, window=0, softcap=0.0, scale=None,
+                         interpret=None):
     """Paged-pool tree verification: k/v are [NB, block, Hkv, D] pools
     indirected by ``block_tables`` [B, MBS]; the pool's block size IS the
     kernel's kv block (no padding), exactly like decode_attention_paged.
-    ``win_len``: optional [B] per-row meaningful window slots."""
+    ``win_len``: optional [B] per-row meaningful window slots;
+    k_scale/v_scale: optional [NB, block, Hkv] dequant scales for
+    quantized pools."""
     interpret = _interpret(interpret)
     d = q.shape[-1]
     if scale is None:
         scale = 1.0 / (d ** 0.5)
     return _tree.tree_attention_paged(q, k_pages, v_pages, block_tables,
                                       kv_len, q_pos, win_start, anc,
-                                      win_len=win_len, window=window,
+                                      win_len=win_len, k_scale=k_scale,
+                                      v_scale=v_scale, window=window,
                                       softcap=softcap, scale=scale,
                                       interpret=interpret)
 

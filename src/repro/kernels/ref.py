@@ -10,8 +10,16 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from ..models.attention import (PardMaskInfo, TreeAttnInfo, attend,
-                                gather_pages)
+                                dequantize_kv, gather_pages)
 from ..models.ssm import ssd_scan_ref
+
+
+def _maybe_dequant(k, v, k_scale, v_scale):
+    """fp32 semantics for quantized KV: expand against the scales up front
+    so the oracle computes on exactly the values the kernel dequantizes."""
+    if k_scale is None:
+        return k, v
+    return dequantize_kv(k, k_scale), dequantize_kv(v, v_scale)
 
 
 def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
@@ -25,12 +33,14 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0,
                   attn_softcap=softcap, scale=scale)
 
 
-def decode_attention_ref(q, k, v, kv_len, q_pos, *, window=0, softcap=0.0,
-                         scale=None):
+def decode_attention_ref(q, k, v, kv_len, q_pos, *, k_scale=None,
+                         v_scale=None, window=0, softcap=0.0, scale=None):
     """Speculative-verify attention: small q against a long KV cache.
 
     q: [B,Tq,Hq,D]; k,v: [B,S,Hkv,D]; kv_len: [B]; q_pos: [B,Tq] absolute.
+    k_scale/v_scale: optional [B,S,Hkv] dequant scales for quantized k/v.
     """
+    k, v = _maybe_dequant(k, v, k_scale, v_scale)
     b = q.shape[0]
     s = k.shape[1]
     kv_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
@@ -39,21 +49,28 @@ def decode_attention_ref(q, k, v, kv_len, q_pos, *, window=0, softcap=0.0,
 
 
 def decode_attention_paged_ref(q, k_pages, v_pages, block_tables, kv_len,
-                               q_pos, *, window=0, softcap=0.0, scale=None):
+                               q_pos, *, k_scale=None, v_scale=None,
+                               window=0, softcap=0.0, scale=None):
     """Paged-pool oracle: gather each row's blocks into a contiguous view
     (models.attention.gather_pages) and defer to the contiguous reference.
 
     q: [B,Tq,Hq,D]; k_pages, v_pages: [NB, block, Hkv, D];
     block_tables: [B, MBS]; kv_len: [B]; q_pos: [B,Tq] absolute.
+    k_scale/v_scale: optional [NB, block, Hkv] per-slot dequant scales.
     """
     k = gather_pages(k_pages, block_tables)
     v = gather_pages(v_pages, block_tables)
-    return decode_attention_ref(q, k, v, kv_len, q_pos, window=window,
+    if k_scale is not None:
+        k_scale = gather_pages(k_scale, block_tables)
+        v_scale = gather_pages(v_scale, block_tables)
+    return decode_attention_ref(q, k, v, kv_len, q_pos, k_scale=k_scale,
+                                v_scale=v_scale, window=window,
                                 softcap=softcap, scale=scale)
 
 
 def tree_attention_ref(q, k, v, kv_len, q_pos, win_start, anc, *,
-                       win_len=None, window=0, softcap=0.0, scale=None):
+                       win_len=None, k_scale=None, v_scale=None, window=0,
+                       softcap=0.0, scale=None):
     """Tree-verification attention: the packed candidate tree window against
     a long cache (DESIGN.md §6). Masking comes from models.attention's
     TreeAttnInfo (packed ancestor bitmask inside the window, plain context
@@ -63,8 +80,10 @@ def tree_attention_ref(q, k, v, kv_len, q_pos, win_start, anc, *,
     q: [B,Tq,Hq,D]; k,v: [B,S,Hkv,D]; kv_len: [B]; q_pos: [B,Tq] logical
     positions; win_start: [B] cache index of window slot 0; anc: [B,Tq]
     uint32 ancestor bitmasks; win_len: optional [B] per-row count of
-    meaningful window slots (per-request tree templates, DESIGN.md §7).
+    meaningful window slots (per-request tree templates, DESIGN.md §7);
+    k_scale/v_scale: optional [B,S,Hkv] dequant scales for quantized k/v.
     """
+    k, v = _maybe_dequant(k, v, k_scale, v_scale)
     b = q.shape[0]
     s = k.shape[1]
     kv_pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
@@ -82,13 +101,18 @@ def tree_attention_ref(q, k, v, kv_len, q_pos, win_start, anc, *,
 
 def tree_attention_paged_ref(q, k_pages, v_pages, block_tables, kv_len,
                              q_pos, win_start, anc, *, win_len=None,
-                             window=0, softcap=0.0, scale=None):
+                             k_scale=None, v_scale=None, window=0,
+                             softcap=0.0, scale=None):
     """Paged-pool tree-verification oracle: gather each row's blocks into a
     contiguous view and defer to the contiguous reference."""
     k = gather_pages(k_pages, block_tables)
     v = gather_pages(v_pages, block_tables)
+    if k_scale is not None:
+        k_scale = gather_pages(k_scale, block_tables)
+        v_scale = gather_pages(v_scale, block_tables)
     return tree_attention_ref(q, k, v, kv_len, q_pos, win_start, anc,
-                              win_len=win_len, window=window,
+                              win_len=win_len, k_scale=k_scale,
+                              v_scale=v_scale, window=window,
                               softcap=softcap, scale=scale)
 
 

@@ -45,8 +45,15 @@ NEG_INF = -1e30
 
 
 def _kernel(qpos_ref, kvlen_ref, winstart_ref, winlen_ref, anc_ref, q_ref,
-            k_ref, v_ref, o_ref, m_s, l_s, acc_s, qp_s, anc_s, *, scale,
-            window, softcap, block_k, tq, g):
+            k_ref, v_ref, *rest, scale, window, softcap, block_k, tq, g,
+            quant=False):
+    if quant:
+        # quantized KV stream (DESIGN.md §10): per-(slot, head) float32
+        # scales ride in two extra refs right after k/v
+        ks_ref, vs_ref, o_ref, m_s, l_s, acc_s, qp_s, anc_s = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_s, l_s, acc_s, qp_s, anc_s = rest
     ki = pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -74,6 +81,11 @@ def _kernel(qpos_ref, kvlen_ref, winstart_ref, winlen_ref, anc_ref, q_ref,
         q2 = q.reshape(tq * g, d)
         k = k_ref[0, :, 0, :].astype(jnp.float32)      # [bk, d]
         v = v_ref[0, :, 0, :].astype(jnp.float32)
+        if quant:
+            # dequant fused into the sweep: the block expands against its
+            # scales right after the DMA, still inside VMEM
+            k = k * ks_ref[0, :, 0][:, None]
+            v = v * vs_ref[0, :, 0][:, None]
         s = jnp.dot(q2, k.T, preferred_element_type=jnp.float32) * scale
         if softcap:
             s = jnp.tanh(s / softcap) * softcap
@@ -111,17 +123,19 @@ def _kernel(qpos_ref, kvlen_ref, winstart_ref, winlen_ref, anc_ref, q_ref,
 
 
 def tree_attention(q, k, v, kv_len, q_pos, win_start, anc, *, win_len=None,
-                   window=0, softcap=0.0, scale=None, block_k=256,
-                   interpret=False):
+                   k_scale=None, v_scale=None, window=0, softcap=0.0,
+                   scale=None, block_k=256, interpret=False):
     """q: [B, Tq, Hq, D] — the packed verify window; k, v: [B, S, Hkv, D];
     kv_len: [B]; q_pos: [B, Tq] logical positions (root pos + depth);
     win_start: [B] cache index of window slot 0; anc: [B, Tq] uint32
     ancestor bitmasks (bit j = window slot j visible); win_len: [B] int32
     count of meaningful window slots per row (None = Tq for every row —
-    single-template batches)."""
+    single-template batches); k_scale/v_scale: optional [B, S, Hkv] float32
+    dequant scales for quantized k/v (int8 / fp8)."""
     b, tq, hq, d = q.shape
     s_len, hkv = k.shape[1], k.shape[2]
     g = hq // hkv
+    quant = k_scale is not None
     if scale is None:
         scale = 1.0 / (d ** 0.5)
     if win_len is None:
@@ -131,24 +145,35 @@ def tree_attention(q, k, v, kv_len, q_pos, win_start, anc, *, win_len=None,
     grid = (b, hkv, pl.cdiv(s_len, block_k))
 
     kern = functools.partial(_kernel, scale=scale, window=window,
-                             softcap=softcap, block_k=block_k, tq=tq, g=g)
+                             softcap=softcap, block_k=block_k, tq=tq, g=g,
+                             quant=quant)
+
+    in_specs = [
+        pl.BlockSpec((1, tq), lambda bi, h, ki: (bi, 0)),       # q_pos
+        pl.BlockSpec((1,), lambda bi, h, ki: (bi,)),            # kv_len
+        pl.BlockSpec((1,), lambda bi, h, ki: (bi,)),            # win_start
+        pl.BlockSpec((1,), lambda bi, h, ki: (bi,)),            # win_len
+        pl.BlockSpec((1, tq), lambda bi, h, ki: (bi, 0)),       # anc
+        pl.BlockSpec((1, tq, 1, g, d),
+                     lambda bi, h, ki: (bi, 0, h, 0, 0)),       # q
+        pl.BlockSpec((1, block_k, 1, d),
+                     lambda bi, h, ki: (bi, ki, h, 0)),         # k
+        pl.BlockSpec((1, block_k, 1, d),
+                     lambda bi, h, ki: (bi, ki, h, 0)),         # v
+    ]
+    args = [q_pos.astype(jnp.int32), kv_len.astype(jnp.int32),
+            win_start.astype(jnp.int32), win_len.astype(jnp.int32),
+            anc.astype(jnp.uint32), qg, k, v]
+    if quant:
+        for _ in range(2):                                      # k/v scales
+            in_specs.append(pl.BlockSpec((1, block_k, 1),
+                                         lambda bi, h, ki: (bi, ki, h)))
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
 
     out = pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, tq), lambda bi, h, ki: (bi, 0)),       # q_pos
-            pl.BlockSpec((1,), lambda bi, h, ki: (bi,)),            # kv_len
-            pl.BlockSpec((1,), lambda bi, h, ki: (bi,)),            # win_start
-            pl.BlockSpec((1,), lambda bi, h, ki: (bi,)),            # win_len
-            pl.BlockSpec((1, tq), lambda bi, h, ki: (bi, 0)),       # anc
-            pl.BlockSpec((1, tq, 1, g, d),
-                         lambda bi, h, ki: (bi, 0, h, 0, 0)),       # q
-            pl.BlockSpec((1, block_k, 1, d),
-                         lambda bi, h, ki: (bi, ki, h, 0)),         # k
-            pl.BlockSpec((1, block_k, 1, d),
-                         lambda bi, h, ki: (bi, ki, h, 0)),         # v
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, tq, 1, g * d),
                                lambda bi, h, ki: (bi, 0, h, 0)),
         out_shape=jax.ShapeDtypeStruct((b, tq, hkv, g * d), q.dtype),
@@ -160,36 +185,37 @@ def tree_attention(q, k, v, kv_len, q_pos, win_start, anc, *, win_len=None,
             pltpu.VMEM((tq * g, 1), jnp.uint32),    # hoisted ancestor masks
         ],
         interpret=interpret,
-    )(q_pos.astype(jnp.int32), kv_len.astype(jnp.int32),
-      win_start.astype(jnp.int32), win_len.astype(jnp.int32),
-      anc.astype(jnp.uint32), qg, k, v)
+    )(*args)
     return out.reshape(b, tq, hq, d)
 
 
 def _paged_kernel(bt_ref, qpos_ref, kvlen_ref, winstart_ref, winlen_ref,
-                  anc_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s,
-                  qp_s, anc_s, **kw):
+                  anc_ref, q_ref, k_ref, v_ref, *rest, **kw):
     # bt_ref (the scalar-prefetched block table) is consumed only by the
     # BlockSpec index_maps; the compute body is the contiguous kernel's.
     _kernel(qpos_ref, kvlen_ref, winstart_ref, winlen_ref, anc_ref, q_ref,
-            k_ref, v_ref, o_ref, m_s, l_s, acc_s, qp_s, anc_s, **kw)
+            k_ref, v_ref, *rest, **kw)
 
 
 def tree_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
-                         win_start, anc, *, win_len=None, window=0,
-                         softcap=0.0, scale=None, interpret=False):
+                         win_start, anc, *, win_len=None, k_scale=None,
+                         v_scale=None, window=0, softcap=0.0, scale=None,
+                         interpret=False):
     """Paged-pool tree-verification attention.
 
     q: [B, Tq, Hq, D]; k_pages, v_pages: [NB, block, Hkv, D] shared pools;
     block_tables: [B, MBS] int32 (block 0 = reserved garbage block);
     kv_len: [B]; q_pos: [B, Tq] logical positions; win_start: [B];
     anc: [B, Tq] uint32 ancestor bitmasks; win_len: [B] int32 meaningful
-    window slots per row (None = Tq).
+    window slots per row (None = Tq); k_scale/v_scale: optional
+    [NB, block, Hkv] float32 per-slot dequant scales when the pools are
+    quantized (int8 / fp8) — they ride the same table indirection.
     """
     b, tq, hq, d = q.shape
     block, hkv = k_pages.shape[1], k_pages.shape[2]
     mbs = block_tables.shape[1]
     g = hq // hkv
+    quant = k_scale is not None
     if scale is None:
         scale = 1.0 / (d ** 0.5)
     if win_len is None:
@@ -197,24 +223,36 @@ def tree_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
 
     qg = q.reshape(b, tq, hkv, g, d)
     kern = functools.partial(_paged_kernel, scale=scale, window=window,
-                             softcap=softcap, block_k=block, tq=tq, g=g)
+                             softcap=softcap, block_k=block, tq=tq, g=g,
+                             quant=quant)
+
+    in_specs = [
+        pl.BlockSpec((1, tq), lambda bi, h, ki, bt: (bi, 0)),   # q_pos
+        pl.BlockSpec((1,), lambda bi, h, ki, bt: (bi,)),        # kv_len
+        pl.BlockSpec((1,), lambda bi, h, ki, bt: (bi,)),        # win_start
+        pl.BlockSpec((1,), lambda bi, h, ki, bt: (bi,)),        # win_len
+        pl.BlockSpec((1, tq), lambda bi, h, ki, bt: (bi, 0)),   # anc
+        pl.BlockSpec((1, tq, 1, g, d),
+                     lambda bi, h, ki, bt: (bi, 0, h, 0, 0)),   # q
+        pl.BlockSpec((1, block, 1, d),
+                     lambda bi, h, ki, bt: (bt[bi, ki], 0, h, 0)),  # k
+        pl.BlockSpec((1, block, 1, d),
+                     lambda bi, h, ki, bt: (bt[bi, ki], 0, h, 0)),  # v
+    ]
+    args = [block_tables.astype(jnp.int32), q_pos.astype(jnp.int32),
+            kv_len.astype(jnp.int32), win_start.astype(jnp.int32),
+            win_len.astype(jnp.int32), anc.astype(jnp.uint32), qg, k_pages,
+            v_pages]
+    if quant:
+        for _ in range(2):                                      # k/v scales
+            in_specs.append(pl.BlockSpec(
+                (1, block, 1), lambda bi, h, ki, bt: (bt[bi, ki], 0, h)))
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, hkv, mbs),
-        in_specs=[
-            pl.BlockSpec((1, tq), lambda bi, h, ki, bt: (bi, 0)),   # q_pos
-            pl.BlockSpec((1,), lambda bi, h, ki, bt: (bi,)),        # kv_len
-            pl.BlockSpec((1,), lambda bi, h, ki, bt: (bi,)),        # win_start
-            pl.BlockSpec((1,), lambda bi, h, ki, bt: (bi,)),        # win_len
-            pl.BlockSpec((1, tq), lambda bi, h, ki, bt: (bi, 0)),   # anc
-            pl.BlockSpec((1, tq, 1, g, d),
-                         lambda bi, h, ki, bt: (bi, 0, h, 0, 0)),   # q
-            pl.BlockSpec((1, block, 1, d),
-                         lambda bi, h, ki, bt: (bt[bi, ki], 0, h, 0)),  # k
-            pl.BlockSpec((1, block, 1, d),
-                         lambda bi, h, ki, bt: (bt[bi, ki], 0, h, 0)),  # v
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, tq, 1, g * d),
                                lambda bi, h, ki, bt: (bi, 0, h, 0)),
         scratch_shapes=[
@@ -230,8 +268,5 @@ def tree_attention_paged(q, k_pages, v_pages, block_tables, kv_len, q_pos,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, tq, hkv, g * d), q.dtype),
         interpret=interpret,
-    )(block_tables.astype(jnp.int32), q_pos.astype(jnp.int32),
-      kv_len.astype(jnp.int32), win_start.astype(jnp.int32),
-      win_len.astype(jnp.int32), anc.astype(jnp.uint32), qg, k_pages,
-      v_pages)
+    )(*args)
     return out.reshape(b, tq, hq, d)

@@ -60,6 +60,12 @@ def main():
                         help="full-length per-slot KV rows")
     ap.set_defaults(kv_layout="paged")
     ap.add_argument("--kv-block-size", type=int, default=64)
+    ap.add_argument("--kv-dtype", default="bf16",
+                    choices=["bf16", "fp32", "int8", "fp8"],
+                    help="KV cache storage dtype; int8/fp8 quantize on "
+                         "append with per-(position, head) scales and "
+                         "dequantize inside the attention kernels "
+                         "(DESIGN.md §10)")
     ap.add_argument("--kv-num-blocks", type=int, default=None,
                     help="paged pool size (default: worst-case coverage)")
     ap.add_argument("--prefix-cache", action="store_true",
@@ -108,7 +114,8 @@ def main():
                  max_batch=args.max_batch, max_len=args.max_len,
                  temperature=args.temperature, seed=args.seed,
                  kv_layout=args.kv_layout, kv_block_size=args.kv_block_size,
-                 kv_num_blocks=args.kv_num_blocks, tree=tree,
+                 kv_num_blocks=args.kv_num_blocks, kv_dtype=args.kv_dtype,
+                 tree=tree,
                  adaptive_tree=args.adaptive_tree,
                  prefix_cache=args.prefix_cache,
                  prefill_budget=args.prefill_budget)
@@ -163,7 +170,7 @@ def main():
     print(f"host overhead (harvest->dispatch) "
           f"p50={lat['host_overhead_p50_ms']:.2f}ms "
           f"p95={lat['host_overhead_p95_ms']:.2f}ms")
-    print(f"kv layout={args.kv_layout} "
+    print(f"kv layout={args.kv_layout} dtype={args.kv_dtype} "
           f"capacity={eng.kv_capacity_bytes() / 1e6:.2f}MB "
           f"peak_in_use={eng.peak_kv_bytes_in_use / 1e6:.2f}MB")
     if args.prefix_cache:

@@ -66,6 +66,65 @@ def _pallas_ok(q, k, mask_info, scale) -> bool:
             and q.shape[-1] == k.shape[-1])
 
 
+# ---------------------------------------------------------------------------
+# Quantized KV storage (DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+# names accepted by Engine(kv_dtype=) / --kv-dtype. "bf16" keeps the
+# historical unquantized layout byte-for-byte; int8/fp8 store each KV vector
+# quantized against a per-(position, head) float32 scale carried in sibling
+# "*_scale" cache leaves (quantize at append, dequantize at read — fused
+# into the Pallas streaming bodies on the pallas backend).
+KV_DTYPES = {
+    "bf16": jnp.bfloat16,
+    "fp32": jnp.float32,
+    "int8": jnp.int8,
+    "fp8": jnp.float8_e4m3fn,
+}
+
+# largest representable magnitude per quantized storage dtype: one scale
+# unit maps amax onto it
+_QUANT_MAXVAL = {jnp.dtype(jnp.int8): 127.0,
+                 jnp.dtype(jnp.float8_e4m3fn): 448.0}
+
+
+def resolve_kv_dtype(kv_dtype):
+    """Accept a KV_DTYPES name or any dtype; return the storage dtype."""
+    if isinstance(kv_dtype, str):
+        return jnp.dtype(KV_DTYPES[kv_dtype])
+    return jnp.dtype(kv_dtype)
+
+
+def kv_dtype_is_quantized(dtype) -> bool:
+    return jnp.dtype(dtype) in _QUANT_MAXVAL
+
+
+def quantize_kv(x, qdtype):
+    """Per-(position, head) symmetric quantization over the trailing axis.
+
+    x: [..., D] -> (q [..., D] qdtype, scale [...] float32) such that
+    ``dequantize_kv(q, scale)`` reconstructs x. int8 scales are amax/127
+    with round+clip; fp8 (e4m3) scales are amax/448 with the cast doing the
+    mantissa rounding. All-zero vectors take scale 1 so the garbage block's
+    zeros stay exactly zero, and a scale is never 0 (dequant never NaNs).
+    """
+    maxval = _QUANT_MAXVAL[jnp.dtype(qdtype)]
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.where(amax > 0, amax / maxval, 1.0)
+    scaled = xf / scale[..., None]
+    if jnp.dtype(qdtype) == jnp.dtype(jnp.int8):
+        q = jnp.clip(jnp.round(scaled), -maxval, maxval).astype(jnp.int8)
+    else:
+        q = scaled.astype(qdtype)
+    return q, scale
+
+
+def dequantize_kv(q, scale):
+    """Inverse of quantize_kv: [..., D] values x [...] scales -> float32."""
+    return q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+
+
 class PardMaskInfo(NamedTuple):
     """Per-token PARD-COD metadata (see core/cod.py).
 
@@ -145,7 +204,7 @@ def pard_mask(q_seg, q_base, k_seg, k_base):
 
 def attend(q, k, v, q_pos, kv_pos, kv_len, *, causal=True, window=0,
            attn_softcap=0.0, scale=None, mask_info=None, kv_mask_info=None,
-           tree_info=None):
+           tree_info=None, k_scale=None, v_scale=None):
     """Masked multi-head attention core (pure jnp reference path).
 
     q:      [B, Tq, Hq, Dk]
@@ -156,6 +215,10 @@ def attend(q, k, v, q_pos, kv_pos, kv_len, *, causal=True, window=0,
     tree_info: optional TreeAttnInfo — tree-verification masking (ancestor
             bitmask inside the window, plain context visibility before it)
             replacing the causal rule for the speculative verify window
+    k_scale, v_scale: optional [B, Tk, Hkv] per-(position, head) dequant
+            scales for quantized k/v (DESIGN.md §10). The decode/tree Pallas
+            kernels fuse the dequant into their KV stream; every other path
+            dequantizes up front (the reference semantics).
     """
     b, tq, hq, dk = q.shape
     hkv = k.shape[2]
@@ -163,12 +226,21 @@ def attend(q, k, v, q_pos, kv_pos, kv_len, *, causal=True, window=0,
     if scale is None:
         scale = 1.0 / math.sqrt(dk)
 
+    if k_scale is not None and not (
+            _pallas_ok(q, k, mask_info, scale)
+            and (tree_info is not None or (causal and tq != k.shape[1]))):
+        # quantized cache on a path without a dequant-fused kernel
+        k = dequantize_kv(k, k_scale)
+        v = dequantize_kv(v, v_scale)
+        k_scale = v_scale = None
+
     if _pallas_ok(q, k, mask_info, scale) and tree_info is not None:
         from ..kernels import ops
         kv_len_arr = jnp.broadcast_to(jnp.asarray(kv_len), (b,)).astype(jnp.int32)
         return ops.tree_attention(q, k, v, kv_len_arr, q_pos,
                                   tree_info.win_start, tree_info.anc,
                                   win_len=tree_info.win_len,
+                                  k_scale=k_scale, v_scale=v_scale,
                                   window=window, softcap=attn_softcap,
                                   scale=scale)
     if _pallas_ok(q, k, mask_info, scale) and causal:
@@ -179,6 +251,7 @@ def attend(q, k, v, q_pos, kv_pos, kv_len, *, causal=True, window=0,
                                        softcap=attn_softcap, scale=scale)
         # small-q decode/verify against a long cache
         return ops.decode_attention(q, k, v, kv_len_arr, q_pos,
+                                    k_scale=k_scale, v_scale=v_scale,
                                     window=window, softcap=attn_softcap,
                                     scale=scale)
 
@@ -242,16 +315,22 @@ def init_gqa(key, cfg, cross: bool = False):
 
 def init_gqa_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
     hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
-    return {"k": jnp.zeros((batch, max_len, hkv, hd), dtype),
-            "v": jnp.zeros((batch, max_len, hkv, hd), dtype)}
+    c = {"k": jnp.zeros((batch, max_len, hkv, hd), dtype),
+         "v": jnp.zeros((batch, max_len, hkv, hd), dtype)}
+    if kv_dtype_is_quantized(dtype):
+        c["k_scale"] = jnp.ones((batch, max_len, hkv), jnp.float32)
+        c["v_scale"] = jnp.ones((batch, max_len, hkv), jnp.float32)
+    return c
 
 
 def _write_cache(buf, new, cache_pos):
-    """buf: [B, max, H, D]; new: [B, T, H, D]; cache_pos: [B] int32."""
+    """buf: [B, max, ...]; new: [B, T, ...]; cache_pos: [B] int32."""
     b, t = new.shape[0], new.shape[1]
 
     def row(buf_r, new_r, p):
-        return jax.lax.dynamic_update_slice(buf_r, new_r.astype(buf_r.dtype), (p, 0, 0))
+        return jax.lax.dynamic_update_slice(
+            buf_r, new_r.astype(buf_r.dtype),
+            (p,) + (0,) * (buf_r.ndim - 1))
 
     return jax.vmap(row)(buf, new, cache_pos)
 
@@ -307,7 +386,7 @@ _PAGED_KERNEL_MAX_TQ = 32
 
 def _paged_attend(q, k_pages, v_pages, block_tables, q_pos, kv_len, *,
                   causal=True, window=0, attn_softcap=0.0, scale=None,
-                  tree_info=None):
+                  tree_info=None, k_scale=None, v_scale=None):
     """Attention against a block-paged KV pool.
 
     Uses the Pallas paged decode kernel for small query windows on the
@@ -329,13 +408,17 @@ def _paged_attend(q, k_pages, v_pages, block_tables, q_pos, kv_len, *,
             return ops.tree_attention_paged(
                 q, k_pages, v_pages, block_tables, kv_len_arr, q_pos,
                 tree_info.win_start, tree_info.anc,
-                win_len=tree_info.win_len, window=window,
-                softcap=attn_softcap, scale=scale)
+                win_len=tree_info.win_len, k_scale=k_scale, v_scale=v_scale,
+                window=window, softcap=attn_softcap, scale=scale)
         return ops.decode_attention_paged(
             q, k_pages, v_pages, block_tables, kv_len_arr, q_pos,
+            k_scale=k_scale, v_scale=v_scale,
             window=window, softcap=attn_softcap, scale=scale)
     k = gather_pages(k_pages, block_tables)
     v = gather_pages(v_pages, block_tables)
+    if k_scale is not None:
+        k = dequantize_kv(k, gather_pages(k_scale, block_tables))
+        v = dequantize_kv(v, gather_pages(v_scale, block_tables))
     s = k.shape[1]
     kv_pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
     return attend(q, k, v, q_pos, kv_pos, kv_len, causal=causal,
@@ -369,26 +452,52 @@ def gqa_apply(params, cfg, x, positions, *, layer_window=0, cache=None,
                      scale=scale, mask_info=mask_info)
         new_cache = None
     elif block_tables is not None:
-        new_k = write_cache_paged(cache["k"], k, cache_pos, block_tables,
-                                  kv_block_size)
-        new_v = write_cache_paged(cache["v"], v, cache_pos, block_tables,
-                                  kv_block_size)
-        new_cache = {"k": new_k, "v": new_v}
-        out = _paged_attend(q, new_k, new_v, block_tables, positions,
-                            cache_pos + t, causal=causal,
+        if "k_scale" in cache:
+            # quantized pool: quantize on append, so prefill chunks, decode
+            # windows and tree-window compaction all produce quantized
+            # blocks; the freshly written window reads back through the
+            # same dequant path as committed context (DESIGN.md §10)
+            k, sk = quantize_kv(k, cache["k"].dtype)
+            v, sv = quantize_kv(v, cache["v"].dtype)
+            new_cache = {
+                "k_scale": write_cache_paged(cache["k_scale"], sk, cache_pos,
+                                             block_tables, kv_block_size),
+                "v_scale": write_cache_paged(cache["v_scale"], sv, cache_pos,
+                                             block_tables, kv_block_size)}
+        else:
+            new_cache = {}
+        new_cache["k"] = write_cache_paged(cache["k"], k, cache_pos,
+                                           block_tables, kv_block_size)
+        new_cache["v"] = write_cache_paged(cache["v"], v, cache_pos,
+                                           block_tables, kv_block_size)
+        out = _paged_attend(q, new_cache["k"], new_cache["v"], block_tables,
+                            positions, cache_pos + t, causal=causal,
                             window=layer_window,
                             attn_softcap=cfg.attn_softcap, scale=scale,
-                            tree_info=tree_info)
+                            tree_info=tree_info,
+                            k_scale=new_cache.get("k_scale"),
+                            v_scale=new_cache.get("v_scale"))
     else:
-        new_k = _write_cache(cache["k"], k, cache_pos)
-        new_v = _write_cache(cache["v"], v, cache_pos)
-        new_cache = {"k": new_k, "v": new_v}
+        if "k_scale" in cache:
+            k, sk = quantize_kv(k, cache["k"].dtype)
+            v, sv = quantize_kv(v, cache["v"].dtype)
+            new_cache = {"k_scale": _write_cache(cache["k_scale"], sk,
+                                                 cache_pos),
+                         "v_scale": _write_cache(cache["v_scale"], sv,
+                                                 cache_pos)}
+        else:
+            new_cache = {}
+        new_cache["k"] = _write_cache(cache["k"], k, cache_pos)
+        new_cache["v"] = _write_cache(cache["v"], v, cache_pos)
+        new_k, new_v = new_cache["k"], new_cache["v"]
         max_len = new_k.shape[1]
         kv_pos = jnp.broadcast_to(jnp.arange(max_len)[None, :], (b, max_len))
         kv_len = cache_pos + t
         out = attend(q, new_k, new_v, positions, kv_pos, kv_len, causal=causal,
                      window=layer_window, attn_softcap=cfg.attn_softcap,
-                     scale=scale, tree_info=tree_info)
+                     scale=scale, tree_info=tree_info,
+                     k_scale=new_cache.get("k_scale"),
+                     v_scale=new_cache.get("v_scale"))
     y = jnp.einsum("bthk,hkd->btd", out, params["wo"].astype(x.dtype))
     return y, new_cache
 
@@ -458,7 +567,11 @@ def init_mla(key, cfg):
 
 def init_mla_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
     width = cfg.kv_lora_rank + cfg.qk_rope_head_dim
-    return {"ckv": jnp.zeros((batch, max_len, width), dtype)}
+    c = {"ckv": jnp.zeros((batch, max_len, width), dtype)}
+    if kv_dtype_is_quantized(dtype):
+        # one scale per compressed-KV vector (the latent IS the "head")
+        c["ckv_scale"] = jnp.ones((batch, max_len), jnp.float32)
+    return c
 
 
 def _rms(x, scale, eps):
@@ -492,20 +605,39 @@ def mla_apply(params, cfg, x, positions, *, cache=None, cache_pos=None,
 
     if cache is not None and block_tables is not None:
         # paged MLA: the compressed KV pages gather into a per-row view;
-        # the projection to full K/V below is shared with the other paths
-        pages = write_cache_paged(cache["ckv"], compressed, cache_pos,
-                                  block_tables, kv_block_size)
-        new_cache = {"ckv": pages}
-        kv_src = gather_pages(pages, block_tables)
+        # the projection to full K/V below is shared with the other paths.
+        # Quantized pools dequantize at the gather (MLA's mixed head dims
+        # never hit the fused GQA kernels).
+        if "ckv_scale" in cache:
+            qc, sc = quantize_kv(compressed, cache["ckv"].dtype)
+            pages = write_cache_paged(cache["ckv"], qc, cache_pos,
+                                      block_tables, kv_block_size)
+            spages = write_cache_paged(cache["ckv_scale"], sc, cache_pos,
+                                       block_tables, kv_block_size)
+            new_cache = {"ckv": pages, "ckv_scale": spages}
+            kv_src = dequantize_kv(gather_pages(pages, block_tables),
+                                   gather_pages(spages, block_tables)
+                                   ).astype(x.dtype)
+        else:
+            pages = write_cache_paged(cache["ckv"], compressed, cache_pos,
+                                      block_tables, kv_block_size)
+            new_cache = {"ckv": pages}
+            kv_src = gather_pages(pages, block_tables)
         s = kv_src.shape[1]
         kv_pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
         kv_len = cache_pos + t
     elif cache is not None:
-        buf = jax.vmap(lambda bf, nw, p: jax.lax.dynamic_update_slice(
-            bf, nw.astype(bf.dtype), (p, 0)))(cache["ckv"], compressed, cache_pos)
-        new_cache = {"ckv": buf}
-        kv_src = buf
-        s = buf.shape[1]
+        if "ckv_scale" in cache:
+            qc, sc = quantize_kv(compressed, cache["ckv"].dtype)
+            buf = _write_cache(cache["ckv"], qc, cache_pos)
+            sbuf = _write_cache(cache["ckv_scale"], sc, cache_pos)
+            new_cache = {"ckv": buf, "ckv_scale": sbuf}
+            kv_src = dequantize_kv(buf, sbuf).astype(x.dtype)
+        else:
+            buf = _write_cache(cache["ckv"], compressed, cache_pos)
+            new_cache = {"ckv": buf}
+            kv_src = buf
+        s = new_cache["ckv"].shape[1]
         kv_pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
         kv_len = cache_pos + t
     else:

@@ -119,6 +119,9 @@ def _init_layer_cache(cfg, spec: LayerSpec, batch, max_len, dtype):
 
 
 def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """``dtype`` accepts a kv_dtype name ("bf16"/"fp32"/"int8"/"fp8") or a
+    jnp dtype; quantized dtypes add sibling *_scale cache leaves."""
+    dtype = attn.resolve_kv_dtype(dtype)
     plan = scan_plan(cfg)
     caches = {
         "prefix": [_init_layer_cache(cfg, s, batch, max_len, dtype)

@@ -57,6 +57,7 @@ from collections import deque
 from typing import Optional
 
 from ..core.spec_decode import SpecDecoder, TemplateBank
+from ..models.attention import KV_DTYPES
 from ..models.config import ModelConfig
 from . import kv_pool
 from .executor import Executor
@@ -75,9 +76,11 @@ class Engine:
                  adaptive_tree: bool = False, tree_ewma: float = 0.2,
                  tree_reselect_every: int = 4, prefix_cache: bool = False,
                  prefill_chunk: int = 8, prefill_budget: Optional[int] = None,
-                 admit_window: int = 8):
+                 admit_window: int = 8, kv_dtype: str = "bf16"):
         assert mode in ("ar", "vsd", "pard")
         assert kv_layout in ("paged", "contiguous")
+        assert kv_dtype in KV_DTYPES, \
+            f"kv_dtype must be one of {sorted(KV_DTYPES)}"
         assert tree is None or mode == "pard", \
             "tree templates apply to the PARD draft path only"
         if adaptive_tree:
@@ -105,7 +108,7 @@ class Engine:
             max_len=max_len, temperature=temperature,
             kv_block_size=kv_block_size if self.paged else 0,
             tree=tree if mode == "pard" else None,
-            prefill_chunk=prefill_chunk)
+            prefill_chunk=prefill_chunk, kv_dtype=kv_dtype)
         self.k = self.dec.k          # a tree template overrides k (== depth)
         self.bank = self.dec.tree    # TemplateBank (or None: no tree)
         self.tc, self.dc = target_cfg, draft_cfg
@@ -119,7 +122,8 @@ class Engine:
             nb = None
             self.alloc = None
         self.ex = Executor(self.dec, target_cfg, draft_cfg, mode, max_batch,
-                           max_len, self.paged, kv_block_size, nb, seed)
+                           max_len, self.paged, kv_block_size, nb, seed,
+                           kv_dtype=kv_dtype)
         ctrl = (TreeController(self.bank, max_batch, tree_ewma)
                 if adaptive_tree else None)
         self.sched = Scheduler(

@@ -41,6 +41,7 @@ import numpy as np
 from ..core import acceptance
 from ..core.spec_decode import DecodeState, SpecDecoder
 from ..models import init_caches
+from ..models.attention import resolve_kv_dtype
 from ..models.config import SSM, ModelConfig, scan_plan
 from . import kv_pool
 
@@ -132,12 +133,14 @@ class Executor:
     def __init__(self, dec: SpecDecoder, target_cfg: ModelConfig,
                  draft_cfg: Optional[ModelConfig], mode: str, max_batch: int,
                  max_len: int, paged: bool, kv_block_size: int,
-                 num_blocks: Optional[int], seed: int):
+                 num_blocks: Optional[int], seed: int,
+                 kv_dtype: str = "bf16"):
         self.dec = dec
         self.mode = mode
         self.tc, self.dc = target_cfg, draft_cfg
         self.max_batch, self.max_len = max_batch, max_len
         self.paged = paged
+        self.kv_dtype = kv_dtype
         self._rng_base = jax.random.PRNGKey(seed)
         self._step_fns = {}
         self._tables_version = -1
@@ -147,11 +150,14 @@ class Executor:
         # stays non-blocking
         self._n_draft = 0 if mode == "ar" else (dec.k if mode == "vsd" else 1)
 
+        cache_dtype = resolve_kv_dtype(kv_dtype)
         if paged:
             tcache = kv_pool.init_paged_caches(target_cfg, max_batch,
-                                               num_blocks, kv_block_size)
+                                               num_blocks, kv_block_size,
+                                               dtype=cache_dtype)
             dcache = (kv_pool.init_paged_caches(draft_cfg, max_batch,
-                                                num_blocks, kv_block_size)
+                                                num_blocks, kv_block_size,
+                                                dtype=cache_dtype)
                       if draft_cfg is not None else None)
             tables = jnp.zeros((max_batch, kv_pool.blocks_for(
                 max_len, kv_block_size)), jnp.int32)
@@ -160,8 +166,10 @@ class Executor:
                 + (kv_pool.kv_bytes_per_block(draft_cfg, dcache, num_blocks)
                    if dcache is not None else 0))
         else:
-            tcache = init_caches(target_cfg, max_batch, max_len)
-            dcache = (init_caches(draft_cfg, max_batch, max_len)
+            tcache = init_caches(target_cfg, max_batch, max_len,
+                                 dtype=cache_dtype)
+            dcache = (init_caches(draft_cfg, max_batch, max_len,
+                                  dtype=cache_dtype)
                       if draft_cfg is not None else None)
             tables = None
             self.kv_per_block = 0
@@ -317,7 +325,7 @@ class Executor:
         variant = "mixed" if (any_prefilling and self.mode == "ar") \
             else "decode"
         greedy_only = not any_sampled and self.mode != "ar"
-        key = (variant, tree_sel is not None, greedy_only)
+        key = (variant, tree_sel is not None, greedy_only, self.kv_dtype)
         if key not in self._step_fns:
             self._step_fns[key] = jax.jit(
                 self._build_fused(variant, apply_tree=tree_sel is not None,

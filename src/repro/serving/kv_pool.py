@@ -46,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import ssm as ssm_mod
+from ..models.attention import kv_dtype_is_quantized, resolve_kv_dtype
 from ..models.config import (ATTN_CROSS, ATTN_GLOBAL, ATTN_LOCAL, ATTN_MLA,
                              SSM, ModelConfig, scan_plan)
 
@@ -71,13 +72,27 @@ def default_num_blocks(max_batch: int, max_len: int, block_size: int) -> int:
 
 def _paged_layer_cache(cfg: ModelConfig, spec, num_blocks, block_size, batch,
                        dtype):
+    quant = kv_dtype_is_quantized(dtype)
     if spec.mixer in (ATTN_GLOBAL, ATTN_LOCAL):
         hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
-        return {"k": jnp.zeros((num_blocks, block_size, hkv, hd), dtype),
-                "v": jnp.zeros((num_blocks, block_size, hkv, hd), dtype)}
+        c = {"k": jnp.zeros((num_blocks, block_size, hkv, hd), dtype),
+             "v": jnp.zeros((num_blocks, block_size, hkv, hd), dtype)}
+        if quant:
+            # per-(slot, head) dequant scales ride alongside the pool and
+            # through the same block-table indirection (DESIGN.md §10);
+            # scale 1 keeps the garbage block dequantizing to exact zeros
+            c["k_scale"] = jnp.ones((num_blocks, block_size, hkv),
+                                    jnp.float32)
+            c["v_scale"] = jnp.ones((num_blocks, block_size, hkv),
+                                    jnp.float32)
+        return c
     if spec.mixer == ATTN_MLA:
         width = cfg.kv_lora_rank + cfg.qk_rope_head_dim
-        return {"ckv": jnp.zeros((num_blocks, block_size, width), dtype)}
+        c = {"ckv": jnp.zeros((num_blocks, block_size, width), dtype)}
+        if quant:
+            # one scale per compressed-KV vector
+            c["ckv_scale"] = jnp.ones((num_blocks, block_size), jnp.float32)
+        return c
     if spec.mixer == SSM:
         return ssm_mod.init_mamba2_state(cfg, batch, jnp.float32)
     if spec.mixer == ATTN_CROSS:
@@ -89,7 +104,10 @@ def init_paged_caches(cfg: ModelConfig, batch: int, num_blocks: int,
                       block_size: int, dtype=jnp.bfloat16):
     """Cache pytree with the SAME structure as models.init_caches, but
     attention leaves are shared block pools [NB, bs, ...] (no batch dim);
-    SSM states remain [batch, ...]."""
+    SSM states remain [batch, ...]. ``dtype`` accepts a kv_dtype name
+    ("bf16"/"fp32"/"int8"/"fp8") or a jnp dtype; quantized dtypes add
+    sibling *_scale pool leaves."""
+    dtype = resolve_kv_dtype(dtype)
     plan = scan_plan(cfg)
     return {
         "prefix": [_paged_layer_cache(cfg, s, num_blocks, block_size, batch,
@@ -196,7 +214,8 @@ def kv_bytes_per_block(cfg: ModelConfig, tree, num_blocks: int) -> int:
 # Allocator
 # ---------------------------------------------------------------------------
 
-def prefix_block_keys(prompt, block_size: int) -> List[bytes]:
+def prefix_block_keys(prompt, block_size: int,
+                      kv_dtype: str = "bf16") -> List[bytes]:
     """Content-chained cache keys for the FULL blocks inside ``prompt[:-1]``
     (the region admission prefills — the last prompt token is re-processed
     by the first verify window and its block is written by decode).
@@ -207,10 +226,17 @@ def prefix_block_keys(prompt, block_size: int) -> List[bytes]:
     implicit (a block's key embeds every preceding token). Target and draft
     KV are keyed TOGETHER: both models cache the same absolute positions
     through one shared block table, so one key covers both pools.
+
+    Keys are SALTED with ``kv_dtype``: a block's cached payload is the
+    dtype-specific encoding (quantized values + scales vs full precision),
+    so the same token prefix under different kv_dtypes must never alias —
+    an int8 engine re-reading an fp32 engine's key (or vice versa) would
+    serve bytes in the wrong encoding.
     """
     p = np.ascontiguousarray(np.asarray(prompt, np.int32))
     n_full = max(0, (len(p) - 1)) // block_size
-    return [p[:(i + 1) * block_size].tobytes() for i in range(n_full)]
+    salt = kv_dtype.encode() + b"|"
+    return [salt + p[:(i + 1) * block_size].tobytes() for i in range(n_full)]
 
 
 class BlockAllocator:

@@ -318,8 +318,9 @@ class Scheduler:
         hit: List[int] = []
         if self.paged:
             if self.prefix_cache:
-                keys = kv_pool.prefix_block_keys(req.prompt,
-                                                 self.alloc.block_size)
+                keys = kv_pool.prefix_block_keys(
+                    req.prompt, self.alloc.block_size,
+                    kv_dtype=self.ex.kv_dtype)
                 hit = self.alloc.match_prefix(keys)
             nb = self.alloc.blocks_needed(need)
             if not self.alloc.can_allocate(nb - len(hit), hit) \

@@ -137,3 +137,82 @@ def test_paged_cache_structure_matches_contiguous(arch):
     cap = kv_pool.kv_capacity_bytes(cfg, paged)
     per = kv_pool.kv_bytes_per_block(cfg, paged, 9)
     assert cap == per * 9 > 0
+
+
+# ------------------------------------------------------------ quantized pools
+@pytest.mark.parametrize("arch", ["tiny-target",
+                                  "deepseek-v2-lite-16b-smoke"])
+def test_forward_layout_equivalence_int8(arch):
+    """The layout contract survives quantization: contiguous int8 caches
+    and a scrambled int8 paged pool see the SAME appended encodings
+    (quantization is deterministic per write), so decode logits agree to
+    the usual layout tolerance — covers GQA (fused-kernel dequant) and
+    MLA (dequant-at-gather) cache paths."""
+    cfg = get_config(arch)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                cfg.vocab_size)
+    bs, mbs = 8, 4
+    tables = jnp.asarray(
+        np.random.default_rng(0).permutation(np.arange(1, 9)).reshape(2, 4),
+        jnp.int32)
+
+    cont = init_caches(cfg, 2, bs * mbs, dtype="int8")
+    _, cont, _ = forward(params, cfg, tokens, caches=cont,
+                         cache_pos=jnp.zeros(2, jnp.int32), dtype=jnp.float32)
+    want, _, _ = forward(params, cfg, tokens[:, -1:], caches=cont,
+                         cache_pos=jnp.full(2, 12, jnp.int32),
+                         dtype=jnp.float32)
+
+    paged = kv_pool.init_paged_caches(cfg, 2, num_blocks=9, block_size=bs,
+                                      dtype="int8")
+    _, paged, _ = forward(params, cfg, tokens, caches=paged,
+                          cache_pos=jnp.zeros(2, jnp.int32),
+                          block_tables=tables, kv_block_size=bs,
+                          dtype=jnp.float32)
+    out, _, _ = forward(params, cfg, tokens[:, -1:], caches=paged,
+                        cache_pos=jnp.full(2, 12, jnp.int32),
+                        block_tables=tables, kv_block_size=bs,
+                        dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("arch", ["tiny-target",
+                                  "deepseek-v2-lite-16b-smoke"])
+def test_quant_paged_cache_structure_matches_contiguous(arch):
+    """The layout swap stays transparent under quantization: contiguous
+    int8 caches (with their *_scale leaves) and the int8 paged pool share
+    one pytree structure, and byte accounting covers values AND scales."""
+    cfg = get_config(arch)
+    cont = init_caches(cfg, 2, 64, dtype="int8")
+    paged = kv_pool.init_paged_caches(cfg, 2, num_blocks=9, block_size=8,
+                                      dtype="int8")
+    assert (jax.tree.structure(cont) == jax.tree.structure(paged))
+    cap = kv_pool.kv_capacity_bytes(cfg, paged)
+    per = kv_pool.kv_bytes_per_block(cfg, paged, 9)
+    assert cap == per * 9 > 0
+    fp32 = kv_pool.init_paged_caches(cfg, 2, num_blocks=9, block_size=8,
+                                     dtype="fp32")
+    assert cap * 2 <= kv_pool.kv_capacity_bytes(cfg, fp32)
+
+
+def test_quant_write_past_allocation_lands_in_garbage_block():
+    """I1 under quantization: both the value write AND the scale write for
+    positions past the allocation route to garbage block 0."""
+    bs, nb = 8, 4
+    pages = jnp.zeros((nb, bs, 1, 2), jnp.int8)
+    scales = jnp.ones((nb, bs, 1), jnp.float32)
+    tables = jnp.asarray([[2, 0, 0]], jnp.int32)     # 1 block allocated
+    newq = jnp.ones((1, 6, 1, 2), jnp.int8)
+    news = jnp.full((1, 6, 1), 3.0, jnp.float32)
+    pages = write_cache_paged(pages, newq, jnp.full((1,), 5, jnp.int32),
+                              tables, bs)
+    scales = write_cache_paged(scales, news, jnp.full((1,), 5, jnp.int32),
+                               tables, bs)
+    assert np.all(np.asarray(pages[2, 5:8]) == 1)
+    assert np.all(np.asarray(scales[2, 5:8]) == 3.0)
+    assert np.all(np.asarray(pages[0, 0:3]) == 1)    # garbage block absorbed
+    assert np.all(np.asarray(scales[0, 0:3]) == 3.0)
+    assert np.all(np.asarray(pages[1]) == 0)         # other blocks untouched
+    assert np.all(np.asarray(scales[1]) == 1.0)

@@ -1,0 +1,337 @@
+"""Quantized KV cache (int8 / fp8) — DESIGN.md §10.
+
+Four layers of coverage, cheapest first:
+
+  * quantize→dequantize roundtrip error bounds (pure property sweeps, plus
+    hypothesis when available);
+  * kernel-vs-oracle parity for every Pallas streaming variant (contiguous
+    + paged, decode + tree) with quantized pools and fused dequant,
+    including garbage-block poisoning;
+  * pool-level invariants: scale leaves exist with the right shapes, byte
+    accounting shows the ≥2x int8 reduction, quantized pools keep the
+    pytree-structure contract with contiguous caches;
+  * committed-token quality bounds end-to-end: int8 spec == int8 AR
+    (greedy losslessness is dtype-internal — quantization is deterministic
+    per append, so the verifier and the baseline see identical caches),
+    paged == contiguous under int8, and int8-vs-fp32 greedy disagreement
+    stays under a calibrated bound on a fixed workload.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import MarkovCorpus
+from repro.kernels import ops, ref
+from repro.models import init_params
+from repro.models.attention import (KV_DTYPES, dequantize_kv, gather_pages,
+                                    kv_dtype_is_quantized, quantize_kv,
+                                    resolve_kv_dtype)
+from repro.serving import kv_pool
+from repro.serving.engine import Engine
+
+KEY = jax.random.PRNGKey(42)
+QUANT_DTYPES = ["int8", "fp8"]
+
+
+def rand(*shape, k=0):
+    return jax.random.normal(jax.random.fold_in(KEY, k), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# quantize → dequantize roundtrip bounds
+# ---------------------------------------------------------------------------
+
+def _roundtrip_bound(x, name):
+    """Max reconstruction error allowed for one [..., D] row of values.
+
+    int8: the scaled lattice step is amax/127, rounding error ≤ half a
+    step. fp8 e4m3 has a 3-bit mantissa: relative error ≤ 2^-4 of the
+    value, so ≤ amax/16 after scaling to the [-448, 448] range (plus
+    denormal slack near zero).
+    """
+    amax = np.max(np.abs(np.asarray(x, np.float32)), axis=-1, keepdims=True)
+    if name == "int8":
+        return amax / 127.0 * 0.5 + 1e-7
+    return amax / 16.0 + 1e-7
+
+
+@pytest.mark.parametrize("name", QUANT_DTYPES)
+def test_roundtrip_error_bound_sweep(name):
+    qd = resolve_kv_dtype(name)
+    rng = np.random.default_rng(0)
+    for trial in range(20):
+        shape = (rng.integers(1, 5), rng.integers(1, 9),
+                 rng.integers(1, 5), int(rng.choice([4, 16, 32, 64])))
+        scale_mag = float(10.0 ** rng.uniform(-3, 3))
+        x = jnp.asarray(rng.standard_normal(shape) * scale_mag, jnp.float32)
+        q, s = quantize_kv(x, qd)
+        back = dequantize_kv(q, s)
+        err = np.abs(np.asarray(back) - np.asarray(x))
+        bound = _roundtrip_bound(x, name)
+        assert (err <= bound).all(), (trial, err.max(), bound.max())
+
+
+@pytest.mark.parametrize("name", QUANT_DTYPES)
+def test_roundtrip_zero_and_extremes(name):
+    qd = resolve_kv_dtype(name)
+    # all-zero rows quantize to zeros with scale 1 (no NaN/Inf): this is
+    # what keeps the garbage block harmless under quantization
+    z = jnp.zeros((2, 4, 3, 16), jnp.float32)
+    q, s = quantize_kv(z, qd)
+    assert np.asarray(s).min() == 1.0
+    np.testing.assert_array_equal(np.asarray(dequantize_kv(q, s)), 0.0)
+    # a single huge element: sign and magnitude survive the roundtrip
+    x = jnp.zeros((1, 1, 1, 8), jnp.float32).at[..., 3].set(-1e4)
+    q, s = quantize_kv(x, qd)
+    back = np.asarray(dequantize_kv(q, s))
+    assert abs(back[..., 3] + 1e4) / 1e4 < 0.1
+    assert np.isfinite(back).all()
+
+
+@pytest.mark.parametrize("name", QUANT_DTYPES)
+def test_roundtrip_hypothesis(name):
+    hyp = pytest.importorskip("hypothesis")
+    hnp = pytest.importorskip("hypothesis.extra.numpy")
+    st = pytest.importorskip("hypothesis.strategies")
+    qd = resolve_kv_dtype(name)
+
+    @hyp.given(hnp.arrays(np.float32, hnp.array_shapes(min_dims=2, max_dims=4,
+                                                       min_side=1,
+                                                       max_side=16),
+                          elements=st.floats(-1e4, 1e4, width=32)))
+    @hyp.settings(max_examples=50, deadline=None)
+    def check(x):
+        q, s = quantize_kv(jnp.asarray(x), qd)
+        back = np.asarray(dequantize_kv(q, s))
+        assert np.isfinite(back).all()
+        assert (np.abs(back - x) <= _roundtrip_bound(x, name)).all()
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# kernel-vs-oracle parity with fused dequant
+# ---------------------------------------------------------------------------
+
+def _paged_setup(b, hkv, d, bs, mbs, key=0):
+    nb = b * mbs + 1
+    perm = np.random.default_rng(key).permutation(np.arange(1, nb))
+    tables = jnp.asarray(perm.reshape(b, mbs), jnp.int32)
+    k_pages = rand(nb, bs, hkv, d, k=10 + key)
+    v_pages = rand(nb, bs, hkv, d, k=20 + key)
+    return k_pages, v_pages, tables
+
+
+@pytest.mark.parametrize("name", QUANT_DTYPES)
+@pytest.mark.parametrize("b,tq,hq,hkv,d,s", [
+    (2, 9, 4, 2, 64, 256), (1, 5, 8, 2, 32, 100),
+])
+def test_decode_attention_quant(name, b, tq, hq, hkv, d, s):
+    qd = resolve_kv_dtype(name)
+    q = rand(b, tq, hq, d, k=4)
+    k, ks = quantize_kv(rand(b, s, hkv, d, k=5), qd)
+    v, vs = quantize_kv(rand(b, s, hkv, d, k=6), qd)
+    kv_len = jnp.asarray([s // 2 + 3 * i + tq for i in range(b)], jnp.int32)
+    q_pos = (kv_len - tq)[:, None] + jnp.arange(tq)[None, :]
+    out = ops.decode_attention(q, k, v, kv_len, q_pos, k_scale=ks,
+                               v_scale=vs, block_k=64)
+    want = ref.decode_attention_ref(q, k, v, kv_len, q_pos, k_scale=ks,
+                                    v_scale=vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@pytest.mark.parametrize("name", QUANT_DTYPES)
+def test_decode_attention_paged_quant(name):
+    qd = resolve_kv_dtype(name)
+    b, tq, hq, hkv, d, bs, mbs = 2, 5, 4, 2, 32, 32, 4
+    kp, vp, tables = _paged_setup(b, hkv, d, bs, mbs)
+    kq, ks = quantize_kv(kp, qd)
+    vq, vs = quantize_kv(vp, qd)
+    q = rand(b, tq, hq, d, k=3)
+    kv_len = jnp.array([100, 70], jnp.int32)
+    q_pos = (kv_len - tq)[:, None] + jnp.arange(tq)[None, :]
+    out = ops.decode_attention_paged(q, kq, vq, tables, kv_len, q_pos,
+                                     k_scale=ks, v_scale=vs)
+    want = ref.decode_attention_paged_ref(q, kq, vq, tables, kv_len, q_pos,
+                                          k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+    # the two layouts agree on the same logical cache
+    kc, vc = gather_pages(kq, tables), gather_pages(vq, tables)
+    ksc, vsc = gather_pages(ks, tables), gather_pages(vs, tables)
+    cont = ops.decode_attention(q, kc, vc, kv_len, q_pos, k_scale=ksc,
+                                v_scale=vsc, block_k=bs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(cont), atol=2e-5)
+
+
+@pytest.mark.parametrize("name", QUANT_DTYPES)
+def test_tree_attention_quant_both_layouts(name):
+    qd = resolve_kv_dtype(name)
+    b, tq, hq, hkv, d, bs, mbs = 2, 5, 4, 2, 32, 32, 4
+    kp, vp, tables = _paged_setup(b, hkv, d, bs, mbs, key=1)
+    kq, ks = quantize_kv(kp, qd)
+    vq, vs = quantize_kv(vp, qd)
+    q = rand(b, tq, hq, d, k=7)
+    kv_len = jnp.array([100, 70], jnp.int32)
+    q_pos = (kv_len - tq)[:, None] + jnp.arange(tq)[None, :]
+    win_start = kv_len - tq
+    anc = jnp.asarray(np.array([[1, 3, 5, 11, 19], [1, 3, 5, 9, 17]],
+                               np.uint32))
+    out = ops.tree_attention_paged(q, kq, vq, tables, kv_len, q_pos,
+                                   win_start, anc, k_scale=ks, v_scale=vs)
+    want = ref.tree_attention_paged_ref(q, kq, vq, tables, kv_len, q_pos,
+                                        win_start, anc, k_scale=ks,
+                                        v_scale=vs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+    kc, vc = gather_pages(kq, tables), gather_pages(vq, tables)
+    ksc, vsc = gather_pages(ks, tables), gather_pages(vs, tables)
+    cont = ops.tree_attention(q, kc, vc, kv_len, q_pos, win_start, anc,
+                              k_scale=ksc, v_scale=vsc, block_k=bs)
+    contw = ref.tree_attention_ref(q, kc, vc, kv_len, q_pos, win_start, anc,
+                                   k_scale=ksc, v_scale=vsc)
+    np.testing.assert_allclose(np.asarray(cont), np.asarray(contw),
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(cont), atol=2e-5)
+
+
+@pytest.mark.parametrize("name", QUANT_DTYPES)
+def test_quant_garbage_block_is_invisible(name):
+    """Poisoning the garbage block's VALUES AND SCALES must not change any
+    output: validity is kv_index < kv_len, never the table contents."""
+    qd = resolve_kv_dtype(name)
+    b, tq, hq, hkv, d, bs, mbs = 2, 5, 4, 2, 32, 32, 4
+    kp, vp, tables = _paged_setup(b, hkv, d, bs, mbs, key=2)
+    kq, ks = quantize_kv(kp, qd)
+    vq, vs = quantize_kv(vp, qd)
+    q = rand(b, tq, hq, d, k=9)
+    kv_len = jnp.array([100, 70], jnp.int32)
+    q_pos = (kv_len - tq)[:, None] + jnp.arange(tq)[None, :]
+    clean = ops.decode_attention_paged(q, kq, vq, tables, kv_len, q_pos,
+                                       k_scale=ks, v_scale=vs)
+    maxq = 127 if name == "int8" else 448.0
+    kq2 = kq.at[0].set(jnp.asarray(maxq, kq.dtype))
+    vq2 = vq.at[0].set(jnp.asarray(maxq, vq.dtype))
+    ks2, vs2 = ks.at[0].set(1e6), vs.at[0].set(1e6)
+    poisoned = ops.decode_attention_paged(q, kq2, vq2, tables, kv_len, q_pos,
+                                          k_scale=ks2, v_scale=vs2)
+    np.testing.assert_array_equal(np.asarray(clean), np.asarray(poisoned))
+
+
+# ---------------------------------------------------------------------------
+# pool layout + byte accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", QUANT_DTYPES)
+def test_quant_pool_has_scale_leaves(name):
+    cfg = get_config("tiny-target")
+    pool = kv_pool.init_paged_caches(cfg, 2, 9, 16, dtype=name)
+    layers = pool["prefix"] + pool["scan"]
+    gqa = [c for c in layers if "k" in c]
+    assert gqa, "tiny-target should have GQA attention layers"
+    for layer in gqa:
+        assert set(layer) == {"k", "v", "k_scale", "v_scale"}
+        assert layer["k"].dtype == resolve_kv_dtype(name)
+        assert layer["k_scale"].dtype == jnp.float32
+        # per-(slot, head): the scale drops only the head_dim axis
+        assert layer["k_scale"].shape == layer["k"].shape[:-1]
+        # scale 1 everywhere: the zeroed pool dequantizes to exact zeros
+        assert np.asarray(layer["k_scale"]).min() == 1.0
+
+
+def test_int8_pool_byte_reduction():
+    """The acceptance gate in miniature: int8 pool bytes (values + scales)
+    ≤ half the fp32 pool's, measured by the same accounting the engine
+    reports in BENCH_serve.json."""
+    cfg = get_config("tiny-target")
+    fp32 = kv_pool.init_paged_caches(cfg, 2, 17, 64, dtype="fp32")
+    int8 = kv_pool.init_paged_caches(cfg, 2, 17, 64, dtype="int8")
+    cap32 = kv_pool.kv_capacity_bytes(cfg, fp32)
+    cap8 = kv_pool.kv_capacity_bytes(cfg, int8)
+    assert cap8 * 2 <= cap32, (cap8, cap32)
+
+
+def test_prefix_keys_salted_by_kv_dtype():
+    """Quantized and full-precision blocks must never alias in the prefix
+    cache: the cached payload encodings differ."""
+    prompt = np.arange(1, 130, dtype=np.int32)
+    base = kv_pool.prefix_block_keys(prompt, 64)
+    for name in ("fp32", "int8", "fp8"):
+        salted = kv_pool.prefix_block_keys(prompt, 64, kv_dtype=name)
+        assert len(salted) == len(base) > 0
+        assert not set(salted) & set(base)
+    assert kv_pool.prefix_block_keys(prompt, 64, kv_dtype="bf16") == base
+
+
+def test_kv_dtype_registry():
+    assert set(KV_DTYPES) == {"bf16", "fp32", "int8", "fp8"}
+    for name in QUANT_DTYPES:
+        assert kv_dtype_is_quantized(resolve_kv_dtype(name))
+    for name in ("bf16", "fp32"):
+        assert not kv_dtype_is_quantized(resolve_kv_dtype(name))
+
+
+# ---------------------------------------------------------------------------
+# committed-token quality bounds (end-to-end engine runs)
+# ---------------------------------------------------------------------------
+
+def _serve_tokens(kv_dtype, mode="pard", layout="paged", tree=None,
+                  n_req=4, max_new=24):
+    tc = get_config("tiny-target")
+    dc = get_config("tiny-draft")
+    tp = init_params(jax.random.PRNGKey(0), tc)
+    dp = init_params(jax.random.PRNGKey(1), dc)
+    corpus = MarkovCorpus(vocab_size=tc.vocab_size, seed=0, determinism=2.0)
+    rng = np.random.default_rng(0)
+    eng = Engine(tp, tc, dp if mode != "ar" else None,
+                 dc if mode != "ar" else None, mode=mode, k=4,
+                 max_batch=2, max_len=256, kv_layout=layout,
+                 kv_dtype=kv_dtype, tree=tree)
+    for _ in range(n_req):
+        eng.submit(corpus.prompts(rng, 1, 16)[0], max_new)
+    return {c.rid: list(c.tokens) for c in eng.run()}
+
+
+def test_greedy_spec_matches_ar_under_int8():
+    """Greedy speculative losslessness is INTERNAL to a kv_dtype: the
+    verifier replays the same quantized cache the AR baseline builds
+    (quantization is deterministic per append; compaction moves encoded
+    values unchanged), so spec-vs-AR must stay bit-exact under int8."""
+    assert _serve_tokens("int8", mode="pard") == _serve_tokens("int8",
+                                                               mode="ar")
+
+
+def test_int8_paged_matches_contiguous():
+    assert _serve_tokens("int8", layout="paged") == \
+        _serve_tokens("int8", layout="contiguous")
+
+
+def test_tree_mode_lossless_under_int8():
+    toks = _serve_tokens("int8", mode="pard", tree=(2, 2, 1))
+    assert toks == _serve_tokens("int8", mode="ar")
+
+
+# calibrated on the fixed workload above: int8 observed ≈ 96% agreement
+# (per-head scales keep the argmax ordering), fp8 ≈ 68% (e4m3's 3-bit
+# mantissa flips near-tie argmaxes on the random-init tiny model, and ONE
+# flip diverges the row's whole remaining trajectory). The gates sit far
+# below observed and far above what a real encoding bug produces
+# (agreement collapses towards 1/vocab ≈ 0.4% when bytes are misread).
+QUALITY_FLOOR = {"int8": 0.80, "fp8": 0.50}
+
+
+@pytest.mark.parametrize("name", QUANT_DTYPES)
+def test_committed_token_quality_bound(name):
+    """Greedy disagreement vs the fp32 path stays bounded on the fixed
+    workload (the committed-token quality bound, DESIGN.md §10)."""
+    quant = _serve_tokens(name)
+    fp32 = _serve_tokens("fp32")
+    assert quant.keys() == fp32.keys()
+    agree = total = 0
+    for rid in quant:
+        for a, b in zip(quant[rid], fp32[rid]):
+            agree += a == b
+            total += 1
+    assert total > 0
+    floor = QUALITY_FLOOR[name]
+    assert agree / total >= floor, f"{name}: {agree}/{total} tokens agree"

@@ -348,3 +348,90 @@ def test_prefix_keys_are_content_exact():
 
 def test_default_num_blocks_unchanged():
     assert kv_pool.default_num_blocks(2, 128, 32) == 2 * 4 + 1
+
+
+# ------------------------------------------------------------ quantized pools
+def test_prefix_keys_salted_by_kv_dtype_never_alias():
+    """A cached block's payload is the dtype-specific encoding (quantized
+    values + scales vs full precision), so the same token prefix under
+    different kv_dtypes must produce disjoint key sets — and the default
+    salt is byte-identical to the historical unsalted keys' dtype."""
+    p = np.arange(1, 200, dtype=np.int32)
+    per_dtype = {name: prefix_block_keys(p, 64, kv_dtype=name)
+                 for name in ("bf16", "fp32", "int8", "fp8")}
+    names = list(per_dtype)
+    for i, a in enumerate(names):
+        assert len(per_dtype[a]) == 3             # (199 - 1) // 64 full blocks
+        for b in names[i + 1:]:
+            assert not set(per_dtype[a]) & set(per_dtype[b])
+    assert prefix_block_keys(p, 64) == per_dtype["bf16"]
+
+
+def test_warm_cache_identical_to_cold_under_int8(models):
+    """Warm-vs-cold token identity holds with a quantized pool: a cache
+    hit serves the EXACT int8 blocks (values + scales) the registering
+    request appended, so greedy and seeded-sampled trajectories are
+    invariant to the KV source under int8 too."""
+    from repro.serving.engine import Engine
+    tc, tp, dc, dp = models
+    rng = np.random.default_rng(11)
+    prompts = _shared_prompts(rng, 5)
+    temps = [0.0, 0.8, 0.0, 0.7, 0.8]
+    results = {}
+    for name, cache in [("cold", False), ("warm", True)]:
+        eng = Engine(tp, tc, dp, dc, mode="pard", k=4, max_batch=2,
+                     max_len=256, kv_layout="paged", kv_block_size=16,
+                     prefix_cache=cache, kv_dtype="int8", seed=0)
+        rids = {eng.submit(p, 12, temperature=t): i
+                for i, (p, t) in enumerate(zip(prompts, temps))}
+        results[name] = {rids[c.rid]: c.tokens for c in eng.run()}
+        check_invariants(eng.alloc)
+        if name == "warm":
+            assert eng.prefix_hit_rate() > 0.5
+            assert eng.alloc.blocks_in_use == 0
+    for i in range(len(prompts)):
+        assert np.array_equal(results["cold"][i], results["warm"][i])
+
+
+def test_live_sharing_and_cow_invariants_under_int8(models):
+    """Refcounted live sharing + COW semantics are dtype-agnostic: the
+    allocator tracks BLOCK INDICES, and the executor's copy_block copies
+    every pool leaf (scales included). Run the live-sharing scenario on an
+    int8 engine and hold the I1-I5 invariants throughout."""
+    from repro.serving.engine import Engine
+    tc, tp, dc, dp = models
+    rng = np.random.default_rng(12)
+    prompts = _shared_prompts(rng, 3)
+    eng = Engine(tp, tc, dp, dc, mode="pard", k=4, max_batch=2, max_len=256,
+                 kv_layout="paged", kv_block_size=16, prefix_cache=True,
+                 kv_dtype="int8")
+    eng.submit(prompts[0], 8)
+    eng.run()
+    eng.submit(prompts[1], 8)
+    eng.submit(prompts[2], 8)
+    eng.sched.admit()
+    shared = [b for b in eng.alloc.owned[0] if eng.alloc.ref[b] == 2]
+    assert len(shared) == 2                       # both full prompt blocks
+    assert shared == eng.alloc.owned[1][:2]
+    check_invariants(eng.alloc)
+    # exercise COW on a live shared block: the detached copy gets its own
+    # refcount-1 block whose VALUES AND SCALES are byte-identical to the
+    # donor's (copy_block is a generic tree.map over every pool leaf)
+    pair = eng.alloc.copy_on_write(0, 0)
+    assert pair is not None                       # shared -> must remap
+    src, dst = pair
+    assert src == shared[0] and dst != src
+    assert eng.alloc.ref[dst] == 1 and eng.alloc.ref[src] == 1
+    eng.ex.copy_block(src, dst)
+    for c, scanned in ([(c, False) for c in eng.ex.state.tcache["prefix"]]
+                       + [(c, True) for c in eng.ex.state.tcache["scan"]]):
+        if "k" not in c and "ckv" not in c:
+            continue                              # SSM/cross: not paged KV
+        for leaf in c.values():
+            blk = (lambda i, x=leaf: x[:, i]) if scanned \
+                else (lambda i, x=leaf: x[i])
+            np.testing.assert_array_equal(np.asarray(blk(src)),
+                                          np.asarray(blk(dst)))
+    check_invariants(eng.alloc)
+    comps = eng.run()                             # cumulative completions
+    assert len(comps) == 3 and eng.alloc.blocks_in_use == 0

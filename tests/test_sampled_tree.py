@@ -172,9 +172,13 @@ def test_round_hist_accounting(tiny):
 
 
 @pytest.mark.slow
-def test_sampled_tree_matches_ar_distribution(tiny):
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+def test_sampled_tree_matches_ar_distribution(tiny, kv_dtype):
     """The statistical CI gate: N seeded sampled-tree runs on the tiny
-    config vs AR sampling with the same seeds. Two checks (thresholds
+    config vs AR sampling with the same seeds — run under the bf16 cache
+    AND the quantized int8 cache (the quantized-KV quality gate's sampled
+    half: rejection-sampling correctness is measured WITHIN a kv_dtype,
+    tree and AR sharing the same cache encoding). Two checks (thresholds
     calibrated so a correct implementation passes with wide margin while a
     greedy-only or unnormalised-residual implementation fails):
 
@@ -191,8 +195,10 @@ def test_sampled_tree_matches_ar_distribution(tiny):
     B, P, NEW, SEEDS = 4, 8, 8, 40
     prompt = _prompt(tc.vocab_size, b=B, p=P)
     tree_dec = SpecDecoder(tp, tc, dp, dc, max_len=256, temperature=TEMP,
-                           tree=TreeTemplate.from_branching((2, 2, 2, 1)))
-    ar_dec = SpecDecoder(tp, tc, dp, dc, k=4, max_len=256, temperature=TEMP)
+                           tree=TreeTemplate.from_branching((2, 2, 2, 1)),
+                           kv_dtype=kv_dtype)
+    ar_dec = SpecDecoder(tp, tc, dp, dc, k=4, max_len=256, temperature=TEMP,
+                         kv_dtype=kv_dtype)
 
     logits, _, _ = forward(tp, tc, prompt)
     p_exact = np.asarray(jax.nn.softmax(
