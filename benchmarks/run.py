@@ -31,7 +31,11 @@ applies to the tree-pipelined / flat-synchronous tokens/sec ratio
 (normally 1.0: the ROADMAP gate that tree WINS throughput once host
 overhead is hidden), and for ``--kv-quant`` it applies to the int8
 pool-byte reduction vs fp32 (normally 2.0) with a fixed secondary
-0.95x fp32 tokens/sec floor ("kv_quant" section, quant-gate job).
+0.95x fp32 tokens/sec floor ("kv_quant" section, quant-gate job), and
+for ``--scenario sharded`` it applies to the tp=4 per-chip scaling
+efficiency (loose on CPU-emulated collectives; token identity across
+mesh shapes is always required — "serve_sharded" section, shard-gate
+job; run under XLA_FLAGS=--xla_force_host_platform_device_count=4).
 
 The roofline/dry-run numbers (deliverable e/g) are produced separately by
 ``python -m repro.launch.dryrun --all --both-meshes`` and summarised with
@@ -64,7 +68,8 @@ def check_floor(floor: float, section: str = "tree") -> int:
                 "tree_adaptive": "--adaptive-tree",
                 "serve_sched": "--scenario sched",
                 "serve_pipelined": "--pipelined",
-                "kv_quant": "--kv-quant"}.get(section, "--tree")
+                "kv_quant": "--kv-quant",
+                "serve_sharded": "--scenario sharded"}.get(section, "--tree")
         print(f"smoke-floor: no '{section}' section in {common.BENCH_SERVE}"
               f" — run with {flag}", file=sys.stderr)
         return 2
@@ -118,6 +123,33 @@ def check_floor(floor: float, section: str = "tree") -> int:
                   f"{tree.get(name, {}).get('tokens_per_sec')} "
                   f"{'recorded' if ok else 'MISSING'}", file=sys.stderr)
         return 1 if failed else 0
+    if section == "serve_sharded":
+        # the sharded-serving gate: the benchmark must have asserted
+        # bitwise token identity across mesh shapes 1/2/4, and the
+        # 4-device per-chip throughput must clear the (loose, CPU-emulated
+        # collectives) scaling-efficiency floor; every mesh size must have
+        # recorded a tok/s
+        gate = tree.get("gate", {})
+        ok = gate.get("token_identical_across_meshes") is True
+        failed |= not ok
+        print(f"smoke-floor: serve_sharded token_identical_across_meshes="
+              f"{gate.get('token_identical_across_meshes')} "
+              f"{'ok' if ok else 'MISSING/FAIL'}", file=sys.stderr)
+        eff = gate.get("scaling_efficiency_tp4")
+        ok = eff is not None and eff >= floor
+        failed |= not ok
+        print(f"smoke-floor: serve_sharded tp4 scaling efficiency="
+              f"{eff if eff is None else f'{eff:.3f}'} "
+              f"{'>=' if ok else '< FAIL'} {floor} "
+              f"(tp1={gate.get('tp1_tps')} tp4={gate.get('tp4_tps')} "
+              f"tok/s)", file=sys.stderr)
+        for name in ("tp1", "tp2", "tp4"):
+            ok = tree.get(name, {}).get("tokens_per_sec") is not None
+            failed |= not ok
+            print(f"smoke-floor: serve_sharded.{name} tokens_per_sec="
+                  f"{tree.get(name, {}).get('tokens_per_sec')} "
+                  f"{'recorded' if ok else 'MISSING'}", file=sys.stderr)
+        return 1 if failed else 0
     if section == "serve_sched":
         hit = tree.get("cached", {}).get("prefix_hit_rate")
         ok = hit is not None and hit >= floor
@@ -164,10 +196,14 @@ def main() -> None:
                          "int8 tok/s >= 0.95x fp32)")
     ap.add_argument("--scenario", default=None,
                     choices=["sched", "serve", "tree", "adaptive",
-                             "pipelined", "kv-quant"],
+                             "pipelined", "kv-quant", "sharded"],
                     help="named serving scenario: 'sched' runs the "
                          "scheduler/prefix-cache benchmark (serve_sched, "
                          "records the 'serve_sched' BENCH_serve section); "
+                         "'sharded' runs the tensor-parallel mesh benchmark "
+                         "(serve_sharded: submeshes of 1/2/4 forced host "
+                         "devices, token identity asserted, per-chip "
+                         "scaling recorded under 'serve_sharded'); "
                          "'serve'/'tree'/'adaptive'/'pipelined' alias the "
                          "other serve tables so CI and local runs share one "
                          "entrypoint")
@@ -204,7 +240,8 @@ def main() -> None:
     scenario_table = {"sched": "serve_sched", "serve": "serve",
                       "tree": "serve_tree", "adaptive": "serve_adaptive",
                       "pipelined": "serve_pipelined",
-                      "kv-quant": "serve_kv_quant"}
+                      "kv-quant": "serve_kv_quant",
+                      "sharded": "serve_sharded"}
     scoped = args.tree or args.adaptive_tree or args.pipelined \
         or args.kv_quant or args.scenario
     names = args.only.split(",") if args.only else \
@@ -241,6 +278,8 @@ def main() -> None:
     if args.smoke_floor is not None:
         if args.scenario == "sched":
             section = "serve_sched"
+        elif args.scenario == "sharded":
+            section = "serve_sharded"
         elif args.pipelined or args.scenario == "pipelined":
             section = "serve_pipelined"
         elif args.kv_quant or args.scenario == "kv-quant":

@@ -23,7 +23,7 @@ import sys
 # tokens/sec is tabulated here (absence-tolerant like the others: a
 # previous artifact written before a section existed shows "new")
 CI_SECTIONS = ("tree", "tree_sampled", "tree_adaptive", "serve_sched",
-               "serve_pipelined", "kv_quant")
+               "serve_pipelined", "kv_quant", "serve_sharded")
 
 
 def load(path):

@@ -20,6 +20,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.data.pipeline import MarkovCorpus
 from repro.models import init_params
+from repro.serving.config import EngineConfig, SamplingParams
 from repro.serving.engine import Engine
 from repro.training import checkpoint
 
@@ -53,10 +54,11 @@ def main():
 
     outputs = {}
     for mode, dparams in [("ar", dp), ("vsd", dp), ("pard", pp)]:
-        eng = Engine(tp, tc, dparams, dc, mode=mode, k=8,
-                     max_batch=args.max_batch, max_len=512)
+        cfg = EngineConfig(mode=mode, k=8, max_batch=args.max_batch,
+                           max_len=512)
+        eng = Engine(tp, tc, dparams, dc, config=cfg)
         for r in reqs:
-            eng.submit(r, args.max_new)
+            eng.submit(r, params=SamplingParams(max_new=args.max_new))
         t0 = time.perf_counter()
         comps = eng.run()
         wall = time.perf_counter() - t0

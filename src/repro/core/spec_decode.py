@@ -529,9 +529,25 @@ class SpecDecoder:
                  k: int = 8, max_len: int = 2048, temperature: float = 0.0,
                  enc_out=None, draft_enc_out=None, kv_block_size: int = 0,
                  tree: Optional[TreeTemplate] = None,
-                 prefill_chunk: int = 8, kv_dtype: str = "bf16"):
+                 prefill_chunk: int = 8, kv_dtype: str = "bf16",
+                 mesh=None):
         self.tp, self.tc = target_params, target_cfg
         self.dp, self.dc = draft_params, draft_cfg
+        # sharded serving (DESIGN.md §11): the target is tensor-parallel
+        # over the mesh's "model" axis under the reduction-free serving
+        # rules; the draft replicates (it is small, and replicating avoids
+        # any cross-device work inside the latency-critical draft window).
+        self.mesh = mesh
+        if mesh is not None:
+            from ..sharding import specs as _specs
+            self.tp = jax.device_put(
+                self.tp,
+                _specs.to_named(
+                    _specs.param_specs(self.tp, mesh, serving=True), mesh))
+            if self.dp is not None:
+                self.dp = jax.device_put(
+                    self.dp,
+                    _specs.to_named(_specs.replicated_specs(self.dp), mesh))
         if tree is not None:
             # normalise: branching iterable / TreeTemplate / TemplateBank
             # all become a TemplateBank — ONE tree-step implementation
@@ -620,7 +636,18 @@ class SpecDecoder:
     def _fn(self, name, builder, donate=()):
         name = f"{name}@{self.kv_dtype}"
         if name not in self._jit_cache:
-            self._jit_cache[name] = jax.jit(builder, donate_argnums=donate)
+            fn = jax.jit(builder, donate_argnums=donate)
+            if self.mesh is not None:
+                # trace under the activation mesh so the forward's
+                # gather_activation hints bake into the computation
+                # (bitwise cross-mesh identity, DESIGN.md §11)
+                mesh = self.mesh
+
+                def fn(*a, _jitted=fn, **kw):
+                    from ..kernels import ops as _ops
+                    with _ops.activation_mesh(mesh):
+                        return _jitted(*a, **kw)
+            self._jit_cache[name] = fn
         return self._jit_cache[name]
 
     def _target_forward(self, tokens, caches, cache_pos, tables=None,

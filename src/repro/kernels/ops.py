@@ -6,6 +6,7 @@ kernels validate on this container; on TPU they compile natively).
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
@@ -22,6 +23,49 @@ def _interpret(flag):
     if flag is not None:
         return flag
     return jax.default_backend() == "cpu"
+
+
+# --------------------------------------------------------------------------
+# Activation sharding hints (sharded serving, DESIGN.md §11)
+#
+# The serving executor traces its fused steps under ``activation_mesh`` so
+# the forward can pin GSPMD's layout choices at the two places they would
+# otherwise break bitwise cross-mesh identity: a model-sharded activation
+# feeding a contraction (attention heads into wo, mlp hidden into the
+# down-projection, vocab-sharded logits into softmax/argmax) lets the
+# partitioner pick partial-sum reduction, whose accumulation order differs
+# from the single-device dot. ``gather_activation`` forces the all-gather
+# FIRST, so every contraction runs full-operand on every device and the
+# tokens match across mesh shapes exactly. With no mesh set (training, the
+# uniform generate_* paths, tier-1 tests) both helpers are identity.
+# --------------------------------------------------------------------------
+
+_ACTIVATION_MESH = None
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh):
+    """Trace-time context: the mesh ``gather_activation`` replicates onto
+    (None = the hints are no-ops). Set around jit TRACING — the hints bake
+    into the compiled computation, so the context only needs to wrap the
+    call sites that may trigger a (re)trace."""
+    global _ACTIVATION_MESH
+    prev, _ACTIVATION_MESH = _ACTIVATION_MESH, mesh
+    try:
+        yield
+    finally:
+        _ACTIVATION_MESH = prev
+
+
+def gather_activation(x):
+    """Constrain ``x`` to be fully replicated (all-gather any model-sharded
+    dim) before a contraction / normalization consumes it. Identity when no
+    activation mesh is set."""
+    if _ACTIVATION_MESH is None or x is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(_ACTIVATION_MESH,
+                                      jax.sharding.PartitionSpec()))
 
 
 def _pad_axis(x, axis, mult):

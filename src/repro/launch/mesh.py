@@ -1,34 +1,95 @@
-"""Production mesh construction.
+"""Mesh construction — production TPU shapes and host (CPU) test meshes.
 
 Single pod: TPU v5e-256 -> (16, 16) over ("data", "model").
 Multi-pod:  2 pods = 512 chips -> (2, 16, 16) over ("pod", "data", "model").
 
-A FUNCTION, not a module-level constant — importing this module never
-touches jax device state (the dry-run sets XLA_FLAGS before first jax init;
-tests and benches must keep seeing 1 device).
+Host meshes back the sharded serving tests/benchmarks: the CPU backend is
+forced to expose N placeholder devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set BEFORE the
+first jax backend init — ``ensure_host_devices`` does exactly that and
+nothing else), and ``make_host_mesh`` builds a ("data", "model") mesh over
+any leading subset of them, so one 4-device process can compare meshes of
+1, 2 and 4 side by side (the token-identity gate).
+
+Every constructor here is a FUNCTION, not a module-level constant —
+importing this module never touches jax device state (the dry-run sets
+XLA_FLAGS in its own process; tier-1 tests keep seeing 1 device).
 """
 from __future__ import annotations
 
+import os
+import re
+
 import jax
+import numpy as np
 
 # TPU v5e hardware constants used by the roofline analysis
 PEAK_FLOPS_BF16 = 197e12        # per chip
 HBM_BW = 819e9                  # bytes/s per chip
 ICI_BW = 50e9                   # bytes/s per link (~per-chip usable)
 
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def ensure_host_devices(n: int) -> None:
+    """Arrange for the CPU backend to expose ``n`` devices.
+
+    Appends ``--xla_force_host_platform_device_count=n`` to XLA_FLAGS when
+    no forced count is set yet. Must run before the first jax backend
+    init (device queries, array creation); once the backend is live the
+    device count is frozen, so a too-late call that cannot be honoured
+    raises instead of silently serving fewer devices.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if not re.search(rf"{_FORCE_FLAG}=(\d+)", flags):
+        os.environ["XLA_FLAGS"] = f"{flags} {_FORCE_FLAG}={int(n)}".strip()
+    # device_count() initializes the backend — with the flag just set when
+    # it was not live yet (the count comes out right), or frozen at
+    # whatever the first jax use saw (then a short count is unfixable)
+    if jax.device_count() < n:
+        raise RuntimeError(
+            f"need {n} host devices but the backend exposes "
+            f"{jax.device_count()} (XLA_FLAGS was read at first jax use; "
+            f"set {_FORCE_FLAG}={n} before starting the process)")
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    devs = np.asarray(jax.devices())
+    if devs.size != int(np.prod(shape)):
+        raise ValueError(
+            f"production mesh {shape} needs {int(np.prod(shape))} devices, "
+            f"found {devs.size}")
+    return jax.sharding.Mesh(devs.reshape(shape), axes)
 
 
-def make_host_mesh(model: int = 1):
-    """A tiny mesh over however many (real or placeholder) devices exist —
-    for tests that want sharded execution on CPU."""
-    n = jax.device_count()
-    data = n // model
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+def make_host_mesh(model: int = 1, data: int = None):
+    """A small ("data", "model") mesh over the FIRST ``data * model`` host
+    devices — for sharded serving/tests on CPU.
+
+    ``data=None`` spreads the remaining devices over the data axis (the
+    training default), raising when ``model`` does not divide the device
+    count — the previous version floor-divided and handed jax.make_mesh an
+    impossible shape. An explicit ``data`` builds exactly that shape and
+    supports submeshes (``data * model`` may be less than
+    ``jax.device_count()``, so one process compares mesh sizes 1/2/4).
+    """
+    devs = jax.devices()
+    if data is None:
+        if model < 1 or len(devs) % model:
+            raise ValueError(
+                f"model={model} must divide the {len(devs)} host devices "
+                f"(or pass data= explicitly for a submesh)")
+        data = len(devs) // model
+    if model < 1 or data < 1:
+        raise ValueError(f"mesh axes must be >= 1, got data={data} "
+                         f"model={model}")
+    need = data * model
+    if need > len(devs):
+        raise ValueError(
+            f"host mesh ({data}, {model}) needs {need} devices but only "
+            f"{len(devs)} exist; set XLA_FLAGS={_FORCE_FLAG}={need} "
+            f"before the first jax use (launch.mesh.ensure_host_devices)")
+    grid = np.asarray(devs[:need]).reshape(data, model)
+    return jax.sharding.Mesh(grid, ("data", "model"))

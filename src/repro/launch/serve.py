@@ -3,23 +3,20 @@ requests through it.
 
   PYTHONPATH=src python -m repro.launch.serve --target tiny-target \
       --draft tiny-draft --mode pard --requests 16 --max-new 48 \
-      [--target-ckpt a.npz --draft-ckpt b.npz]
+      [--target-ckpt a.npz --draft-ckpt b.npz] [--tp 2 --devices 4]
+
+Engine construction goes through the typed ``EngineConfig`` surface
+(``EngineConfig.from_args``) and per-request options through
+``SamplingParams`` — this launcher doubles as the usage example for both.
+``--tp N`` serves tensor-parallel over a (data=1, model=N) mesh; on a
+CPU-only host pair it with ``--devices M`` to force M host devices
+(DESIGN.md §11).
 
 Prints per-request latency and aggregate tokens/s — the same metrics as the
 paper's Tables 1-4 (benchmarks/ runs this machinery systematically).
 """
 import argparse
 import time
-
-import jax
-import numpy as np
-
-from repro.configs import get_config
-from repro.core.spec_decode import TemplateBank, TreeTemplate
-from repro.data.pipeline import MarkovCorpus
-from repro.models import init_params
-from repro.serving.engine import Engine
-from repro.training import checkpoint
 
 
 def main():
@@ -85,7 +82,30 @@ def main():
                     help="two-deep dispatch/harvest pipeline: step t+1 is "
                          "dispatched while step t is in flight (DESIGN.md "
                          "§9); token-identical to the synchronous loop")
+    ap.add_argument("--tp", type=int, default=1, metavar="N",
+                    help="tensor-parallel serving over a (data=1, model=N) "
+                         "device mesh: target params + KV heads shard, the "
+                         "draft replicates; tokens are identical to --tp 1 "
+                         "(DESIGN.md §11)")
+    ap.add_argument("--devices", type=int, default=None, metavar="M",
+                    help="force M host (CPU) devices before jax initializes "
+                         "— development/CI stand-in for real accelerators; "
+                         "must be >= --tp")
     args = ap.parse_args()
+
+    if args.devices:
+        # must run before anything touches the jax backend
+        from repro.launch.mesh import ensure_host_devices
+        ensure_host_devices(args.devices)
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.data.pipeline import MarkovCorpus
+    from repro.models import init_params
+    from repro.serving.engine import Engine, EngineConfig, SamplingParams
+    from repro.training import checkpoint
 
     tc = get_config(args.target)
     tp = init_params(jax.random.PRNGKey(0), tc)
@@ -99,26 +119,9 @@ def main():
         if args.draft_ckpt:
             dp = checkpoint.restore(args.draft_ckpt, dp)
 
-    tree = None
-    if args.adaptive_tree:
-        assert args.mode == "pard", "--adaptive-tree requires --mode pard"
-        assert args.tree is None, \
-            "--adaptive-tree selects its own bank; drop --tree"
-        tree = TemplateBank.default(args.k)
-    elif args.tree is not None:
-        assert args.mode == "pard", "--tree requires --mode pard"
-        tree = TreeTemplate.from_branching(
-            int(x) for x in args.tree.split(","))
-
-    eng = Engine(tp, tc, dp, dc, mode=args.mode, k=args.k,
-                 max_batch=args.max_batch, max_len=args.max_len,
-                 temperature=args.temperature, seed=args.seed,
-                 kv_layout=args.kv_layout, kv_block_size=args.kv_block_size,
-                 kv_num_blocks=args.kv_num_blocks, kv_dtype=args.kv_dtype,
-                 tree=tree,
-                 adaptive_tree=args.adaptive_tree,
-                 prefix_cache=args.prefix_cache,
-                 prefill_budget=args.prefill_budget)
+    config = EngineConfig.from_args(args)
+    tree = config.tree
+    eng = Engine(tp, tc, dp, dc, config=config)
 
     corpus = MarkovCorpus(vocab_size=tc.vocab_size, seed=0, determinism=2.0)
     rng = np.random.default_rng(args.seed)
@@ -141,8 +144,9 @@ def main():
                 np.asarray(corpus.prompts(rng, 1, 8)[0], np.int32)])
         else:
             prompt = corpus.prompts(rng, 1, args.prompt_len)[0]
-        eng.submit(prompt, args.max_new, temperature=temp)
-    comps = eng.run(pipelined=args.pipelined)
+        eng.submit(prompt, params=SamplingParams(max_new=args.max_new,
+                                                 temperature=temp))
+    comps = eng.run()                # pipelining comes from config.pipelined
     wall = time.perf_counter() - t0
 
     total = sum(c.generated for c in comps)
@@ -155,6 +159,8 @@ def main():
             else "]")
     if args.pipelined:
         label += "[pipelined]"
+    if args.tp > 1:
+        label += f"[tp={args.tp}]"
     print(f"\nmode={label} requests={len(comps)} "
           f"generated={total} tokens wall={wall:.2f}s "
           f"throughput={total / wall:.1f} tok/s "

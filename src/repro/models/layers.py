@@ -153,7 +153,14 @@ def mlp_apply(params, x: Array, act: str = "silu") -> Array:
             h = jax.nn.silu(g) * h
     else:
         h = jax.nn.gelu(h) if act == "gelu" else jax.nn.silu(h)
-    return jnp.einsum("...f,fd->...d", h, params["wo"].astype(x.dtype))
+    # sharded serving: all-gather the d_ff-sharded hidden BEFORE the
+    # down-projection contraction and the d_model-sharded output before the
+    # residual add (bitwise cross-mesh identity — DESIGN.md §11); both are
+    # no-ops without an activation mesh
+    from ..kernels import ops
+    h = ops.gather_activation(h)
+    y = jnp.einsum("...f,fd->...d", h, params["wo"].astype(x.dtype))
+    return ops.gather_activation(y)
 
 
 # ---------------------------------------------------------------------------
@@ -233,12 +240,14 @@ def moe_apply(params, x: Array, cfg, return_aux: bool = False,
     hi = jnp.einsum("Gecd,edf->Gecf", xe, params["we_i"].astype(x.dtype))
     hg = jnp.einsum("Gecd,edf->Gecf", xe, params["we_g"].astype(x.dtype))
     he = jax.nn.silu(hg) * hi
+    from ..kernels import ops
+    he = ops.gather_activation(he)   # d_ff-sharded: gather pre-contraction
     ye = jnp.einsum("Gecf,efd->Gecd", he, params["we_o"].astype(x.dtype))
     y = jnp.einsum("Ggec,Gecd->Ggd", comb, ye).reshape(n, d)
 
     if "shared" in params:
         y = y + mlp_apply(params["shared"], xt)
-    y = y.reshape(b, t, d)
+    y = ops.gather_activation(y).reshape(b, t, d)
 
     if return_aux:
         # Switch-style load balance loss

@@ -306,5 +306,10 @@ def forward(params, cfg: ModelConfig, tokens: Array, positions=None, *,
     hidden = x  # pre-final-norm features (EAGLE-style heads condition on these)
     x = norm(params["final_norm"], x)
     logits = L.unembed_apply(params["embed"], x, cfg)
+    # sharded serving: vocab-sharded logits feed softmax/argmax whose
+    # distributed reductions would break bitwise cross-mesh identity —
+    # all-gather them here (no-op without an activation mesh, DESIGN.md §11)
+    from ..kernels import ops
+    logits = ops.gather_activation(logits)
     return logits, (new_caches if caches is not None else None), \
         {"load_balance_loss": aux_total, "hidden": hidden}

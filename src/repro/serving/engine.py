@@ -53,102 +53,110 @@ layouts.
 """
 from __future__ import annotations
 
+import warnings
 from collections import deque
 from typing import Optional
 
-from ..core.spec_decode import SpecDecoder, TemplateBank
-from ..models.attention import KV_DTYPES
+from ..core.spec_decode import SpecDecoder
 from ..models.config import ModelConfig
 from . import kv_pool
+from .config import EngineConfig, SamplingParams  # noqa: F401  (re-export)
 from .executor import Executor
 from .scheduler import (Completion, Request, Scheduler,  # noqa: F401
                         TreeController)
 
 
 class Engine:
+    """Primary construction path: ``Engine(tp, tc, dp, dc, config=cfg)``
+    with a typed, validated ``EngineConfig`` (serving/config.py). The
+    historical loose-kwargs form still works — it builds the same config
+    through a DeprecationWarning shim — so existing callers keep running
+    while new code gets one construction surface."""
+
     def __init__(self, target_params, target_cfg: ModelConfig,
                  draft_params=None, draft_cfg: Optional[ModelConfig] = None, *,
-                 mode: str = "pard", k: int = 8, max_batch: int = 4,
-                 max_len: int = 1024, temperature: float = 0.0,
-                 eos_id: Optional[int] = None, seed: int = 0,
-                 kv_layout: str = "paged", kv_block_size: int = 64,
-                 kv_num_blocks: Optional[int] = None, tree=None,
-                 adaptive_tree: bool = False, tree_ewma: float = 0.2,
-                 tree_reselect_every: int = 4, prefix_cache: bool = False,
-                 prefill_chunk: int = 8, prefill_budget: Optional[int] = None,
-                 admit_window: int = 8, kv_dtype: str = "bf16"):
-        assert mode in ("ar", "vsd", "pard")
-        assert kv_layout in ("paged", "contiguous")
-        assert kv_dtype in KV_DTYPES, \
-            f"kv_dtype must be one of {sorted(KV_DTYPES)}"
-        assert tree is None or mode == "pard", \
-            "tree templates apply to the PARD draft path only"
-        if adaptive_tree:
-            assert mode == "pard", "adaptive trees require mode='pard'"
-            if tree is None:
-                tree = TemplateBank.default(k)
-            assert isinstance(tree, TemplateBank), \
-                "adaptive_tree selects from a TemplateBank"
-        self.adaptive = adaptive_tree
-        self.mode = mode
-        self.paged = kv_layout == "paged"
-        assert not (prefix_cache and not self.paged), \
-            "prefix_cache requires the paged KV layout"
-        self.k = k if mode != "ar" else 1
+                 config: Optional[EngineConfig] = None, **legacy):
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    "pass either config=EngineConfig(...) or the legacy "
+                    f"keyword arguments, not both (got {sorted(legacy)})")
+            warnings.warn(
+                "Engine(**kwargs) is deprecated; build an EngineConfig and "
+                "pass Engine(params, cfg, ..., config=engine_config)",
+                DeprecationWarning, stacklevel=2)
+            config = EngineConfig(**legacy)
+        elif config is None:
+            config = EngineConfig()
+        self.config = config
+        self.adaptive = config.adaptive_tree
+        self.mode = mode = config.mode
+        self.paged = config.paged
+        self.k = config.k if mode != "ar" else 1
         if mode == "ar":
             # the AR baseline never reads draft caches: drop the draft model
             # so admission skips its KV accounting entirely
             draft_params = draft_cfg = None
-        self.max_batch = max_batch
-        self.max_len = max_len
-        self.eos_id = eos_id
-        self.temperature = temperature   # default for submit(temperature=None)
+        self.max_batch = max_batch = config.max_batch
+        self.max_len = max_len = config.max_len
+        self.eos_id = config.eos_id
+        self.temperature = config.temperature  # submit(temperature=None)
+        self.mesh = config.mesh                # None = single-device serving
         self.dec = SpecDecoder(
             target_params, target_cfg, draft_params, draft_cfg, k=self.k,
-            max_len=max_len, temperature=temperature,
-            kv_block_size=kv_block_size if self.paged else 0,
-            tree=tree if mode == "pard" else None,
-            prefill_chunk=prefill_chunk, kv_dtype=kv_dtype)
+            max_len=max_len, temperature=config.temperature,
+            kv_block_size=config.kv_block_size if self.paged else 0,
+            tree=config.tree if mode == "pard" else None,
+            prefill_chunk=config.prefill_chunk, kv_dtype=config.kv_dtype,
+            mesh=config.mesh)
         self.k = self.dec.k          # a tree template overrides k (== depth)
         self.bank = self.dec.tree    # TemplateBank (or None: no tree)
         self.tc, self.dc = target_cfg, draft_cfg
 
         if self.paged:
-            nb = kv_num_blocks or kv_pool.default_num_blocks(
-                max_batch, max_len, kv_block_size)
-            self.alloc = kv_pool.BlockAllocator(nb, kv_block_size, max_batch,
-                                                max_len)
+            nb = config.kv_num_blocks or kv_pool.default_num_blocks(
+                max_batch, max_len, config.kv_block_size)
+            self.alloc = kv_pool.BlockAllocator(nb, config.kv_block_size,
+                                                max_batch, max_len)
         else:
             nb = None
             self.alloc = None
         self.ex = Executor(self.dec, target_cfg, draft_cfg, mode, max_batch,
-                           max_len, self.paged, kv_block_size, nb, seed,
-                           kv_dtype=kv_dtype)
-        ctrl = (TreeController(self.bank, max_batch, tree_ewma)
-                if adaptive_tree else None)
+                           max_len, self.paged, config.kv_block_size, nb,
+                           config.seed, kv_dtype=config.kv_dtype,
+                           mesh=config.mesh)
+        ctrl = (TreeController(self.bank, max_batch, config.tree_ewma)
+                if config.adaptive_tree else None)
         self.sched = Scheduler(
             self.dec, self.ex, self.alloc, mode=mode, max_batch=max_batch,
-            max_len=max_len, temperature=temperature, eos_id=eos_id,
-            bank=self.bank, ctrl=ctrl, prefix_cache=prefix_cache,
-            admit_window=admit_window, prefill_budget=prefill_budget,
-            tree_reselect_every=tree_reselect_every)
+            max_len=max_len, temperature=config.temperature,
+            eos_id=config.eos_id, bank=self.bank, ctrl=ctrl,
+            prefix_cache=config.prefix_cache,
+            admit_window=config.admit_window,
+            prefill_budget=config.prefill_budget,
+            tree_reselect_every=config.tree_reselect_every)
         self.ctrl = ctrl
         # contiguous rows are committed whole-pool up front, so their peak
         # IS the capacity — consumers read this field for either layout
         self.peak_kv_bytes_in_use = 0 if self.paged else self.ex.kv_capacity
 
     # ------------------------------------------------------------- public
-    def submit(self, prompt, max_new: int,
+    def submit(self, prompt, max_new: Optional[int] = None,
                temperature: Optional[float] = None,
-               tree_idx: Optional[int] = None) -> int:
-        """Queue a request. ``temperature`` overrides the engine default
-        for this request only (0 = greedy); ``tree_idx`` pins one bank
-        template (tree engines). Validation happens here, with the
-        request's OWN window slack in the paged layout — see
-        Scheduler.submit."""
-        return self.sched.submit(prompt, max_new, temperature, tree_idx)
+               tree_idx: Optional[int] = None,
+               params: Optional[SamplingParams] = None) -> int:
+        """Queue a request. Preferred: ``submit(prompt, params=
+        SamplingParams(max_new=.., temperature=.., seed=.., tree_idx=..))``.
+        The loose keywords still work (``temperature`` overrides the engine
+        default for this request only, 0 = greedy; ``tree_idx`` pins one
+        bank template) and fold into the same SamplingParams. Validation
+        happens here, with the request's OWN window slack in the paged
+        layout — see Scheduler.submit."""
+        return self.sched.submit(prompt, max_new, temperature, tree_idx,
+                                 params=params)
 
-    def run(self, max_steps: int = 100000, pipelined: bool = False):
+    def run(self, max_steps: int = 100000,
+            pipelined: Optional[bool] = None):
         """Drive the serve loop to completion. ``pipelined=False`` runs
         the depth-1 (synchronous) pipeline: each step is dispatched and
         its results processed back-to-back — the exact historical
@@ -156,7 +164,10 @@ class Engine:
         (with the mutations staged from step t-1's results) BEFORE step
         t's results are harvested, so host-side scheduling overlaps device
         execution (DESIGN.md §9). Both depths share this one loop; the
-        only difference is how many handles may be in flight."""
+        only difference is how many handles may be in flight.
+        ``pipelined=None`` defaults to ``config.pipelined``."""
+        if pipelined is None:
+            pipelined = self.config.pipelined
         sched, ex = self.sched, self.ex
         depth = 2 if pipelined else 1
         inflight = deque()

@@ -134,13 +134,18 @@ class Executor:
                  draft_cfg: Optional[ModelConfig], mode: str, max_batch: int,
                  max_len: int, paged: bool, kv_block_size: int,
                  num_blocks: Optional[int], seed: int,
-                 kv_dtype: str = "bf16"):
+                 kv_dtype: str = "bf16", mesh=None):
         self.dec = dec
         self.mode = mode
         self.tc, self.dc = target_cfg, draft_cfg
         self.max_batch, self.max_len = max_batch, max_len
         self.paged = paged
         self.kv_dtype = kv_dtype
+        # sharded serving (DESIGN.md §11): the target KV pools shard their
+        # head dim over the mesh's "model" axis, everything else in the
+        # DecodeState replicates, and the fused steps pin in/out shardings
+        # so donation reuses the sharded buffers tick over tick
+        self.mesh = mesh
         self._rng_base = jax.random.PRNGKey(seed)
         self._step_fns = {}
         self._tables_version = -1
@@ -154,7 +159,7 @@ class Executor:
         if paged:
             tcache = kv_pool.init_paged_caches(target_cfg, max_batch,
                                                num_blocks, kv_block_size,
-                                               dtype=cache_dtype)
+                                               dtype=cache_dtype, mesh=mesh)
             dcache = (kv_pool.init_paged_caches(draft_cfg, max_batch,
                                                 num_blocks, kv_block_size,
                                                 dtype=cache_dtype)
@@ -190,6 +195,32 @@ class Executor:
                       if dec.tree is not None else None),
             pf_pos=jnp.zeros((max_batch,), jnp.int32),
             pf_len=jnp.zeros((max_batch,), jnp.int32))
+        if mesh is not None:
+            self._state_sh = self._state_shardings()
+            self.state = jax.device_put(self.state, self._state_sh)
+        else:
+            self._state_sh = None
+
+    # ----------------------------------------------------------- sharding
+    def _state_shardings(self):
+        """NamedSharding pytree matching the DecodeState: target KV pools
+        shard KV heads over "model" (paged_cache_specs / cache_specs), the
+        DRAFT pools and every other leaf — tokens, counters, PRNG keys,
+        block tables — replicate. The draft replicates because it is small
+        and its latency-critical window must not pay any cross-device
+        traffic; block tables replicate because every device resolves the
+        same block indirection (DESIGN.md §11)."""
+        from ..sharding import specs as _specs
+        mesh = self.mesh
+        repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        if self.paged:
+            t_specs = _specs.paged_cache_specs(self.state.tcache, mesh)
+        else:
+            t_specs = _specs.cache_specs(self.state.tcache, self.tc, mesh,
+                                         self.max_batch)
+        base = jax.tree.map(lambda _: repl, self.state)
+        return dataclasses.replace(base,
+                                   tcache=_specs.to_named(t_specs, mesh))
 
     # ------------------------------------------------------------- tables
     def sync_tables(self, alloc: Optional[kv_pool.BlockAllocator]) -> None:
@@ -197,21 +228,32 @@ class Executor:
         before any forward that could consume them, so released rows' stale
         writes always route to the garbage block (kv_pool I4)."""
         if alloc is not None and self._tables_version != alloc.version:
-            self.state = dataclasses.replace(
-                self.state, tables=jnp.asarray(alloc.tables))
+            tables = jnp.asarray(alloc.tables)
+            if self.mesh is not None:
+                # every device resolves the same block indirection: the
+                # table is replicated host-side state (DESIGN.md §11)
+                tables = jax.device_put(tables, jax.sharding.NamedSharding(
+                    self.mesh, jax.sharding.PartitionSpec()))
+            self.state = dataclasses.replace(self.state, tables=tables)
             self._tables_version = alloc.version
 
     # ---------------------------------------------------------- row admin
     def admit_row(self, slot: int, prompt: np.ndarray, temperature: float,
-                  rid: int, tree_idx: int, pf_start: int) -> None:
+                  rid: int, tree_idx: int, pf_start: int,
+                  seed: Optional[int] = None) -> None:
         """Arm ``slot`` for a new request: prompt into ``gen``, counters to
         the committed state, prefill cursor at ``pf_start`` (``> 0`` when a
         cached prefix already covers the leading blocks). NO device forward
-        happens here — the fused steps prefill chunk by chunk."""
+        happens here — the fused steps prefill chunk by chunk. ``seed``
+        (SamplingParams.seed) pins the row's PRNG stream to the request
+        itself; None derives it from the engine seed and rid (the
+        historical behaviour)."""
         p = len(prompt)
         st = self.state
         gen_row = np.zeros((self.max_len,), np.int32)
         gen_row[:p] = prompt
+        row_key = (jax.random.fold_in(self._rng_base, rid) if seed is None
+                   else jax.random.PRNGKey(int(seed)))
         self.state = dataclasses.replace(
             st,
             gen=st.gen.at[slot].set(jnp.asarray(gen_row)),
@@ -219,8 +261,7 @@ class Executor:
             m=st.m.at[slot].set(p - 1),
             done=st.done.at[slot].set(False),
             temp=st.temp.at[slot].set(float(temperature)),
-            rngs=st.rngs.at[slot].set(
-                jax.random.fold_in(self._rng_base, rid)),
+            rngs=st.rngs.at[slot].set(row_key),
             tree_idx=(st.tree_idx if st.tree_idx is None else
                       st.tree_idx.at[slot].set(int(tree_idx))),
             pf_pos=st.pf_pos.at[slot].set(int(pf_start)),
@@ -327,10 +368,24 @@ class Executor:
         greedy_only = not any_sampled and self.mode != "ar"
         key = (variant, tree_sel is not None, greedy_only, self.kv_dtype)
         if key not in self._step_fns:
-            self._step_fns[key] = jax.jit(
-                self._build_fused(variant, apply_tree=tree_sel is not None,
-                                  greedy_only=greedy_only),
-                donate_argnums=(0,))
+            fused = self._build_fused(variant, apply_tree=tree_sel is not None,
+                                      greedy_only=greedy_only)
+            if self.mesh is None:
+                self._step_fns[key] = jax.jit(fused, donate_argnums=(0,))
+            else:
+                # pin shardings on BOTH sides of the fused step: the donated
+                # state's buffers keep their layout tick over tick (no
+                # resharding churn), and the step stays one device
+                # computation per dispatch. Scalars/handle outputs
+                # replicate; None outputs (mode="ar") take a None entry.
+                repl = jax.sharding.NamedSharding(
+                    self.mesh, jax.sharding.PartitionSpec())
+                aux = repl if self.mode != "ar" else None
+                self._step_fns[key] = jax.jit(
+                    fused, donate_argnums=(0,),
+                    in_shardings=(self._state_sh, repl, repl, repl),
+                    out_shardings=(self._state_sh, aux, aux, aux,
+                                   repl, repl, repl))
         b = self.max_batch
         retire_d = (jnp.zeros((b,), bool) if retire is None
                     else jnp.asarray(retire, bool))
@@ -338,8 +393,16 @@ class Executor:
                     else jnp.asarray(limits, jnp.int32))
         tree_d = (jnp.zeros((b,), jnp.int32) if tree_sel is None
                   else jnp.asarray(tree_sel, jnp.int32))
-        self.state, a, rank, rhist, live, n, gen = \
-            self._step_fns[key](self.state, retire_d, tree_d, limits_d)
+        if self.mesh is not None:
+            # trace under the activation mesh so the forward's
+            # gather_activation hints bake in (bitwise identity, §11)
+            from ..kernels import ops as _ops
+            with _ops.activation_mesh(self.mesh):
+                self.state, a, rank, rhist, live, n, gen = \
+                    self._step_fns[key](self.state, retire_d, tree_d, limits_d)
+        else:
+            self.state, a, rank, rhist, live, n, gen = \
+                self._step_fns[key](self.state, retire_d, tree_d, limits_d)
         return StepHandle(a=a, rank=rank, rhist=rhist, live=live, n=n,
                           gen=gen, n_draft=self._n_draft,
                           tree_sel=None if tree_sel is None

@@ -101,15 +101,18 @@ def _paged_layer_cache(cfg: ModelConfig, spec, num_blocks, block_size, batch,
 
 
 def init_paged_caches(cfg: ModelConfig, batch: int, num_blocks: int,
-                      block_size: int, dtype=jnp.bfloat16):
+                      block_size: int, dtype=jnp.bfloat16, mesh=None):
     """Cache pytree with the SAME structure as models.init_caches, but
     attention leaves are shared block pools [NB, bs, ...] (no batch dim);
     SSM states remain [batch, ...]. ``dtype`` accepts a kv_dtype name
     ("bf16"/"fp32"/"int8"/"fp8") or a jnp dtype; quantized dtypes add
-    sibling *_scale pool leaves."""
+    sibling *_scale pool leaves. ``mesh`` shards the pools for tensor-
+    parallel serving per sharding.specs.paged_cache_specs (KV heads over
+    the "model" axis, quant scales alongside, everything else replicated —
+    DESIGN.md §11)."""
     dtype = resolve_kv_dtype(dtype)
     plan = scan_plan(cfg)
-    return {
+    pool = {
         "prefix": [_paged_layer_cache(cfg, s, num_blocks, block_size, batch,
                                       dtype)
                    for s in plan.prefix],
@@ -119,6 +122,11 @@ def init_paged_caches(cfg: ModelConfig, batch: int, num_blocks: int,
             _paged_layer_cache(cfg, s, num_blocks, block_size, batch, dtype))
             for s in plan.period],
     }
+    if mesh is not None:
+        from ..sharding import specs as _specs
+        pool = jax.device_put(
+            pool, _specs.to_named(_specs.paged_cache_specs(pool, mesh), mesh))
+    return pool
 
 
 def prefill_cache_view(cfg: ModelConfig, pool, paged: bool):

@@ -52,17 +52,36 @@ import numpy as np
 
 from ..core.spec_decode import SpecDecoder, TemplateBank
 from . import kv_pool
+from .config import SamplingParams
 from .executor import NO_LIMIT, Executor, StepHandle, StepResult
 
 
 @dataclasses.dataclass
 class Request:
+    """One queued request. Per-request decode options travel as ONE
+    ``SamplingParams`` value object (serving/config.py); the flat
+    accessors below keep every consumer of the old loose fields
+    (admission, template selection, completion accounting) unchanged."""
     rid: int
     prompt: np.ndarray          # 1-D int32
-    max_new: int
-    temperature: Optional[float] = None   # None = the engine default
-    tree_idx: Optional[int] = None        # pinned bank template (None =
-    #                                       controller / template 0)
+    params: SamplingParams
+
+    @property
+    def max_new(self) -> int:
+        return self.params.max_new
+
+    @property
+    def temperature(self) -> Optional[float]:
+        return self.params.temperature    # None = the engine default
+
+    @property
+    def tree_idx(self) -> Optional[int]:
+        return self.params.tree_idx       # pinned bank template (None =
+        #                                   controller / template 0)
+
+    @property
+    def seed(self) -> Optional[int]:
+        return self.params.seed           # None = (engine seed, rid) stream
 
 
 @dataclasses.dataclass
@@ -229,9 +248,19 @@ class Scheduler:
             self.stats["tree_switches"] = 0
 
     # ------------------------------------------------------------- submit
-    def submit(self, prompt, max_new: int,
+    def submit(self, prompt, max_new: Optional[int] = None,
                temperature: Optional[float] = None,
-               tree_idx: Optional[int] = None) -> int:
+               tree_idx: Optional[int] = None,
+               params: Optional[SamplingParams] = None) -> int:
+        if params is None:
+            params = SamplingParams(max_new=max_new, temperature=temperature,
+                                    tree_idx=tree_idx)
+        else:
+            if temperature is not None or tree_idx is not None:
+                raise ValueError("pass per-request options inside "
+                                 "SamplingParams, not alongside it")
+            params = params.merged(max_new)
+        max_new, tree_idx = params.max_new, params.tree_idx
         prompt = np.asarray(prompt, np.int32)
         if tree_idx is not None and (
                 self.bank is None or not 0 <= tree_idx < len(self.bank)):
@@ -260,8 +289,7 @@ class Scheduler:
                 f"prompts also need >= 2 tokens")
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, prompt, max_new, temperature,
-                                  tree_idx))
+        self.queue.append(Request(rid, prompt, params))
         self._submit_t_of[rid] = time.perf_counter()
         return rid
 
@@ -362,7 +390,7 @@ class Scheduler:
                         self.ex.copy_block(*pair)
         t = self.temperature if req.temperature is None else req.temperature
         self.ex.admit_row(slot, req.prompt, float(t), req.rid, int(tmpl),
-                          pf_start)
+                          pf_start, seed=req.seed)
         # admission fully reinitializes the row (the eager admit_row writes
         # enqueue AFTER any in-flight step, so its trailing writes to this
         # slot land first), making a still-staged retire of the previous

@@ -64,6 +64,46 @@ PARAM_RULES: Dict[str, List[Tuple[Optional[str], ...]]] = {
 # by rank below.
 MLP_WO_RULES = [("tp", None)]
 
+# Serving (inference) ruleset: REDUCTION-FREE tensor parallelism. Every
+# candidate shards an OUTPUT dim of its projection only, and infeasible
+# leaves replicate instead of falling back to a contraction dim — so GSPMD
+# never splits a dot's contraction across devices and never inserts a
+# partial-sum reduce. Each output element is then computed by exactly one
+# device with full-operand accumulation order, which (together with the
+# all-gather hints in models/) makes the forward BITWISE IDENTICAL across
+# mesh shapes — the serving engine's token-identity guarantee (DESIGN.md
+# §11). Training keeps PARAM_RULES: there the Megatron-style contraction
+# sharding halves the activation traffic and losslessness is not a gate.
+SERVING_PARAM_RULES: Dict[str, List[Tuple[Optional[str], ...]]] = {
+    "embedding": [("vocab", None)],
+    "unembed": [("vocab", None)],
+    "wq": [(None, "tp", None)],
+    "wk": [(None, "tp", None)],
+    "wv": [(None, "tp", None)],
+    "wo": [(None, None, "tp")],          # attention 3-D: shard d_model out
+    "bq": [(None, None)], "bk": [(None, None)], "bv": [(None, None)],
+    "q_norm": [(None,)], "k_norm": [(None,)],
+    "w_dq": [(None, "tp")],
+    "w_uq": [(None, "tp", None)],
+    "w_dkv": [(None, None)],
+    "w_uk": [(None, "tp", None)],
+    "w_uv": [(None, "tp", None)],
+    "q_lora_norm": [(None,)], "kv_lora_norm": [(None,)],
+    "wi": [(None, "tp")], "wg": [(None, "tp")],
+    "we_i": [(None, None, "tp")],
+    "we_g": [(None, None, "tp")],
+    "we_o": [(None, None, "tp")],
+    "router": [(None, None)],
+    "in_proj": [(None, "tp")],
+    "conv_w": [(None, None)], "conv_b": [(None,)],
+    "A_log": [(None,)], "D": [(None,)], "dt_bias": [(None,)],
+    "ssm_norm": [(None,)],
+    "out_proj": [(None, "tp")],
+    "scale": [(None,)], "bias": [(None,)],
+    "gate": [()],
+}
+SERVING_MLP_WO_RULES = [(None, "tp")]
+
 AXIS_MAP = {"vocab": "model", "tp": "model"}
 
 
@@ -78,11 +118,11 @@ def _feasible(shape, cand, mesh_shape) -> bool:
 
 
 def _spec_for_leaf(path: str, shape, mesh: Mesh, fsdp: bool,
-                   fsdp_axes=("data",)) -> P:
+                   fsdp_axes=("data",), rule_set=None, mlp_wo=None) -> P:
     name = path.rsplit("/", 1)[-1]
-    rules = PARAM_RULES.get(name)
+    rules = (PARAM_RULES if rule_set is None else rule_set).get(name)
     if name == "wo" and len(shape) == 2:
-        rules = MLP_WO_RULES
+        rules = MLP_WO_RULES if mlp_wo is None else mlp_wo
     if rules is None:
         rules = [tuple(None for _ in shape)]
     mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -134,25 +174,25 @@ def _map_with_path(tree, fn, prefix=""):
 
 def param_specs(params, mesh: Mesh, *, fsdp: bool = False,
                 fsdp_axes: Sequence[str] = ("data",),
-                expert_parallel: bool = False):
+                expert_parallel: bool = False, serving: bool = False):
     """PartitionSpec tree matching ``params`` (arrays or ShapeDtypeStructs).
 
     ``expert_parallel=True`` flips the MoE rule to shard the experts dim
-    over the model axis (the §Perf experiment)."""
-    global PARAM_RULES
-    rules = PARAM_RULES
+    over the model axis (the §Perf experiment). ``serving=True`` selects
+    the reduction-free ``SERVING_PARAM_RULES`` (output-dim tensor
+    parallelism only — the bitwise-identity ruleset the serving engine
+    shards its target with; see DESIGN.md §11)."""
+    rules = SERVING_PARAM_RULES if serving else PARAM_RULES
+    mlp_wo = SERVING_MLP_WO_RULES if serving else MLP_WO_RULES
     if expert_parallel:
-        rules = dict(PARAM_RULES)
+        rules = dict(rules)
         rules["we_i"] = [("tp", None, None), (None, None, "tp")]
         rules["we_g"] = [("tp", None, None), (None, None, "tp")]
         rules["we_o"] = [("tp", None, None), (None, "tp", None)]
-    old, PARAM_RULES = PARAM_RULES, rules
-    try:
-        return _map_with_path(
-            params, lambda p, leaf: _spec_for_leaf(p, leaf.shape, mesh, fsdp,
-                                                   tuple(fsdp_axes)))
-    finally:
-        PARAM_RULES = old
+    return _map_with_path(
+        params, lambda p, leaf: _spec_for_leaf(p, leaf.shape, mesh, fsdp,
+                                               tuple(fsdp_axes), rules,
+                                               mlp_wo))
 
 
 def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -207,7 +247,15 @@ def cache_specs(caches, cfg, mesh: Mesh, batch: int,
             spec[off + 1] = seq_ax
             if shape[off + 2] % mesh_shape.get("model", 1) == 0:
                 spec[off + 2] = "model"
+        elif name in ("k_scale", "v_scale"):   # [.., B, S, Hkv] (quant)
+            spec[off] = lead
+            spec[off + 1] = seq_ax
+            if shape[off + 2] % mesh_shape.get("model", 1) == 0:
+                spec[off + 2] = "model"
         elif name == "ckv":              # [.., B, S, width]
+            spec[off] = lead
+            spec[off + 1] = seq_ax
+        elif name == "ckv_scale":        # [.., B, S] (quant MLA)
             spec[off] = lead
             spec[off + 1] = seq_ax
         elif name == "conv":             # [.., B, W-1, C]
@@ -221,6 +269,46 @@ def cache_specs(caches, cfg, mesh: Mesh, batch: int,
         return P(*spec)
 
     return _map_with_path(caches, leaf_spec)
+
+
+def paged_cache_specs(caches, mesh: Mesh):
+    """PartitionSpec tree for the PAGED pool layout (serving/kv_pool.py).
+
+    Attention leaves are shared block pools with no batch dim —
+    ``[.., NB, bs, Hkv, hd]`` (scanned layers carry a leading repeats dim)
+    — so the only shardable axis is the KV-head one, split over "model"
+    when divisible (aligned with the head-sharded k/v projections of
+    ``SERVING_PARAM_RULES``: the paged scatter and the per-head attention
+    stay device-local). Quant ``*_scale`` siblings shard identically on
+    their head dim; MLA ``ckv``/``ckv_scale`` pools and the block-size
+    axis replicate; SSM leaves stay ``[B, ...]`` and replicate (they are
+    O(1) per row). The block TABLES are host np arrays pushed replicated —
+    every device must resolve every block index (DESIGN.md §11).
+    """
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = mesh_shape.get("model", 1)
+
+    def leaf_spec(path, leaf):
+        shape = leaf.shape
+        name = path.rsplit("/", 1)[-1]
+        scanned = "/scan/" in path or path.startswith("/scan")
+        off = 1 if scanned else 0        # leading repeats dim -> None
+        spec = [None] * len(shape)
+        if name in ("k", "v") and shape[off + 2] % model == 0:
+            spec[off + 2] = "model"      # [.., NB, bs, Hkv, hd]
+        elif name in ("k_scale", "v_scale") and shape[off + 2] % model == 0:
+            spec[off + 2] = "model"      # [.., NB, bs, Hkv]
+        # ckv / ckv_scale / conv / ssm: replicated
+        return P(*spec)
+
+    return _map_with_path(caches, leaf_spec)
+
+
+def replicated_specs(tree):
+    """A PartitionSpec tree replicating every leaf of ``tree`` — the
+    serving draft model's sharding (small enough to live whole on every
+    device; replication keeps its K sequential forwards collective-free)."""
+    return _map_with_path(tree, lambda p, leaf: P())
 
 
 def to_named(tree_specs, mesh: Mesh):

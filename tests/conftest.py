@@ -2,7 +2,13 @@ import os
 
 # Tests must see exactly ONE device (the dry-run sets 512 in its own
 # process); keep any user XLA_FLAGS out of the test environment.
+# Exception: REPRO_HOST_DEVICES=N opts a test run into N forced host
+# devices (the sharded-serving suite in CI's shard-gate job) — set by us
+# AFTER the pop so stray user flags still never leak in.
 os.environ.pop("XLA_FLAGS", None)
+_n = os.environ.get("REPRO_HOST_DEVICES")
+if _n:
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={_n}"
 
 import jax
 import numpy as np
