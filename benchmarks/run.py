@@ -35,7 +35,13 @@ pool-byte reduction vs fp32 (normally 2.0) with a fixed secondary
 for ``--scenario sharded`` it applies to the tp=4 per-chip scaling
 efficiency (loose on CPU-emulated collectives; token identity across
 mesh shapes is always required — "serve_sharded" section, shard-gate
-job; run under XLA_FLAGS=--xla_force_host_platform_device_count=4).
+job; run under XLA_FLAGS=--xla_force_host_platform_device_count=4),
+and for ``--scenario dp`` it applies to the dp=2 / dp=1 aggregate
+tokens/sec ratio (loose on single-core hosts where the replicas'
+device work serializes — the >= 1.5x production expectation presumes
+parallel-capable runners; token-set identity between dp=2 and dp=1 is
+always required — "serve_dp" section, dp-gate job; run under
+XLA_FLAGS=--xla_force_host_platform_device_count=4).
 
 The roofline/dry-run numbers (deliverable e/g) are produced separately by
 ``python -m repro.launch.dryrun --all --both-meshes`` and summarised with
@@ -69,7 +75,8 @@ def check_floor(floor: float, section: str = "tree") -> int:
                 "serve_sched": "--scenario sched",
                 "serve_pipelined": "--pipelined",
                 "kv_quant": "--kv-quant",
-                "serve_sharded": "--scenario sharded"}.get(section, "--tree")
+                "serve_sharded": "--scenario sharded",
+                "serve_dp": "--scenario dp"}.get(section, "--tree")
         print(f"smoke-floor: no '{section}' section in {common.BENCH_SERVE}"
               f" — run with {flag}", file=sys.stderr)
         return 2
@@ -150,6 +157,39 @@ def check_floor(floor: float, section: str = "tree") -> int:
                   f"{tree.get(name, {}).get('tokens_per_sec')} "
                   f"{'recorded' if ok else 'MISSING'}", file=sys.stderr)
         return 1 if failed else 0
+    if section == "serve_dp":
+        # the data-parallel serving gate: the benchmark must have asserted
+        # token-SET identity between dp=2 and dp=1 for the same request
+        # set, the dp=2/dp=1 aggregate tok/s ratio must clear the (loose,
+        # single-core hosts serialize the replicas) floor, the warm
+        # cross-replica prefix hit rate must have been recorded, and both
+        # dp sizes must have recorded a tok/s
+        gate = tree.get("gate", {})
+        ok = gate.get("token_set_identical") is True
+        failed |= not ok
+        print(f"smoke-floor: serve_dp token_set_identical="
+              f"{gate.get('token_set_identical')} "
+              f"{'ok' if ok else 'MISSING/FAIL'}", file=sys.stderr)
+        ratio = gate.get("aggregate_tps_ratio_dp2_vs_dp1")
+        ok = ratio is not None and ratio >= floor
+        failed |= not ok
+        print(f"smoke-floor: serve_dp dp2/dp1 aggregate tok/s="
+              f"{ratio if ratio is None else f'{ratio:.3f}'} "
+              f"{'>=' if ok else '< FAIL'} {floor} "
+              f"(dp1={gate.get('dp1_tps')} dp2={gate.get('dp2_tps')} "
+              f"tok/s)", file=sys.stderr)
+        hit = gate.get("warm_cross_replica_prefix_hit_rate")
+        ok = hit is not None
+        failed |= not ok
+        print(f"smoke-floor: serve_dp warm_cross_replica_prefix_hit_rate="
+              f"{hit} {'recorded' if ok else 'MISSING'}", file=sys.stderr)
+        for name in ("dp1", "dp2"):
+            ok = tree.get(name, {}).get("tokens_per_sec") is not None
+            failed |= not ok
+            print(f"smoke-floor: serve_dp.{name} tokens_per_sec="
+                  f"{tree.get(name, {}).get('tokens_per_sec')} "
+                  f"{'recorded' if ok else 'MISSING'}", file=sys.stderr)
+        return 1 if failed else 0
     if section == "serve_sched":
         hit = tree.get("cached", {}).get("prefix_hit_rate")
         ok = hit is not None and hit >= floor
@@ -196,14 +236,19 @@ def main() -> None:
                          "int8 tok/s >= 0.95x fp32)")
     ap.add_argument("--scenario", default=None,
                     choices=["sched", "serve", "tree", "adaptive",
-                             "pipelined", "kv-quant", "sharded"],
+                             "pipelined", "kv-quant", "sharded", "dp"],
                     help="named serving scenario: 'sched' runs the "
                          "scheduler/prefix-cache benchmark (serve_sched, "
                          "records the 'serve_sched' BENCH_serve section); "
                          "'sharded' runs the tensor-parallel mesh benchmark "
                          "(serve_sharded: submeshes of 1/2/4 forced host "
                          "devices, token identity asserted, per-chip "
-                         "scaling recorded under 'serve_sharded'); "
+                         "scaling recorded under 'serve_sharded'); 'dp' "
+                         "runs the data-parallel replica benchmark "
+                         "(serve_dp: dp=1 vs dp=2 on 4 forced host "
+                         "devices, token-set identity asserted, aggregate "
+                         "tok/s ratio + warm cross-replica prefix hit "
+                         "rate recorded under 'serve_dp'); "
                          "'serve'/'tree'/'adaptive'/'pipelined' alias the "
                          "other serve tables so CI and local runs share one "
                          "entrypoint")
@@ -241,7 +286,7 @@ def main() -> None:
                       "tree": "serve_tree", "adaptive": "serve_adaptive",
                       "pipelined": "serve_pipelined",
                       "kv-quant": "serve_kv_quant",
-                      "sharded": "serve_sharded"}
+                      "sharded": "serve_sharded", "dp": "serve_dp"}
     scoped = args.tree or args.adaptive_tree or args.pipelined \
         or args.kv_quant or args.scenario
     names = args.only.split(",") if args.only else \
@@ -280,6 +325,8 @@ def main() -> None:
             section = "serve_sched"
         elif args.scenario == "sharded":
             section = "serve_sharded"
+        elif args.scenario == "dp":
+            section = "serve_dp"
         elif args.pipelined or args.scenario == "pipelined":
             section = "serve_pipelined"
         elif args.kv_quant or args.scenario == "kv-quant":

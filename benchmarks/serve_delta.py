@@ -11,7 +11,9 @@ other sections in the file are committed dev-machine numbers, and showing
 them here would present a repo-file diff as a CI-measured perf delta.
 Tolerates an absent/corrupt previous file (first run on a repo, expired
 artifact): prints a note and exits 0 so the job never fails on missing
-history.
+history. Expected CI sections absent from the CURRENT trajectory are
+named in a trailing note (not silently dropped) so a gate job that
+failed to persist its section is visible in the summary.
 """
 import json
 import sys
@@ -23,7 +25,7 @@ import sys
 # tokens/sec is tabulated here (absence-tolerant like the others: a
 # previous artifact written before a section existed shows "new")
 CI_SECTIONS = ("tree", "tree_sampled", "tree_adaptive", "serve_sched",
-               "serve_pipelined", "kv_quant", "serve_sharded")
+               "serve_pipelined", "kv_quant", "serve_sharded", "serve_dp")
 
 
 def load(path):
@@ -51,7 +53,15 @@ def main() -> int:
         return 0
     print("| benchmark | previous tok/s | current tok/s | delta |")
     print("|---|---:|---:|---:|")
+    skipped = []
     for section in CI_SECTIONS:
+        if section not in cur:
+            # name what's absent instead of silently tolerating it — an
+            # expected CI section missing from the current trajectory means
+            # a gate job didn't run (or didn't persist), and that should be
+            # visible in the summary rather than a quietly shorter table
+            skipped.append(section)
+            continue
         for mode in sorted(cur.get(section, {})):
             c = cur[section][mode].get("tokens_per_sec")
             if c is None:
@@ -64,6 +74,9 @@ def main() -> int:
                 print(f"| {section}.{mode} | {p:.1f} | {c:.1f} | {pct:+.1f}% |")
             else:
                 print(f"| {section}.{mode} | {p:.1f} | {c:.1f} | n/a |")
+    if skipped:
+        print(f"\n_sections absent from the current trajectory (not "
+              f"re-measured by this run): {', '.join(skipped)}_")
     return 0
 
 

@@ -67,6 +67,7 @@ def fold_row_keys(keys: Array, tag: int) -> Array:
 
 
 def row_uniform(keys: Array) -> Array:
+    """One U(0, 1) draw per row: keys [B, 2] -> [B] f32."""
     return jax.vmap(lambda k: jax.random.uniform(k, ()))(keys)
 
 

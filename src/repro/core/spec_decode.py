@@ -206,6 +206,10 @@ class TreeTemplate:
 
     @staticmethod
     def from_branching(branching) -> "TreeTemplate":
+        """Build the template from per-depth branching factors: every
+        node at depth d-1 expands into one child per top-k rank
+        ``c < branching[d-1]`` (DESIGN.md §6). Slot 0 is the root; the
+        packed ancestor bitmask caps a template at 32 slots."""
         branching = tuple(int(x) for x in branching)
         assert branching and all(x >= 1 for x in branching), branching
         parent, depth, choice = [-1], [0], [0]
@@ -241,18 +245,22 @@ class TreeTemplate:
 
     @property
     def num_slots(self) -> int:
+        """Window slots the packed tree occupies (1 root + num_nodes)."""
         return len(self.parent)          # 1 + num_nodes
 
     @property
     def num_nodes(self) -> int:
+        """Candidate nodes (slots minus the root)."""
         return len(self.parent) - 1
 
     @property
     def max_depth(self) -> int:
+        """Deepest candidate depth — the flat-K analogue of K."""
         return len(self.branching)
 
     @property
     def is_chain(self) -> bool:
+        """True for a single-branch template (the flat-K degenerate)."""
         return all(b == 1 for b in self.branching)
 
 
@@ -281,6 +289,9 @@ class TemplateBank:
 
     @staticmethod
     def from_templates(templates) -> "TemplateBank":
+        """Pack templates (TreeTemplates or raw branching tuples) into
+        one bank of stacked per-slot arrays; all templates must share one
+        depth so a row can re-select without reshaping the window."""
         templates = tuple(
             t if isinstance(t, TreeTemplate) else
             TreeTemplate.from_branching(t) for t in templates)
@@ -338,14 +349,17 @@ class TemplateBank:
 
     @property
     def max_depth(self) -> int:
+        """The bank's single shared template depth."""
         return self.templates[0].max_depth
 
     @property
     def max_slots(self) -> int:
+        """Widest template's slot count — the packed window width."""
         return int(self.parent.shape[1])
 
     @property
     def max_branching(self) -> int:
+        """Widest per-depth branching across the bank (child-map width)."""
         return int(self.child_map.shape[2])
 
     @property
@@ -503,6 +517,10 @@ def prefill_row(params, cfg: ModelConfig, toks: Array, plen, caches, *,
 
 @dataclasses.dataclass
 class SpecStats:
+    """Aggregate statistics for one ``generate_*`` run: forward counts,
+    acceptance histogram/rates, and wall-clock — the numbers the
+    benchmarks and the paper's tables report."""
+
     iterations: int
     tokens_generated: int
     draft_forwards: int
@@ -736,6 +754,8 @@ class SpecDecoder:
             pf_len=jnp.zeros((b,), jnp.int32))
 
     def generate_ar(self, prompt: Array, max_new: int, seed: int = 0):
+        """Plain autoregressive decoding (the losslessness reference):
+        ``[B, P] -> ([B, P + max_new] tokens, SpecStats)``."""
         b, p = prompt.shape
         state = self.init_state(prompt, p + max_new + 1, with_draft=False,
                                 seed=seed)

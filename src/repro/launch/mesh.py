@@ -93,3 +93,25 @@ def make_host_mesh(model: int = 1, data: int = None):
             f"before the first jax use (launch.mesh.ensure_host_devices)")
     grid = np.asarray(devs[:need]).reshape(data, model)
     return jax.sharding.Mesh(grid, ("data", "model"))
+
+
+def replica_submeshes(mesh):
+    """Split a ("data", "model") mesh into one (1, model) submesh per data
+    row — the per-replica meshes of data-parallel serving (DESIGN.md §12).
+
+    Each engine replica runs its tensor-parallel program on its OWN row of
+    devices: replica ``r`` gets ``mesh.devices[r:r+1, :]``, so replica
+    state (DecodeState leaves, KV pools) is device_put onto that row and
+    replicas never share a device. The data axis itself carries no
+    collective — replicas are independent programs behind one host-side
+    scheduler — which is why the split is a plain device reshape rather
+    than a mesh axis the compiled steps ever see.
+    """
+    if "data" not in mesh.axis_names or "model" not in mesh.axis_names:
+        raise ValueError(
+            f"replica_submeshes needs ('data', 'model') axes, got "
+            f"{mesh.axis_names}")
+    devs = np.asarray(mesh.devices).reshape(
+        mesh.shape["data"], mesh.shape["model"])
+    return [jax.sharding.Mesh(devs[r:r + 1, :], ("data", "model"))
+            for r in range(mesh.shape["data"])]

@@ -8,9 +8,10 @@ requests through it.
 Engine construction goes through the typed ``EngineConfig`` surface
 (``EngineConfig.from_args``) and per-request options through
 ``SamplingParams`` — this launcher doubles as the usage example for both.
-``--tp N`` serves tensor-parallel over a (data=1, model=N) mesh; on a
-CPU-only host pair it with ``--devices M`` to force M host devices
-(DESIGN.md §11).
+``--tp N`` serves tensor-parallel over a (data=1, model=N) mesh
+(DESIGN.md §11); ``--dp N`` serves N data-parallel engine replicas behind
+one scheduler (DESIGN.md §12); on a CPU-only host pair either with
+``--devices M`` to force M >= tp * dp host devices.
 
 Prints per-request latency and aggregate tokens/s — the same metrics as the
 paper's Tables 1-4 (benchmarks/ runs this machinery systematically).
@@ -87,10 +88,16 @@ def main():
                          "device mesh: target params + KV heads shard, the "
                          "draft replicates; tokens are identical to --tp 1 "
                          "(DESIGN.md §11)")
+    ap.add_argument("--dp", type=int, default=1, metavar="N",
+                    help="data-parallel serving: N independent engine "
+                         "replicas on a (data=N, model=tp) mesh behind one "
+                         "scheduler, routed prefix-affinity-then-least-"
+                         "loaded; tokens are identical to --dp 1 "
+                         "(DESIGN.md §12). --kv-num-blocks is per replica")
     ap.add_argument("--devices", type=int, default=None, metavar="M",
                     help="force M host (CPU) devices before jax initializes "
                          "— development/CI stand-in for real accelerators; "
-                         "must be >= --tp")
+                         "must be >= --tp * --dp")
     args = ap.parse_args()
 
     if args.devices:
@@ -161,6 +168,8 @@ def main():
         label += "[pipelined]"
     if args.tp > 1:
         label += f"[tp={args.tp}]"
+    if args.dp > 1:
+        label += f"[dp={args.dp}]"
     print(f"\nmode={label} requests={len(comps)} "
           f"generated={total} tokens wall={wall:.2f}s "
           f"throughput={total / wall:.1f} tok/s "

@@ -91,11 +91,15 @@ class EngineConfig:
     prefill_budget: Optional[int] = None
     admit_window: int = 8
     pipelined: bool = False          # default for Engine.run()
-    # -- sharded serving (DESIGN.md §11) --------------------------------
-    # tp > 1 without an explicit mesh builds a (data=1, model=tp) host
-    # mesh; an explicit mesh must carry a "model" axis of size tp (when
-    # tp was given) and wins otherwise.
+    # -- sharded serving (DESIGN.md §11, §12) ---------------------------
+    # tp > 1 or dp > 1 without an explicit mesh builds a (data=dp,
+    # model=tp) host mesh; an explicit mesh must carry a "model" axis of
+    # size tp and a "data" axis of size dp (when they were given) and
+    # wins otherwise. dp = N serves N independent engine replicas — each
+    # with its own executor, DecodeState and KV pool on its own mesh row
+    # — behind the one host-side scheduler (DESIGN.md §12).
     tp: int = 1
+    dp: int = 1
     mesh: Any = None                 # jax.sharding.Mesh
 
     def __post_init__(self):
@@ -132,9 +136,11 @@ class EngineConfig:
                              f"got {self.tree_ewma}")
         if self.tp < 1:
             raise ValueError(f"tp must be >= 1, got {self.tp}")
-        if self.mesh is None and self.tp > 1:
+        if self.dp < 1:
+            raise ValueError(f"dp must be >= 1, got {self.dp}")
+        if self.mesh is None and (self.tp > 1 or self.dp > 1):
             from ..launch import mesh as mesh_mod
-            self.mesh = mesh_mod.make_host_mesh(model=self.tp, data=1)
+            self.mesh = mesh_mod.make_host_mesh(model=self.tp, data=self.dp)
         if self.mesh is not None:
             if "model" not in self.mesh.axis_names:
                 raise ValueError("the serving mesh needs a 'model' axis "
@@ -143,6 +149,15 @@ class EngineConfig:
                 raise ValueError(
                     f"mesh 'model' axis has {self.mesh.shape['model']} "
                     f"devices but tp={self.tp}")
+            if self.dp > 1:
+                if "data" not in self.mesh.axis_names:
+                    raise ValueError(
+                        "dp > 1 needs a mesh with a 'data' axis "
+                        f"(got axes {self.mesh.axis_names})")
+                if self.mesh.shape["data"] != self.dp:
+                    raise ValueError(
+                        f"mesh 'data' axis has {self.mesh.shape['data']} "
+                        f"devices but dp={self.dp}")
 
     @property
     def paged(self) -> bool:

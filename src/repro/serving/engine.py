@@ -102,43 +102,66 @@ class Engine:
         self.eos_id = config.eos_id
         self.temperature = config.temperature  # submit(temperature=None)
         self.mesh = config.mesh                # None = single-device serving
-        self.dec = SpecDecoder(
+        # data-parallel replicas (DESIGN.md §12): dp > 1 splits the mesh
+        # into one (1, tp) row per replica and builds one (SpecDecoder,
+        # BlockAllocator, Executor) triple on each — independent device
+        # programs with their own DecodeState and KV pool behind the one
+        # host-side scheduler. dp=1 is the historical single-triple path.
+        self.dp = dp = config.dp
+        if dp > 1:
+            from ..launch.mesh import replica_submeshes
+            meshes = replica_submeshes(config.mesh)
+        else:
+            meshes = [config.mesh]
+        decs = [SpecDecoder(
             target_params, target_cfg, draft_params, draft_cfg, k=self.k,
             max_len=max_len, temperature=config.temperature,
             kv_block_size=config.kv_block_size if self.paged else 0,
             tree=config.tree if mode == "pard" else None,
             prefill_chunk=config.prefill_chunk, kv_dtype=config.kv_dtype,
-            mesh=config.mesh)
+            mesh=m) for m in meshes]
+        self.dec = decs[0]
         self.k = self.dec.k          # a tree template overrides k (== depth)
         self.bank = self.dec.tree    # TemplateBank (or None: no tree)
         self.tc, self.dc = target_cfg, draft_cfg
 
         if self.paged:
+            # kv_num_blocks is PER REPLICA: each replica owns a full pool
             nb = config.kv_num_blocks or kv_pool.default_num_blocks(
                 max_batch, max_len, config.kv_block_size)
-            self.alloc = kv_pool.BlockAllocator(nb, config.kv_block_size,
-                                                max_batch, max_len)
+            # the shared cross-replica prefix index admission routes over;
+            # pointless (and absent) with a single replica
+            self.prefix_index = kv_pool.PrefixIndex() if dp > 1 else None
+            allocs = [kv_pool.BlockAllocator(
+                nb, config.kv_block_size, max_batch, max_len, replica=r,
+                prefix_index=self.prefix_index) for r in range(dp)]
         else:
             nb = None
-            self.alloc = None
-        self.ex = Executor(self.dec, target_cfg, draft_cfg, mode, max_batch,
-                           max_len, self.paged, config.kv_block_size, nb,
-                           config.seed, kv_dtype=config.kv_dtype,
-                           mesh=config.mesh)
-        ctrl = (TreeController(self.bank, max_batch, config.tree_ewma)
+            allocs = [None] * dp
+            self.prefix_index = None
+        self.alloc = allocs[0]
+        exs = [Executor(decs[r], target_cfg, draft_cfg, mode, max_batch,
+                        max_len, self.paged, config.kv_block_size, nb,
+                        config.seed, kv_dtype=config.kv_dtype,
+                        mesh=meshes[r], replica=r) for r in range(dp)]
+        self.ex = exs[0]
+        ctrl = (TreeController(self.bank, max_batch * dp, config.tree_ewma)
                 if config.adaptive_tree else None)
         self.sched = Scheduler(
-            self.dec, self.ex, self.alloc, mode=mode, max_batch=max_batch,
+            decs if dp > 1 else decs[0], exs if dp > 1 else exs[0],
+            allocs if dp > 1 else allocs[0], mode=mode, max_batch=max_batch,
             max_len=max_len, temperature=config.temperature,
             eos_id=config.eos_id, bank=self.bank, ctrl=ctrl,
             prefix_cache=config.prefix_cache,
             admit_window=config.admit_window,
             prefill_budget=config.prefill_budget,
-            tree_reselect_every=config.tree_reselect_every)
+            tree_reselect_every=config.tree_reselect_every,
+            prefix_index=self.prefix_index)
         self.ctrl = ctrl
         # contiguous rows are committed whole-pool up front, so their peak
         # IS the capacity — consumers read this field for either layout
-        self.peak_kv_bytes_in_use = 0 if self.paged else self.ex.kv_capacity
+        self.peak_kv_bytes_in_use = (0 if self.paged
+                                     else self.kv_capacity_bytes())
 
     # ------------------------------------------------------------- public
     def submit(self, prompt, max_new: Optional[int] = None,
@@ -168,16 +191,26 @@ class Engine:
         ``pipelined=None`` defaults to ``config.pipelined``."""
         if pipelined is None:
             pipelined = self.config.pipelined
-        sched, ex = self.sched, self.ex
+        sched = self.sched
         depth = 2 if pipelined else 1
-        inflight = deque()
+        # one independent dispatch/harvest pipeline PER replica: each
+        # replica's handles retire in its own dispatch order, and all
+        # replicas' steps are dispatched back-to-back before any harvest
+        # blocks (on real multi-device hardware the replicas' device work
+        # overlaps; dp=1 reduces to the single historical deque)
+        inflight = {rep.rep: deque() for rep in sched.replicas}
+
+        def pending() -> int:
+            return sum(len(q) for q in inflight.values())
+
         sched._harvest_done_t = None   # don't count inter-run wall time
-        while sched.has_work() or inflight:
+        while sched.has_work() or pending():
             dispatched = False
             if sched.has_work() and sched.stats["steps"] < max_steps:
                 admitted = sched.admit()
-                if sched.queue and not admitted and not inflight \
-                        and all(s is None for s in sched.slots):
+                if sched.queue and not admitted and not pending() \
+                        and not any(rep.has_live()
+                                    for rep in sched.replicas):
                     # every slot (hence every block) is free, nothing is in
                     # flight that could free more, and NOTHING in the
                     # admission window could admit: the head can never fit
@@ -187,16 +220,19 @@ class Engine:
                         f"request {req.rid} (prompt={len(req.prompt)}, "
                         f"max_new={req.max_new}) needs more KV blocks than "
                         f"the pool holds; raise kv_num_blocks or max_len")
-                ex.sync_tables(self.alloc)
+                for rep in sched.replicas:
+                    rep.ex.sync_tables(rep.alloc)
                 if self.paged:
                     self.peak_kv_bytes_in_use = max(
                         self.peak_kv_bytes_in_use, self.kv_bytes_in_use())
-                if any(s is not None for s in sched.slots):
-                    inflight.append(sched.dispatch())
-                    dispatched = True
-            if inflight and (len(inflight) >= depth or not dispatched):
-                sched.process(inflight.popleft())
-            elif not dispatched and not inflight:
+                for rep in sched.replicas:
+                    if rep.has_live():
+                        inflight[rep.rep].append(sched.dispatch(rep.rep))
+                        dispatched = True
+            for q in inflight.values():
+                if q and (len(q) >= depth or not dispatched):
+                    sched.process(q.popleft())
+            if not dispatched and not pending():
                 break                  # step budget exhausted, fully drained
         return sched.completions
 
@@ -214,16 +250,19 @@ class Engine:
         return self.sched.latency_summary()
 
     def kv_capacity_bytes(self) -> int:
-        """HBM resident for the attention KV cache (target + draft)."""
-        return self.ex.kv_capacity
+        """HBM resident for the attention KV cache (target + draft),
+        summed over all replicas."""
+        return sum(rep.ex.kv_capacity for rep in self.sched.replicas)
 
     def kv_bytes_in_use(self) -> int:
-        """KV bytes backing live requests. Contiguous rows are committed
-        whole-pool up front; paged usage counts each UNIQUE mapped block
-        once (prefix-shared blocks are the point of sharing)."""
+        """KV bytes backing live requests, summed over all replicas.
+        Contiguous rows are committed whole-pool up front; paged usage
+        counts each UNIQUE mapped block once (prefix-shared blocks are
+        the point of sharing)."""
         if not self.paged:
-            return self.ex.kv_capacity
-        return self.alloc.blocks_in_use * self.ex.kv_per_block
+            return self.kv_capacity_bytes()
+        return sum(rep.alloc.blocks_in_use * rep.ex.kv_per_block
+                   for rep in self.sched.replicas)
 
     # --------------------------------------------------- facade accessors
     @property

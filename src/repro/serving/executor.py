@@ -70,6 +70,9 @@ class StepHandle:
     # process time, so the stale step's n/gen are never attributed to the
     # new request (the one-step-stale commit horizon, DESIGN.md §9)
     rids: Optional[np.ndarray] = None
+    # scheduler-stamped: which engine replica dispatched this step, so
+    # process() harvests and attributes it on the right replica (§12)
+    replica: int = 0
 
 
 @dataclasses.dataclass
@@ -134,13 +137,18 @@ class Executor:
                  draft_cfg: Optional[ModelConfig], mode: str, max_batch: int,
                  max_len: int, paged: bool, kv_block_size: int,
                  num_blocks: Optional[int], seed: int,
-                 kv_dtype: str = "bf16", mesh=None):
+                 kv_dtype: str = "bf16", mesh=None, replica: int = 0):
         self.dec = dec
         self.mode = mode
         self.tc, self.dc = target_cfg, draft_cfg
         self.max_batch, self.max_len = max_batch, max_len
         self.paged = paged
         self.kv_dtype = kv_dtype
+        # data-parallel serving (DESIGN.md §12): which engine replica this
+        # executor backs. Each replica owns its own _step_fns dict, but the
+        # id also salts the jit-cache key so a shared cache could never
+        # cross-serve two replicas' differently-placed states.
+        self.replica = replica
         # sharded serving (DESIGN.md §11): the target KV pools shard their
         # head dim over the mesh's "model" axis, everything else in the
         # DecodeState replicates, and the fused steps pin in/out shardings
@@ -366,7 +374,8 @@ class Executor:
         variant = "mixed" if (any_prefilling and self.mode == "ar") \
             else "decode"
         greedy_only = not any_sampled and self.mode != "ar"
-        key = (variant, tree_sel is not None, greedy_only, self.kv_dtype)
+        key = (variant, tree_sel is not None, greedy_only, self.kv_dtype,
+               self.replica)
         if key not in self._step_fns:
             fused = self._build_fused(variant, apply_tree=tree_sel is not None,
                                       greedy_only=greedy_only)

@@ -54,6 +54,7 @@ ATTN_MIXERS = (ATTN_GLOBAL, ATTN_LOCAL, ATTN_MLA)
 
 
 def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Blocks covering ``n_tokens`` positions (ceiling division)."""
     return -(-int(n_tokens) // block_size)
 
 
@@ -247,6 +248,48 @@ def prefix_block_keys(prompt, block_size: int,
     return [salt + p[:(i + 1) * block_size].tobytes() for i in range(n_full)]
 
 
+class PrefixIndex:
+    """The one shared content-keyed prefix-cache index spanning every
+    engine replica (DESIGN.md §12).
+
+    Block ids are physical pool slots and mean nothing across replicas, so
+    each replica's :class:`BlockAllocator` keeps its own ``key -> block``
+    map; this object is the registry of those per-replica maps. Admission
+    asks :meth:`best_replica` which replica already holds a prompt's
+    leading blocks (prefix-affinity routing) — a hit routes the request to
+    the owning replica, a miss falls back to least-loaded. With ``dp=1``
+    the index degenerates to a thin wrapper over the single allocator and
+    routing is a no-op.
+    """
+
+    def __init__(self):
+        self.allocators: Dict[int, "BlockAllocator"] = {}
+
+    def register(self, replica: int, alloc: "BlockAllocator") -> None:
+        """Attach ``alloc`` as replica ``replica``'s block map (done by
+        ``BlockAllocator.__init__`` when constructed with this index)."""
+        if replica in self.allocators:
+            raise ValueError(f"replica {replica} already registered")
+        self.allocators[replica] = alloc
+
+    def match(self, keys: Sequence[bytes]) -> Dict[int, List[int]]:
+        """Per-replica ``match_prefix`` results for ``keys`` (pure query)."""
+        return {r: a.match_prefix(keys)
+                for r, a in sorted(self.allocators.items())}
+
+    def best_replica(self, keys: Sequence[bytes]):
+        """``(replica, blocks)`` for the replica holding the LONGEST
+        computed cached prefix of ``keys``, or ``(None, [])`` when no
+        replica holds any block. Ties go to the lowest replica id (stable
+        under re-query, so routing is deterministic)."""
+        best_r, best = None, []
+        for r, a in sorted(self.allocators.items()):
+            m = a.match_prefix(keys)
+            if len(m) > len(best):
+                best_r, best = r, m
+        return best_r, best
+
+
 class BlockAllocator:
     """Host-side refcounted block allocator + block-table shadow + prompt
     prefix cache (DESIGN.md §5/§8).
@@ -267,9 +310,16 @@ class BlockAllocator:
     """
 
     def __init__(self, num_blocks: int, block_size: int, max_batch: int,
-                 max_len: int):
+                 max_len: int, *, replica: int = 0,
+                 prefix_index: Optional[PrefixIndex] = None):
         assert num_blocks >= 2, "need at least one block beyond the reserved 0"
         self.num_blocks = num_blocks
+        # data-parallel serving (DESIGN.md §12): which engine replica this
+        # pool backs, and the shared cross-replica index it reports to
+        self.replica = replica
+        self.prefix_index = prefix_index
+        if prefix_index is not None:
+            prefix_index.register(replica, self)
         self.block_size = block_size
         self.max_blocks_per_seq = blocks_for(max_len, block_size)
         # LIFO free list; block 0 reserved as the garbage block (I1)

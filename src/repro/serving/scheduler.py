@@ -37,6 +37,17 @@ case of the same protocol (dispatch immediately followed by process), so
 the pipelined loop's semantics are the synchronous ones shifted by at
 most one step.
 
+Data parallelism (DESIGN.md §12): the scheduler can manage SEVERAL
+executor replicas — each an independent ``(SpecDecoder, Executor,
+BlockAllocator)`` triple with its own ``DecodeState`` and KV pool on its
+own mesh row — behind the ONE shared queue. Per-replica host mirrors live
+in ``_Replica`` records; admission routes each request by
+prefix-affinity-then-least-loaded over the shared content-keyed prefix
+index (a replica already holding the prompt's cached blocks gets the
+request; misses go to the emptiest replica; a full preferred replica is
+skipped, never stalled on). With ``dp=1`` every path below degenerates to
+the historical single-engine behaviour.
+
 Device work (cache pools, jitted fused steps, row state) lives in
 ``serving.executor.Executor``; ``serving.engine.Engine`` is the thin
 facade wiring the two together.
@@ -86,6 +97,10 @@ class Request:
 
 @dataclasses.dataclass
 class Completion:
+    """A finished request as handed back by ``Engine.run``: the committed
+    tokens plus the per-request latency accounting (all wall-clock
+    seconds; ``tok_*`` are inter-commit percentiles in milliseconds)."""
+
     rid: int
     tokens: np.ndarray          # prompt + generated
     generated: int
@@ -183,36 +198,19 @@ class TreeController:
         return best
 
 
-class Scheduler:
-    """Queues, admission and accounting over one Executor (see module
-    docstring). The Engine drives ``admit() -> dispatch()`` once per tick
-    and ``process(handle)`` once per completed step — back-to-back in the
-    synchronous loop, one step apart in the pipelined one."""
+class _Replica:
+    """Host-side mirrors for ONE engine replica (DESIGN.md §12): its
+    decoder/executor/allocator triple plus every per-slot array the
+    scheduler maintains — slot table, commit limits, prefill cursors,
+    latency samples, and the staged-retirement mask. With ``dp=1`` there
+    is exactly one of these and the scheduler degenerates to the
+    single-replica behaviour."""
 
-    def __init__(self, dec: SpecDecoder, executor: Executor,
-                 alloc: Optional[kv_pool.BlockAllocator], *, mode: str,
-                 max_batch: int, max_len: int, temperature: float,
-                 eos_id: Optional[int], bank: Optional[TemplateBank],
-                 ctrl: Optional[TreeController], prefix_cache: bool,
-                 admit_window: int, prefill_budget: Optional[int],
-                 tree_reselect_every: int):
-        self.dec, self.ex, self.alloc = dec, executor, alloc
-        self.mode = mode
-        self.paged = alloc is not None
-        self.max_batch, self.max_len = max_batch, max_len
-        self.temperature = temperature
-        self.eos_id = eos_id
-        self.bank, self.ctrl = bank, ctrl
-        self.prefix_cache = prefix_cache
-        self.admit_window = admit_window
-        self.tree_reselect_every = tree_reselect_every
-        self.chunk = dec.chunk_width
-        # token budget per step for prompt chunks -> concurrent lanes
-        self.prefill_lanes = (None if prefill_budget is None
-                              else max(1, prefill_budget // self.chunk))
-
-        self.queue: deque[Request] = deque()
-        self.completions: List[Completion] = []
+    def __init__(self, rep: int, dec: SpecDecoder, ex: Executor,
+                 alloc: Optional[kv_pool.BlockAllocator], max_batch: int):
+        self.rep = rep
+        self.base = rep * max_batch     # TreeController slot-row offset
+        self.dec, self.ex, self.alloc = dec, ex, alloc
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.slot_limit = np.zeros(max_batch, np.int64)
         self.slot_tree = np.zeros(max_batch, np.int32)
@@ -227,11 +225,97 @@ class Scheduler:
         self.slot_last_t = np.zeros(max_batch)
         self.slot_last_n = np.zeros(max_batch, np.int64)
         self.slot_samples: List[List] = [[] for _ in range(max_batch)]
-
         # staged mutation protocol (DESIGN.md §9): decisions made while a
         # step may be in flight are applied at the NEXT dispatch boundary
         self.pending_retire = np.zeros(max_batch, bool)
         self._occ_cache: Optional[np.ndarray] = None
+
+    def occupied_mask(self) -> np.ndarray:
+        """[B] bool — slots holding a live request. Built once per slot
+        mutation, not per query: admission and completion invalidate the
+        cache; every mask consumer between them shares one array."""
+        if self._occ_cache is None:
+            self._occ_cache = np.asarray([s is not None for s in self.slots])
+        return self._occ_cache
+
+    def live_decode_mask(self) -> np.ndarray:
+        """Rows occupied AND past their prefill (the rows a step commits
+        tokens for)."""
+        return self.occupied_mask() & (self.slot_pf >= self.slot_pf_len)
+
+    def prefilling_count(self) -> int:
+        """Occupied rows whose prefill cursor has not reached the prompt."""
+        occ = self.occupied_mask()
+        return int((occ & (self.slot_pf < self.slot_pf_len)).sum())
+
+    def occupancy(self) -> int:
+        """Occupied-slot count — the load metric admission routing uses."""
+        return int(self.occupied_mask().sum())
+
+    def first_free_slot(self) -> Optional[int]:
+        """Lowest free slot index, or None when the replica is full."""
+        for slot, s in enumerate(self.slots):
+            if s is None:
+                return slot
+        return None
+
+    def has_live(self) -> bool:
+        """True when any slot holds a request (the replica needs steps)."""
+        return any(s is not None for s in self.slots)
+
+
+class Scheduler:
+    """Queues, admission and accounting over one or more Executor replicas
+    (see module docstring). The Engine drives ``admit() ->
+    dispatch(replica)`` once per tick per live replica and
+    ``process(handle)`` once per completed step — back-to-back in the
+    synchronous loop, one step apart in the pipelined one."""
+
+    def __init__(self, dec, executor, alloc, *, mode: str,
+                 max_batch: int, max_len: int, temperature: float,
+                 eos_id: Optional[int], bank: Optional[TemplateBank],
+                 ctrl: Optional[TreeController], prefix_cache: bool,
+                 admit_window: int, prefill_budget: Optional[int],
+                 tree_reselect_every: int,
+                 prefix_index: Optional[kv_pool.PrefixIndex] = None):
+        """``dec`` / ``executor`` / ``alloc`` are either single objects
+        (``dp=1``, the historical form) or equal-length sequences — one
+        per data-parallel replica. ``prefix_index`` is the shared
+        cross-replica prefix-cache index admission routes over (None for
+        a single replica, where routing is a no-op)."""
+        exs = list(executor) if isinstance(executor, (list, tuple)) \
+            else [executor]
+        decs = list(dec) if isinstance(dec, (list, tuple)) \
+            else [dec] * len(exs)
+        allocs = list(alloc) if isinstance(alloc, (list, tuple)) \
+            else [alloc] * len(exs)
+        if not (len(decs) == len(exs) == len(allocs)):
+            raise ValueError(
+                f"replica sequences disagree: {len(decs)} decoders, "
+                f"{len(exs)} executors, {len(allocs)} allocators")
+        self.replicas = [_Replica(r, d, e, a, max_batch)
+                         for r, (d, e, a)
+                         in enumerate(zip(decs, exs, allocs))]
+        self.dp = len(self.replicas)
+        self.prefix_index = prefix_index
+        self.dec = decs[0]    # shape config: templates / slack / chunking
+        self.mode = mode
+        self.paged = allocs[0] is not None
+        self.max_batch, self.max_len = max_batch, max_len
+        self.temperature = temperature
+        self.eos_id = eos_id
+        self.bank, self.ctrl = bank, ctrl
+        self.prefix_cache = prefix_cache
+        self.admit_window = admit_window
+        self.tree_reselect_every = tree_reselect_every
+        self.chunk = self.dec.chunk_width
+        # token budget per step for prompt chunks -> concurrent lanes
+        # (per REPLICA: the budget protects each replica's own fused step)
+        self.prefill_lanes = (None if prefill_budget is None
+                              else max(1, prefill_budget // self.chunk))
+
+        self.queue: deque[Request] = deque()
+        self.completions: List[Completion] = []
         # per-step host overhead: harvest-complete -> next dispatch, ms
         self.host_overhead_ms: List[float] = []
         self._harvest_done_t: Optional[float] = None
@@ -242,10 +326,30 @@ class Scheduler:
             steps=0, committed=0, accepted=0, live_steps=0,
             draft_forwards=0, target_forwards=0, round_hist=None,
             prefill_chunks=0, prefill_tokens=0,
-            prefix_lookup_blocks=0, prefix_hit_blocks=0)
+            prefix_lookup_blocks=0, prefix_hit_blocks=0,
+            replica_steps=[0] * self.dp, affinity_routed=0)
         if bank is not None:
             self.stats["tree_hist"] = np.zeros(len(bank), np.int64)
             self.stats["tree_switches"] = 0
+
+    # ---------------------------------------------- replica-0 conveniences
+    # The historical single-replica attribute surface (engine facade,
+    # tests, benchmarks) reads through to replica 0; with dp=1 that IS the
+    # whole scheduler state.
+    @property
+    def ex(self) -> Executor:
+        """Replica 0's executor (the only one with ``dp=1``)."""
+        return self.replicas[0].ex
+
+    @property
+    def alloc(self) -> Optional[kv_pool.BlockAllocator]:
+        """Replica 0's block allocator (None in the contiguous layout)."""
+        return self.replicas[0].alloc
+
+    @property
+    def slots(self) -> List[Optional[Request]]:
+        """Replica 0's slot table."""
+        return self.replicas[0].slots
 
     # ------------------------------------------------------------- submit
     def submit(self, prompt, max_new: Optional[int] = None,
@@ -294,24 +398,22 @@ class Scheduler:
         return rid
 
     def has_work(self) -> bool:
-        return bool(self.queue) or any(s is not None for s in self.slots)
+        """True while anything is queued or occupies a slot anywhere."""
+        return bool(self.queue) or any(rep.has_live()
+                                       for rep in self.replicas)
 
     def occupied_mask(self) -> np.ndarray:
-        """[B] bool — slots holding a live request. Built once per slot
-        mutation, not per query: admission and completion invalidate the
-        cache; every mask consumer between them shares one array."""
-        if self._occ_cache is None:
-            self._occ_cache = np.asarray([s is not None for s in self.slots])
-        return self._occ_cache
+        """Replica 0's occupancy mask (see ``_Replica.occupied_mask``)."""
+        return self.replicas[0].occupied_mask()
 
     def live_decode_mask(self) -> np.ndarray:
-        """Rows occupied AND past their prefill (the rows a step commits
-        tokens for)."""
-        return self.occupied_mask() & (self.slot_pf >= self.slot_pf_len)
+        """Replica 0's live-decode mask (see ``_Replica``)."""
+        return self.replicas[0].live_decode_mask()
 
     def prefilling_count(self) -> int:
-        occ = self.occupied_mask()
-        return int((occ & (self.slot_pf < self.slot_pf_len)).sum())
+        """Prefilling rows across ALL replicas (the lane budget itself is
+        enforced per replica inside admission)."""
+        return sum(rep.prefilling_count() for rep in self.replicas)
 
     # ---------------------------------------------------------- admission
     def _feasible_templates(self, req: Request) -> List[int]:
@@ -332,9 +434,10 @@ class Scheduler:
             return 0 if 0 in feasible else feasible[0]
         return self.ctrl.select(feasible=feasible)
 
-    def _try_admit(self, slot: int, req: Request) -> bool:
-        """Admit ``req`` into ``slot`` if its resources exist right now:
-        KV blocks (paged; after prefix matching) and a prefill lane.
+    def _try_admit(self, rep: _Replica, slot: int, req: Request) -> bool:
+        """Admit ``req`` into replica ``rep``'s ``slot`` if its resources
+        exist right now: KV blocks (paged; after prefix matching against
+        THIS replica's pool) and a prefill lane on this replica.
         Returns False without side effects when they don't."""
         p = len(req.prompt)
         tmpl = self._pick_template(req)
@@ -347,11 +450,11 @@ class Scheduler:
         if self.paged:
             if self.prefix_cache:
                 keys = kv_pool.prefix_block_keys(
-                    req.prompt, self.alloc.block_size,
-                    kv_dtype=self.ex.kv_dtype)
-                hit = self.alloc.match_prefix(keys)
-            nb = self.alloc.blocks_needed(need)
-            if not self.alloc.can_allocate(nb - len(hit), hit) \
+                    req.prompt, rep.alloc.block_size,
+                    kv_dtype=rep.ex.kv_dtype)
+                hit = rep.alloc.match_prefix(keys)
+            nb = rep.alloc.blocks_needed(need)
+            if not rep.alloc.can_allocate(nb - len(hit), hit) \
                     and self.bank is not None and req.tree_idx is None:
                 # the controller's pick outgrows the pool: serve the
                 # request on the narrowest feasible template instead of
@@ -361,58 +464,84 @@ class Scheduler:
                 tmpl = min(self._feasible_templates(req),
                            key=self.dec.row_slack)
                 need = p + req.max_new + self.dec.row_slack(tmpl)
-                nb = self.alloc.blocks_needed(need)
-            if not self.alloc.can_allocate(nb - len(hit), hit):
+                nb = rep.alloc.blocks_needed(need)
+            if not rep.alloc.can_allocate(nb - len(hit), hit):
                 return False                       # memory backpressure
-        pf_start = len(hit) * (self.alloc.block_size if self.paged else 0)
+        pf_start = len(hit) * (rep.alloc.block_size if self.paged else 0)
         if pf_start < p - 1 and self.prefill_lanes is not None \
-                and self.prefilling_count() >= self.prefill_lanes:
+                and rep.prefilling_count() >= self.prefill_lanes:
             return False                           # prefill budget exhausted
 
         now = time.perf_counter()
         if self.paged:
             if self.prefix_cache:
-                self.alloc.allocate(slot, need, prefix=hit, keys=keys)
+                rep.alloc.allocate(slot, need, prefix=hit, keys=keys)
             else:
                 # plain positional call — tests spy on allocate(slot, n)
-                self.alloc.allocate(slot, need)
+                rep.alloc.allocate(slot, need)
             self.stats["prefix_lookup_blocks"] += len(keys)
             self.stats["prefix_hit_blocks"] += len(hit)
             # defensive COW (kv_pool I2): with block-aligned matching the
             # first writable position always lands past the shared prefix,
             # but if a future matching policy maps the boundary block this
             # is what keeps shared KV immutable
-            first_write_block = min(pf_start, p - 1) // self.alloc.block_size
-            for i in sorted(self.alloc.read_only.get(slot, ())):
+            first_write_block = min(pf_start, p - 1) // rep.alloc.block_size
+            for i in sorted(rep.alloc.read_only.get(slot, ())):
                 if i >= first_write_block:
-                    pair = self.alloc.copy_on_write(slot, i)
+                    pair = rep.alloc.copy_on_write(slot, i)
                     if pair is not None:
-                        self.ex.copy_block(*pair)
+                        rep.ex.copy_block(*pair)
         t = self.temperature if req.temperature is None else req.temperature
-        self.ex.admit_row(slot, req.prompt, float(t), req.rid, int(tmpl),
-                          pf_start, seed=req.seed)
+        rep.ex.admit_row(slot, req.prompt, float(t), req.rid, int(tmpl),
+                         pf_start, seed=req.seed)
         # admission fully reinitializes the row (the eager admit_row writes
         # enqueue AFTER any in-flight step, so its trailing writes to this
         # slot land first), making a still-staged retire of the previous
         # occupant a stale no-op — it MUST be cancelled or the next
         # dispatch would kill the fresh request
-        self.pending_retire[slot] = False
-        self.slots[slot] = req
-        self._occ_cache = None
-        self.slot_limit[slot] = p + req.max_new
-        self.slot_tree[slot] = tmpl
-        self.slot_steps[slot] = 0
-        self.slot_pf[slot] = pf_start
-        self.slot_pf_len[slot] = p - 1
-        self.slot_submit_t[slot] = self._submit_t_of.pop(req.rid, now)
-        self.slot_admit_t[slot] = now
-        self.slot_first_t[slot] = np.nan
-        self.slot_last_t[slot] = now
-        self.slot_last_n[slot] = p
-        self.slot_samples[slot] = []
+        rep.pending_retire[slot] = False
+        rep.slots[slot] = req
+        rep._occ_cache = None
+        rep.slot_limit[slot] = p + req.max_new
+        rep.slot_tree[slot] = tmpl
+        rep.slot_steps[slot] = 0
+        rep.slot_pf[slot] = pf_start
+        rep.slot_pf_len[slot] = p - 1
+        rep.slot_submit_t[slot] = self._submit_t_of.pop(req.rid, now)
+        rep.slot_admit_t[slot] = now
+        rep.slot_first_t[slot] = np.nan
+        rep.slot_last_t[slot] = now
+        rep.slot_last_n[slot] = p
+        rep.slot_samples[slot] = []
         if self.ctrl is not None:
-            self.ctrl.seed_slot(slot)
+            self.ctrl.seed_slot(rep.base + slot)
         return True
+
+    def _route_order(self, req: Request):
+        """Replica visit order for admitting ``req`` — prefix-affinity
+        first, then least-loaded (DESIGN.md §12). The replica holding the
+        LONGEST computed cached prefix of the prompt goes first (it serves
+        the hit copy-free from its own pool); the rest follow by occupancy
+        (fewest occupied slots, ties to the lowest id). A preferred
+        replica that is full or out of blocks is simply skipped — the
+        request falls through to the next candidate instead of stalling.
+        Returns ``(replica, hit_blocks)`` pairs."""
+        reps = sorted(self.replicas, key=lambda r: (r.occupancy(), r.rep))
+        if self.dp == 1 or not (self.paged and self.prefix_cache):
+            return [(r, 0) for r in reps]
+        keys = kv_pool.prefix_block_keys(
+            req.prompt, self.replicas[0].alloc.block_size,
+            kv_dtype=self.replicas[0].ex.kv_dtype)
+        if not keys:
+            return [(r, 0) for r in reps]
+        if self.prefix_index is not None:
+            hits = {r: len(m)
+                    for r, m in self.prefix_index.match(keys).items()}
+        else:
+            hits = {r.rep: len(r.alloc.match_prefix(keys)) for r in reps}
+        order = sorted(reps, key=lambda r: (-hits.get(r.rep, 0),
+                                            r.occupancy(), r.rep))
+        return [(r, hits.get(r.rep, 0)) for r in order]
 
     def admit(self) -> int:
         """Fill free slots from a bounded prefix of the queue (FIFO-fair
@@ -420,34 +549,48 @@ class Scheduler:
         (within ``admit_window``) may only overtake when every earlier one
         cannot currently fit — so smaller requests flow around a
         pool-oversized head instead of starving behind it, while nothing
-        beyond the window ever jumps the line."""
+        beyond the window ever jumps the line. Each admission is routed
+        across replicas by ``_route_order`` (prefix-affinity, then
+        least-loaded; with ``dp=1`` the order is trivially [replica 0] and
+        this is the historical single-engine admission loop)."""
         admitted = 0
-        for slot in range(self.max_batch):
-            if self.slots[slot] is not None or not self.queue:
-                continue
+        progress = True
+        while progress and self.queue:
+            progress = False
             window = min(len(self.queue), self.admit_window)
             for qi in range(window):
-                if self._try_admit(slot, self.queue[qi]):
-                    del self.queue[qi]
-                    admitted += 1
-                    break
+                req = self.queue[qi]
+                for rep, hit_len in self._route_order(req):
+                    slot = rep.first_free_slot()
+                    if slot is None:
+                        continue       # replica full: fall through
+                    if self._try_admit(rep, slot, req):
+                        del self.queue[qi]
+                        admitted += 1
+                        if hit_len > 0:
+                            self.stats["affinity_routed"] += 1
+                        progress = True
+                        break
+                if progress:
+                    break              # re-scan from the queue head
         return admitted
 
     # ----------------------------------------------------------- stepping
-    def dispatch(self) -> StepHandle:
-        """Issue one fused step, non-blocking. The staged mutations from
-        every ``process`` since the last dispatch (retirements, template
-        re-selections — already mirrored in ``slot_tree``) are applied on
-        device AHEAD of the inner step; per-slot commit limits ride along
-        so a row that filled its budget in a still-unharvested step
-        freezes itself. All dispatch-deterministic accounting advances
-        immediately: the step counters, and the prefill cursor mirrors +
-        computed-block flags (the chunk schedule is a pure function of the
-        cursor, so admission decisions made while this step is in flight
-        see exact cursors)."""
-        occ = self.occupied_mask()
-        limits = np.where(occ, self.slot_limit, NO_LIMIT).astype(np.int64)
-        tree_sel = (self.slot_tree.astype(np.int32, copy=True)
+    def dispatch(self, replica: int = 0) -> StepHandle:
+        """Issue one fused step on ``replica``, non-blocking. The staged
+        mutations from every ``process`` since that replica's last
+        dispatch (retirements, template re-selections — already mirrored
+        in its ``slot_tree``) are applied on device AHEAD of the inner
+        step; per-slot commit limits ride along so a row that filled its
+        budget in a still-unharvested step freezes itself. All
+        dispatch-deterministic accounting advances immediately: the step
+        counters, and the prefill cursor mirrors + computed-block flags
+        (the chunk schedule is a pure function of the cursor, so admission
+        decisions made while this step is in flight see exact cursors)."""
+        rep = self.replicas[replica]
+        occ = rep.occupied_mask()
+        limits = np.where(occ, rep.slot_limit, NO_LIMIT).astype(np.int64)
+        tree_sel = (rep.slot_tree.astype(np.int32, copy=True)
                     if self.bank is not None else None)
         now = time.perf_counter()
         if self._harvest_done_t is not None:
@@ -462,31 +605,33 @@ class Scheduler:
             s is not None
             and (self.temperature if s.temperature is None
                  else s.temperature) > 0
-            for s in self.slots)
-        handle = self.ex.dispatch(
-            retire=self.pending_retire, tree_sel=tree_sel, limits=limits,
-            any_prefilling=self.prefilling_count() > 0,
+            for s in rep.slots)
+        handle = rep.ex.dispatch(
+            retire=rep.pending_retire, tree_sel=tree_sel, limits=limits,
+            any_prefilling=rep.prefilling_count() > 0,
             any_sampled=any_sampled)
         handle.rids = np.asarray(
-            [-1 if s is None else s.rid for s in self.slots], np.int64)
-        self.pending_retire = np.zeros(self.max_batch, bool)
+            [-1 if s is None else s.rid for s in rep.slots], np.int64)
+        handle.replica = replica
+        rep.pending_retire = np.zeros(self.max_batch, bool)
 
         self.stats["steps"] += 1
+        self.stats["replica_steps"][replica] += 1
         self.stats["target_forwards"] += 1
         self.stats["draft_forwards"] += handle.n_draft
         # advance the host prefill mirrors in lockstep with the device
         for slot in np.nonzero(occ)[0]:
-            pf, pfl = self.slot_pf[slot], self.slot_pf_len[slot]
+            pf, pfl = rep.slot_pf[slot], rep.slot_pf_len[slot]
             if pf < pfl:
                 cl = int(min(self.chunk, pfl - pf))
-                self.slot_pf[slot] = pf + cl
+                rep.slot_pf[slot] = pf + cl
                 self.stats["prefill_chunks"] += 1
                 self.stats["prefill_tokens"] += cl
                 if self.paged and self.prefix_cache:
                     # the blocks become readable once THIS step completes
                     # on device — before any later-dispatched step could
                     # read them through a prefix match (sequential stream)
-                    self.alloc.mark_computed(slot, int(self.slot_pf[slot]))
+                    rep.alloc.mark_computed(slot, int(rep.slot_pf[slot]))
         return handle
 
     def process(self, handle: StepHandle) -> None:
@@ -494,12 +639,14 @@ class Scheduler:
         fold its results in: stats + controller from the device-reported
         live mask, then completions, with retirement staged for the next
         dispatch boundary."""
-        res = self.ex.harvest(handle)
+        rep = self.replicas[handle.replica]
+        res = rep.ex.harvest(handle)
         self._harvest_done_t = time.perf_counter()
-        self._note_results(handle, res)
-        self._harvest_completions(handle, res)
+        self._note_results(rep, handle, res)
+        self._harvest_completions(rep, handle, res)
 
-    def _note_results(self, handle: StepHandle, res: StepResult) -> None:
+    def _note_results(self, rep: _Replica, handle: StepHandle,
+                      res: StepResult) -> None:
         """Result-dependent accounting. ``res.live`` is the mask of rows
         the step actually committed for, computed ON DEVICE from the
         post-mutation pre-step state — the host mirrors cannot stand in
@@ -526,15 +673,28 @@ class Scheduler:
         # the slot still holds the request this step was dispatched for —
         # a re-admitted slot must not inherit the previous occupant's final
         # in-flight step
-        cur = np.asarray([-1 if s is None else s.rid for s in self.slots],
+        cur = np.asarray([-1 if s is None else s.rid for s in rep.slots],
                          np.int64)
         acct = live & (handle.rids == cur)
-        self.slot_steps[acct] += 1
+        rep.slot_steps[acct] += 1
         if self.ctrl is not None and acct.any():
-            self.ctrl.update(acct, handle.tree_sel, res.a, res.rank)
-            self._reshape_slots(acct)
+            # controller rows are indexed by GLOBAL slot (replica base +
+            # local slot): pad the per-replica step arrays out to the
+            # controller's row space (with dp=1 this is the identity)
+            g = self.ctrl.slot_p.shape[0]
+            b = self.max_batch
+            acct_g = np.zeros(g, bool)
+            acct_g[rep.base:rep.base + b] = acct
+            tree_g = np.zeros(g, np.int32)
+            tree_g[rep.base:rep.base + b] = handle.tree_sel
+            a_g = np.zeros(g, res.a.dtype)
+            a_g[rep.base:rep.base + b] = res.a
+            rank_g = np.full((g,) + res.rank.shape[1:], -1, res.rank.dtype)
+            rank_g[rep.base:rep.base + b] = res.rank
+            self.ctrl.update(acct_g, tree_g, a_g, rank_g)
+            self._reshape_slots(rep, acct)
 
-    def _reshape_slots(self, live_mask) -> None:
+    def _reshape_slots(self, rep: _Replica, live_mask) -> None:
         """Between-windows template re-selection (the adaptive controller).
         Every ``tree_reselect_every`` live steps a slot re-scores the bank
         under its own EWMA statistics and switches when a different
@@ -544,27 +704,27 @@ class Scheduler:
         is shape-independent, so reshaping mid-request never changes
         committed tokens' correctness, only how many arrive per step."""
         for slot in np.nonzero(live_mask)[0]:
-            req = self.slots[slot]
+            req = rep.slots[slot]
             if req is None or req.tree_idx is not None:
                 continue            # pinned requests keep their shape
-            if self.slot_steps[slot] % self.tree_reselect_every:
+            if rep.slot_steps[slot] % self.tree_reselect_every:
                 continue
-            best = self.ctrl.select(slot=int(slot),
+            best = self.ctrl.select(slot=int(rep.base + slot),
                                     feasible=self._feasible_templates(req))
-            if best == int(self.slot_tree[slot]):
+            if best == int(rep.slot_tree[slot]):
                 continue
             need = len(req.prompt) + req.max_new + self.dec.row_slack(best)
-            if self.paged and not self.alloc.grow(int(slot), need):
+            if self.paged and not rep.alloc.grow(int(slot), need):
                 continue            # pool too tight: keep the old shape
             # STAGED: the mirror update is picked up by the next dispatch's
             # tree_sel (no eager device scatter); growing the block table
             # above only ever widens a row, so a still-in-flight step using
             # the old table + old template stays within its allocation
-            self.slot_tree[slot] = best
+            rep.slot_tree[slot] = best
             self.stats["tree_switches"] += 1
 
     # ------------------------------------------------------------ harvest
-    def _harvest_completions(self, handle: StepHandle,
+    def _harvest_completions(self, rep: _Replica, handle: StepHandle,
                              res: StepResult) -> None:
         """Detect finished requests from one harvested step's ``n``/``gen``
         (already on host — no extra transfers) and build their
@@ -579,7 +739,7 @@ class Scheduler:
         release could read the reused blocks."""
         n_host, gen_host = res.n, res.gen
         now = time.perf_counter()
-        for slot, req in enumerate(self.slots):
+        for slot, req in enumerate(rep.slots):
             if req is None:
                 continue
             if int(handle.rids[slot]) != req.rid:
@@ -590,16 +750,16 @@ class Scheduler:
                 continue
             p = len(req.prompt)
             # latency: tokens committed since the last tick
-            c = int(n_host[slot] - self.slot_last_n[slot])
+            c = int(n_host[slot] - rep.slot_last_n[slot])
             if c > 0:
-                if np.isnan(self.slot_first_t[slot]):
-                    self.slot_first_t[slot] = now
-                self.slot_samples[slot].append(
-                    ((now - self.slot_last_t[slot]) / c, c))
-                self.slot_last_t[slot] = now
-                self.slot_last_n[slot] = n_host[slot]
+                if np.isnan(rep.slot_first_t[slot]):
+                    rep.slot_first_t[slot] = now
+                rep.slot_samples[slot].append(
+                    ((now - rep.slot_last_t[slot]) / c, c))
+                rep.slot_last_t[slot] = now
+                rep.slot_last_n[slot] = n_host[slot]
 
-            limit = self.slot_limit[slot]
+            limit = rep.slot_limit[slot]
             end, hit_eos = None, False
             if self.eos_id is not None and n_host[slot] > p:
                 row = gen_host[slot, p:n_host[slot]].tolist()
@@ -612,28 +772,28 @@ class Scheduler:
             if n_host[slot] >= limit or hit_eos:
                 if end is None:
                     end = int(min(n_host[slot], limit))
-                samples = self.slot_samples[slot]
-                ttft = (self.slot_first_t[slot] - self.slot_submit_t[slot]
-                        if not np.isnan(self.slot_first_t[slot]) else 0.0)
+                samples = rep.slot_samples[slot]
+                ttft = (rep.slot_first_t[slot] - rep.slot_submit_t[slot]
+                        if not np.isnan(rep.slot_first_t[slot]) else 0.0)
                 self.completions.append(Completion(
                     rid=req.rid, tokens=gen_host[slot, :end].copy(),
                     generated=int(end - p),
-                    wall_submitted=self.slot_submit_t[slot],
+                    wall_submitted=rep.slot_submit_t[slot],
                     wall_done=now,
-                    queue_wait=self.slot_admit_t[slot]
-                    - self.slot_submit_t[slot],
+                    queue_wait=rep.slot_admit_t[slot]
+                    - rep.slot_submit_t[slot],
                     ttft=float(ttft),
                     tok_p50=_weighted_percentile(samples, 50),
                     tok_p95=_weighted_percentile(samples, 95)))
-                self.slots[slot] = None
-                self._occ_cache = None
-                self.slot_pf_len[slot] = 0
-                self.slot_pf[slot] = 0
-                self.pending_retire[slot] = True
+                rep.slots[slot] = None
+                rep._occ_cache = None
+                rep.slot_pf_len[slot] = 0
+                rep.slot_pf[slot] = 0
+                rep.pending_retire[slot] = True
                 if self.ctrl is not None:
-                    self.ctrl.retire_slot(slot)
+                    self.ctrl.retire_slot(rep.base + slot)
                 if self.paged:
-                    self.alloc.release(slot)  # O(1); blocks reusable at once
+                    rep.alloc.release(slot)  # O(1); blocks reusable at once
 
     # ------------------------------------------------------------ summary
     def mean_accepted(self) -> float:

@@ -48,6 +48,48 @@ def test_config_validation():
         EngineConfig(tree_ewma=0.0)
     with pytest.raises(ValueError, match="tp"):
         EngineConfig(tp=0)
+    with pytest.raises(ValueError, match="dp"):
+        EngineConfig(dp=0)
+
+
+def test_config_dp_device_validation():
+    """dp * tp must fit the available devices, and an explicit mesh must
+    carry a 'data' axis of exactly dp replicas."""
+    import jax
+
+    n = jax.device_count()
+    with pytest.raises(ValueError, match="devices"):
+        EngineConfig(dp=n + 1)                  # auto-mesh can't fit
+    one = np.array(jax.devices()[:1]).reshape(1)
+    with pytest.raises(ValueError, match="data"):
+        EngineConfig(dp=2, mesh=jax.sharding.Mesh(one, ("model",)))
+    mesh11 = jax.sharding.Mesh(one.reshape(1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="data"):
+        EngineConfig(dp=2, mesh=mesh11)         # axis size 1 != dp=2
+    assert EngineConfig(dp=1, mesh=mesh11).dp == 1
+
+
+@pytest.mark.parametrize("layout", ["paged", "contiguous"])
+def test_dp1_identical_to_no_dp(models, layout):
+    """dp=1 (explicit single-replica mesh) is the historical single-engine
+    path bit-for-bit, in both KV layouts."""
+    import jax
+
+    tc, tp, dc, dp = models
+    rng = np.random.default_rng(14)
+    prompts = _prompts(rng, 4)
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    out = {}
+    for name, mesh_arg in (("no_dp", None), ("dp1", mesh)):
+        cfg = EngineConfig(mode="pard", k=4, max_batch=2, max_len=256,
+                           kv_layout=layout, kv_block_size=16, seed=5,
+                           dp=1, mesh=mesh_arg)
+        eng = Engine(tp, tc, dp, dc, config=cfg)
+        rids = {eng.submit(p, 12): i for i, p in enumerate(prompts)}
+        out[name] = {rids[c.rid]: c.tokens for c in eng.run()}
+    for i in range(len(prompts)):
+        assert np.array_equal(out["no_dp"][i], out["dp1"][i])
 
 
 def test_config_adaptive_default_bank():

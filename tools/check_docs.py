@@ -1,0 +1,55 @@
+"""Docs gate: README.md must document every serve-launcher flag.
+
+  python tools/check_docs.py
+
+Runs ``repro.launch.serve --help`` in a subprocess (PYTHONPATH=src is
+added automatically), extracts every ``--flag`` the parser exposes, and
+fails with the missing list unless each one is mentioned somewhere in
+README.md — so a new serve flag cannot land without its documentation.
+The CI ``docs-gate`` job runs this and then executes
+``examples/quickstart.py`` (the README's 5-minute path) end-to-end.
+"""
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def serve_help() -> str:
+    """The launcher's --help text, run exactly as the README tells users
+    to run it (module mode, src/ on PYTHONPATH)."""
+    env = dict(os.environ)
+    src = os.path.join(ROOT, "src")
+    old = env.get("PYTHONPATH")
+    env["PYTHONPATH"] = f"{src}{os.pathsep}{old}" if old else src
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--help"],
+        capture_output=True, text=True, env=env, cwd=ROOT)
+    if out.returncode != 0:
+        print(out.stderr, file=sys.stderr)
+        raise SystemExit(f"serve --help exited {out.returncode}")
+    return out.stdout
+
+
+def main() -> int:
+    """Exit 0 iff README.md mentions every serve flag; print the gaps."""
+    flags = sorted(set(re.findall(r"--[a-z][a-z0-9-]*", serve_help())))
+    # argparse's own plumbing, not engine surface
+    flags = [f for f in flags if f != "--help"]
+    with open(os.path.join(ROOT, "README.md")) as f:
+        readme = f.read()
+    missing = [f for f in flags if f not in readme]
+    if missing:
+        print(f"docs-gate: README.md does not mention these "
+              f"repro.launch.serve flags: {', '.join(missing)}",
+              file=sys.stderr)
+        return 1
+    print(f"docs-gate: all {len(flags)} serve flags documented in "
+          f"README.md")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
