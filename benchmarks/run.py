@@ -57,6 +57,21 @@ import time
 # of fp32 (the primary --smoke-floor applies to the byte-reduction ratio)
 KV_QUANT_TPS_FLOOR = 0.95
 
+# fixed secondary gates for --scenario sharded (the comm-audit gates,
+# DESIGN.md §13; the primary --smoke-floor stays on scaling efficiency):
+# on tp4 the throughput ruleset must cut per-step collective bytes >= 2x
+# vs exact, bound all-reduces at <= 2 per layer, match tp1 greedy tokens
+# at >= 0.99 exact-match rate, and hold mean_accepted within 2% of exact
+COMM_BYTES_RATIO_FLOOR = 2.0
+COMM_ALL_REDUCES_PER_LAYER_MAX = 2.0
+THROUGHPUT_EXACT_MATCH_FLOOR = 0.99
+THROUGHPUT_MEAN_ACCEPTED_TOL = 0.02
+
+# fixed secondary gate for --adaptive-tree: the vectorized controller host
+# path must keep adaptive tok/s >= 0.95x the static baseline at >= its
+# acceptance (the primary --smoke-floor stays on mean accepted length)
+ADAPTIVE_TPS_FLOOR = 0.95
+
 
 def check_floor(floor: float, section: str = "tree") -> int:
     """CI gate: every recorded PARD mean accepted length in ``section``
@@ -156,6 +171,39 @@ def check_floor(floor: float, section: str = "tree") -> int:
             print(f"smoke-floor: serve_sharded.{name} tokens_per_sec="
                   f"{tree.get(name, {}).get('tokens_per_sec')} "
                   f"{'recorded' if ok else 'MISSING'}", file=sys.stderr)
+        # comm-audit gates (DESIGN.md §13): collective-byte accounting of
+        # the compiled step is the trustworthy proxy for real-interconnect
+        # cost that CPU-emulated wall-clock is not
+        ratio = gate.get("comm_bytes_ratio_exact_vs_throughput_tp4")
+        ok = ratio is not None and ratio >= COMM_BYTES_RATIO_FLOOR
+        failed |= not ok
+        print(f"smoke-floor: serve_sharded comm bytes exact/throughput tp4="
+              f"{ratio if ratio is None else f'{ratio:.2f}'}x "
+              f"{'>=' if ok else '< FAIL'} {COMM_BYTES_RATIO_FLOOR} "
+              f"(exact={gate.get('comm_bytes_exact_tp4')} "
+              f"throughput={gate.get('comm_bytes_throughput_tp4')} B/step)",
+              file=sys.stderr)
+        arpl = gate.get("all_reduces_per_layer_throughput_tp4")
+        ok = arpl is not None and arpl <= COMM_ALL_REDUCES_PER_LAYER_MAX
+        failed |= not ok
+        print(f"smoke-floor: serve_sharded throughput all-reduces/layer="
+              f"{arpl} {'<=' if ok else '> FAIL'} "
+              f"{COMM_ALL_REDUCES_PER_LAYER_MAX}", file=sys.stderr)
+        match = gate.get("throughput_tp4_greedy_exact_match_rate")
+        ok = match is not None and match >= THROUGHPUT_EXACT_MATCH_FLOOR
+        failed |= not ok
+        print(f"smoke-floor: serve_sharded throughput tp4 greedy "
+              f"exact-match rate vs tp1="
+              f"{match if match is None else f'{match:.4f}'} "
+              f"{'>=' if ok else '< FAIL'} {THROUGHPUT_EXACT_MATCH_FLOOR}",
+              file=sys.stderr)
+        drift = gate.get("throughput_mean_accepted_rel_delta")
+        ok = drift is not None and abs(drift) <= THROUGHPUT_MEAN_ACCEPTED_TOL
+        failed |= not ok
+        print(f"smoke-floor: serve_sharded throughput mean_accepted drift="
+              f"{drift if drift is None else f'{drift:+.4f}'} "
+              f"{'within' if ok else 'OUTSIDE FAIL'} "
+              f"+/-{THROUGHPUT_MEAN_ACCEPTED_TOL}", file=sys.stderr)
         return 1 if failed else 0
     if section == "serve_dp":
         # the data-parallel serving gate: the benchmark must have asserted
@@ -212,7 +260,54 @@ def check_floor(floor: float, section: str = "tree") -> int:
         failed |= not ok
         print(f"smoke-floor: {section}.{name} mean_accepted={acc:.3f} "
               f"{'>=' if ok else '< FAIL'} {floor}", file=sys.stderr)
+    if section == "tree_adaptive":
+        # secondary gate: the controller's host path must not tax the step
+        # loop — adaptive tok/s >= ADAPTIVE_TPS_FLOOR x static at >= its
+        # acceptance (the benchmark run asserts acceptance itself)
+        gate = tree.get("gate", {})
+        ratio = gate.get("adaptive_vs_static_tps")
+        ok = ratio is not None and ratio >= ADAPTIVE_TPS_FLOOR
+        failed |= not ok
+        print(f"smoke-floor: tree_adaptive adaptive/static tok/s="
+              f"{ratio if ratio is None else f'{ratio:.3f}'} "
+              f"{'>=' if ok else '< FAIL'} {ADAPTIVE_TPS_FLOOR} "
+              f"(adaptive={gate.get('adaptive_tps')} "
+              f"static={gate.get('static_tps')})", file=sys.stderr)
     return 1 if failed else 0
+
+
+def bench_env() -> dict:
+    """Provenance metadata for the recording environment — written as the
+    top-level "env" block of BENCH_serve.json so cross-run trajectory
+    comparisons (serve_delta, the CI summaries) are interpretable."""
+    import os
+    import re
+    import subprocess
+
+    import jax
+    import jaxlib
+
+    forced = os.environ.get("REPRO_HOST_DEVICES")
+    if not forced:
+        m = re.search(r"--xla_force_host_platform_device_count=(\d+)",
+                      os.environ.get("XLA_FLAGS", ""))
+        forced = m.group(1) if m else None
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        ).stdout.strip() or None
+    except OSError:
+        sha = None
+    return {
+        "jax": jax.__version__,
+        "jaxlib": jaxlib.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": jax.devices()[0].device_kind,
+        "device_count": jax.device_count(),
+        "forced_host_devices": int(forced) if forced else None,
+        "git_sha": sha,
+    }
 
 
 def main() -> None:
@@ -319,6 +414,10 @@ def main() -> None:
                 sys.exit(1)
             raise
     print(f"# total wall: {time.time() - t0:.1f}s", file=sys.stderr)
+    if names:
+        # provenance: stamp the recording environment alongside whatever
+        # sections this run (re)wrote
+        common.update_bench_serve("env", bench_env())
 
     if args.smoke_floor is not None:
         if args.scenario == "sched":

@@ -14,6 +14,15 @@ artifact): prints a note and exits 0 so the job never fails on missing
 history. Expected CI sections absent from the CURRENT trajectory are
 named in a trailing note (not silently dropped) so a gate job that
 failed to persist its section is visible in the summary.
+
+Two provenance layers are understood (and tolerated when absent): the
+top-level "env" block ``benchmarks.run`` stamps (jax/backend/device/sha
+of the recording machine) is echoed as a footer, and any section carrying
+a "config" stamp (``benchmarks.tables._recording_config``) is checked
+against the LIVE EngineConfig defaults — a mismatch prints a stale-
+recording warning, because numbers recorded under old engine defaults
+presented next to current ones is exactly how the seed "serve" section
+quietly went misleading.
 """
 import json
 import sys
@@ -34,6 +43,41 @@ def load(path):
             return json.load(f)
     except (OSError, ValueError):
         return None
+
+
+def live_defaults():
+    """Current EngineConfig defaults for the keys recordings stamp into
+    their "config" block. Imports from src/ next to this file so it works
+    without PYTHONPATH; returns None (stale check skipped, delta still
+    prints) when the engine code is unimportable."""
+    import dataclasses
+    import os
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), "src"))
+    try:
+        from repro.serving.config import EngineConfig
+    except Exception:                            # noqa: BLE001
+        return None
+    return {f.name: f.default for f in dataclasses.fields(EngineConfig)
+            if f.name in ("kv_dtype", "pipelined", "tp_ruleset")}
+
+
+def stale_sections(cur):
+    """(section, {key: (recorded, live)}) for every section whose recorded
+    config stamp disagrees with the live engine defaults."""
+    live = live_defaults()
+    if live is None:
+        return []
+    out = []
+    for section, entries in sorted(cur.items()):
+        recorded = entries.get("config") if isinstance(entries, dict) else None
+        if not isinstance(recorded, dict):
+            continue                 # unstamped (pre-provenance) section
+        diffs = {k: (v, live[k]) for k, v in recorded.items()
+                 if k in live and v != live[k]}
+        if diffs:
+            out.append((section, diffs))
+    return out
 
 
 def main() -> int:
@@ -77,6 +121,18 @@ def main() -> int:
     if skipped:
         print(f"\n_sections absent from the current trajectory (not "
               f"re-measured by this run): {', '.join(skipped)}_")
+    for section, diffs in stale_sections(cur):
+        detail = ", ".join(f"{k}: recorded `{a!r}` vs live default `{b!r}`"
+                           for k, (a, b) in sorted(diffs.items()))
+        print(f"\n:warning: _`{section}` was recorded under a config that "
+              f"no longer matches the live engine defaults ({detail}) — "
+              f"re-record it_")
+    env = cur.get("env")
+    if isinstance(env, dict):
+        print(f"\n_recorded on jax {env.get('jax')} "
+              f"({env.get('backend')}/{env.get('device_kind')} x"
+              f"{env.get('device_count')}), "
+              f"sha {str(env.get('git_sha'))[:9]}_")
     return 0
 
 

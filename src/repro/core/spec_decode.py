@@ -326,21 +326,28 @@ class TemplateBank:
         """The canonical three-shape bank at depth ``k``: a flat-K chain
         (deep, no hedging), a balanced tree and a shallow-wide tree — the
         shapes the adaptive controller arbitrates between. Widths shrink
-        until the 32-slot window cap admits them."""
-        def fits(br):
+        until the 32-slot window cap admits them, and each later shape
+        must also fit the padded window the earlier picks established:
+        the bank pads every template's slot metadata to the widest
+        member, so a wide hedge that overruns the balanced tree's slot
+        count would tax EVERY adaptive step with padded verify slots
+        even when the controller never selects it (at k=4 this picks
+        `(3,2,1,1)`, 22 slots, over `(4,2,1,1)`, 29)."""
+        def nslots(br):
             slots, width = 1, 1
             for x in br:
                 width *= x
                 slots += width
-            return slots <= 32
+            return slots
 
-        shapes = [(1,) * k]
+        shapes, cap = [(1,) * k], 32
         for heads in [[(2, 2, 2), (2, 2), (2,)],
                       [(4, 2), (3, 2), (3,), (2, 2, 2), (2, 2)]]:
             for head in heads:
                 br = (head + (1,) * (k - len(head)))[:k]
-                if len(head) <= k and fits(br) and br not in shapes:
+                if len(head) <= k and nslots(br) <= cap and br not in shapes:
                     shapes.append(br)
+                    cap = min(cap, nslots(br))
                     break
         return TemplateBank.from_templates(shapes)
 
@@ -532,6 +539,11 @@ class SpecStats:
     #                           multi-round rounds / top-k ranks; chain: [1])
     host_overhead_p50_ms: float = 0.0   # wall time between one iteration's
     host_overhead_p95_ms: float = 0.0   # blocking reads and the next dispatch
+    # sharded serving only (tools/comm_audit.py, DESIGN.md §13): per-step
+    # collective op counts and byte volumes of the compiled fused step —
+    # {"all-reduce": n, ...} / total bytes moved. None off-mesh.
+    collective_counts: Any = None
+    collective_bytes_per_step: Any = None
 
 
 class SpecDecoder:
@@ -548,20 +560,24 @@ class SpecDecoder:
                  enc_out=None, draft_enc_out=None, kv_block_size: int = 0,
                  tree: Optional[TreeTemplate] = None,
                  prefill_chunk: int = 8, kv_dtype: str = "bf16",
-                 mesh=None):
+                 mesh=None, tp_ruleset: str = "exact"):
         self.tp, self.tc = target_params, target_cfg
         self.dp, self.dc = draft_params, draft_cfg
-        # sharded serving (DESIGN.md §11): the target is tensor-parallel
-        # over the mesh's "model" axis under the reduction-free serving
-        # rules; the draft replicates (it is small, and replicating avoids
-        # any cross-device work inside the latency-critical draft window).
+        # sharded serving (DESIGN.md §11/§13): the target is tensor-parallel
+        # over the mesh's "model" axis under the selected serving ruleset
+        # ("exact" = reduction-free output-dim rules, "throughput" =
+        # row-parallel down-projections); the draft replicates (it is
+        # small, and replicating avoids any cross-device work inside the
+        # latency-critical draft window).
         self.mesh = mesh
+        self.tp_ruleset = tp_ruleset
         if mesh is not None:
             from ..sharding import specs as _specs
             self.tp = jax.device_put(
                 self.tp,
                 _specs.to_named(
-                    _specs.param_specs(self.tp, mesh, serving=True), mesh))
+                    _specs.param_specs(self.tp, mesh, serving=True,
+                                       ruleset=tp_ruleset), mesh))
             if self.dp is not None:
                 self.dp = jax.device_put(
                     self.dp,
@@ -652,18 +668,18 @@ class SpecDecoder:
 
     # -- jitted primitives ------------------------------------------------
     def _fn(self, name, builder, donate=()):
-        name = f"{name}@{self.kv_dtype}"
+        name = f"{name}@{self.kv_dtype}@{self.tp_ruleset}"
         if name not in self._jit_cache:
             fn = jax.jit(builder, donate_argnums=donate)
             if self.mesh is not None:
-                # trace under the activation mesh so the forward's
-                # gather_activation hints bake into the computation
-                # (bitwise cross-mesh identity, DESIGN.md §11)
-                mesh = self.mesh
+                # trace under the activation mesh + ruleset so the
+                # forward's partial/gather_activation hints bake into the
+                # computation (DESIGN.md §11/§13)
+                mesh, ruleset = self.mesh, self.tp_ruleset
 
                 def fn(*a, _jitted=fn, **kw):
                     from ..kernels import ops as _ops
-                    with _ops.activation_mesh(mesh):
+                    with _ops.activation_mesh(mesh, ruleset):
                         return _jitted(*a, **kw)
             self._jit_cache[name] = fn
         return self._jit_cache[name]

@@ -26,46 +26,151 @@ def _interpret(flag):
 
 
 # --------------------------------------------------------------------------
-# Activation sharding hints (sharded serving, DESIGN.md §11)
+# Activation sharding hints (sharded serving, DESIGN.md §11 / §13)
 #
 # The serving executor traces its fused steps under ``activation_mesh`` so
-# the forward can pin GSPMD's layout choices at the two places they would
-# otherwise break bitwise cross-mesh identity: a model-sharded activation
-# feeding a contraction (attention heads into wo, mlp hidden into the
-# down-projection, vocab-sharded logits into softmax/argmax) lets the
-# partitioner pick partial-sum reduction, whose accumulation order differs
-# from the single-device dot. ``gather_activation`` forces the all-gather
-# FIRST, so every contraction runs full-operand on every device and the
-# tokens match across mesh shapes exactly. With no mesh set (training, the
-# uniform generate_* paths, tier-1 tests) both helpers are identity.
+# the forward can pin GSPMD's layout choices at the places they would
+# otherwise drift. Two rulesets share the same seams:
+#
+# "exact" (default): a model-sharded activation feeding a contraction
+# (attention heads into wo, mlp hidden into the down-projection,
+# vocab-sharded logits into softmax/argmax) lets the partitioner pick
+# partial-sum reduction, whose accumulation order differs from the
+# single-device dot. ``partial_activation`` behaves as ``gather_activation``
+# — force the all-gather FIRST, so every contraction runs full-operand on
+# every device and the tokens match across mesh shapes bitwise.
+#
+# "throughput": ``partial_activation`` instead KEEPS the activation
+# model-sharded on its contraction axis between the column-parallel
+# up-projection and the row-parallel down-projection
+# (THROUGHPUT_PARAM_RULES). Each device contracts its local shard; the
+# post-contraction ``gather_activation`` constrains the partial product to
+# replicated, which GSPMD realizes as exactly ONE psum (all-reduce) per
+# attention block / MLP instead of per-contraction full-activation
+# all-gathers. Tokens then match tp1 only to tolerance (accumulation
+# order), never bitwise.
+#
+# With no mesh set (training, the uniform generate_* paths, tier-1 tests)
+# both helpers are identity.
 # --------------------------------------------------------------------------
 
 _ACTIVATION_MESH = None
+_ACTIVATION_RULESET = "exact"
 
 
 @contextlib.contextmanager
-def activation_mesh(mesh):
-    """Trace-time context: the mesh ``gather_activation`` replicates onto
-    (None = the hints are no-ops). Set around jit TRACING — the hints bake
-    into the compiled computation, so the context only needs to wrap the
-    call sites that may trigger a (re)trace."""
-    global _ACTIVATION_MESH
-    prev, _ACTIVATION_MESH = _ACTIVATION_MESH, mesh
+def activation_mesh(mesh, ruleset="exact"):
+    """Trace-time context: the mesh the activation hints constrain onto
+    (None = the hints are no-ops) and the serving ruleset steering
+    ``partial_activation``. Set around jit TRACING — the hints bake into
+    the compiled computation, so the context only needs to wrap the call
+    sites that may trigger a (re)trace."""
+    global _ACTIVATION_MESH, _ACTIVATION_RULESET
+    prev = (_ACTIVATION_MESH, _ACTIVATION_RULESET)
+    _ACTIVATION_MESH, _ACTIVATION_RULESET = mesh, ruleset
     try:
         yield
     finally:
-        _ACTIVATION_MESH = prev
+        _ACTIVATION_MESH, _ACTIVATION_RULESET = prev
 
 
 def gather_activation(x):
-    """Constrain ``x`` to be fully replicated (all-gather any model-sharded
-    dim) before a contraction / normalization consumes it. Identity when no
-    activation mesh is set."""
+    """Constrain ``x`` to be fully replicated before a contraction /
+    normalization / sampling consumes it. Identity when no activation mesh
+    is set. Under the throughput ruleset this is the POST-contraction seam:
+    constraining the locally-contracted partial product to replicated is
+    what makes GSPMD emit the block's single psum."""
     if _ACTIVATION_MESH is None or x is None:
         return x
     return jax.lax.with_sharding_constraint(
         x, jax.sharding.NamedSharding(_ACTIVATION_MESH,
                                       jax.sharding.PartitionSpec()))
+
+
+def partial_activation(x, axis=-1):
+    """PRE-combine seam between the column- and row-parallel halves.
+
+    Exact ruleset: alias of ``gather_activation`` (full-operand
+    contraction, bitwise identity). Throughput ruleset: keep ``x``
+    model-sharded on ``axis`` — ``rowparallel_einsum`` applies it to the
+    canonical chunk axis of its partial products so the f32 combine over
+    that axis lowers to the block's single psum; falls back to the gather
+    when the axis does not divide the model mesh (mirroring the replicate
+    fallback in THROUGHPUT_PARAM_RULES). Identity when no mesh is set."""
+    if _ACTIVATION_MESH is None or x is None:
+        return x
+    if _ACTIVATION_RULESET != "throughput":
+        return gather_activation(x)
+    mesh_shape = dict(zip(_ACTIVATION_MESH.axis_names,
+                          _ACTIVATION_MESH.devices.shape))
+    model = mesh_shape.get("model", 1)
+    if model <= 1 or x.shape[axis] % model:
+        return gather_activation(x)
+    spec = [None] * x.ndim
+    spec[axis if axis >= 0 else x.ndim + axis] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(_ACTIVATION_MESH,
+                                      jax.sharding.PartitionSpec(*spec)))
+
+
+def rowparallel_einsum(eq, x, w, *, x_axis, w_axis):
+    """Down-projection contraction at a serving-ruleset seam.
+
+    Exact ruleset (and training / no-mesh, where both hints are identity):
+    gather ``x`` to replicated and contract whole — the reduction-free
+    bitwise path, graph-identical to the pre-ruleset code.
+
+    Throughput ruleset: Megatron row parallelism with numerics pinned at
+    canonical-chunk granularity. The contraction dim (``x_axis`` of ``x``
+    / ``w_axis`` of ``w``) is reshaped into a ``ROWPARALLEL_CHUNKS`` (=4)
+    chunk axis; ONE einsum contracts per chunk (XLA dots accumulate in f32
+    and round to the compute dtype once per chunk → bf16 partials), the
+    chunk axis is constrained model-sharded, and the partials combine by a
+    single f32-upcast sum rounded once. Mesh-size independence falls out
+    structurally:
+
+    - model axis = 4: one bf16 chunk-partial per device; the f32 sum over
+      the sharded chunk axis lowers to the block's single psum.
+    - model axis = 2: two chunk-partials per device; local f32 partial
+      sums + a 2-way f32 psum.
+    - model axis = 1 (the reference the benchmark gates compare against):
+      the same graph with the sum evaluated locally.
+
+    An f32 sum of four bf16-valued terms is exact in f32 arithmetic
+    (8-bit mantissas; associativity cannot matter below a ~2^16 exponent
+    spread), so every mesh size rounds the SAME real number to bf16 once —
+    bitwise-identical greedy tokens across tp1/tp2/tp4, verified by the
+    serve_sharded match-rate gate and tests/test_tp_ruleset.py. (XLA CPU's
+    bf16 all-reduce computes exactly this f32-upcast-sum-round-once —
+    discovered empirically; its HLO shows the reduction ``promoted`` to
+    f32 — so the earlier bf16-psum formulation agreed bitwise too, but
+    only as a backend property, not by construction.)
+
+    Contraction dim not divisible by 4: replicate fallback (gather + whole
+    contraction), mirroring THROUGHPUT_PARAM_RULES' weight-side fallback,
+    at every mesh size.
+    """
+    if _ACTIVATION_MESH is None or _ACTIVATION_RULESET != "throughput":
+        return jnp.einsum(eq, gather_activation(x), w)
+    from ..sharding.specs import ROWPARALLEL_CHUNKS
+    nc = ROWPARALLEL_CHUNKS
+    if x.shape[x_axis] % nc or w.shape[w_axis] % nc:
+        return jnp.einsum(eq, gather_activation(x), w)
+    ins, out = eq.split("->")
+    xs, ws = ins.split(",")
+    assert "Z" not in eq, eq  # chunk-axis label must be free
+    xs2 = xs[:x_axis] + "Z" + xs[x_axis:]
+    ws2 = ws[:w_axis] + "Z" + ws[w_axis:]
+
+    def split(a, axis):
+        axis = axis % a.ndim
+        sh = a.shape
+        return a.reshape(sh[:axis] + (nc, sh[axis] // nc) + sh[axis + 1:])
+
+    partials = jnp.einsum(f"{xs2},{ws2}->Z{out}", split(x, x_axis),
+                          split(w, w_axis))
+    partials = partial_activation(partials, axis=0)
+    return jnp.sum(partials.astype(jnp.float32), axis=0).astype(x.dtype)
 
 
 def _pad_axis(x, axis, mult):

@@ -94,6 +94,15 @@ def main():
                          "scheduler, routed prefix-affinity-then-least-"
                          "loaded; tokens are identical to --dp 1 "
                          "(DESIGN.md §12). --kv-num-blocks is per replica")
+    ap.add_argument("--tp-ruleset", default="exact",
+                    choices=["exact", "throughput"],
+                    help="tensor-parallel sharding ruleset: 'exact' "
+                         "(default) is reduction-free — tokens bitwise "
+                         "identical across mesh shapes (DESIGN.md §11); "
+                         "'throughput' is Megatron-style row-parallel "
+                         "down-projections — one psum per attention block "
+                         "/ MLP, tokens match tp1 to tolerance only "
+                         "(DESIGN.md §13)")
     ap.add_argument("--devices", type=int, default=None, metavar="M",
                     help="force M host (CPU) devices before jax initializes "
                          "— development/CI stand-in for real accelerators; "

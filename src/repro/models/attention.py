@@ -498,13 +498,15 @@ def gqa_apply(params, cfg, x, positions, *, layer_window=0, cache=None,
                      scale=scale, tree_info=tree_info,
                      k_scale=new_cache.get("k_scale"),
                      v_scale=new_cache.get("v_scale"))
-    # sharded serving: all-gather the head-sharded context BEFORE the wo
-    # contraction (bitwise cross-mesh identity — DESIGN.md §11), and the
-    # d_model-sharded projection output before the residual add; no-ops
-    # without an activation mesh
+    # sharded serving seam (DESIGN.md §11/§13): exact ruleset all-gathers
+    # the head-sharded context BEFORE the wo contraction (bitwise cross-mesh
+    # identity); throughput ruleset contracts it row-parallel at canonical
+    # chunk granularity and the post-contraction gather becomes the block's
+    # single psum; plain einsum without an activation mesh
     from ..kernels import ops
-    out = ops.gather_activation(out)
-    y = jnp.einsum("bthk,hkd->btd", out, params["wo"].astype(x.dtype))
+    y = ops.rowparallel_einsum("bthk,hkd->btd", out,
+                               params["wo"].astype(x.dtype),
+                               x_axis=-2, w_axis=0)
     return ops.gather_activation(y), new_cache
 
 
@@ -542,8 +544,9 @@ def cross_attn_apply(params, cfg, x, enc_out=None, cross_kv=None):
     kv_pos = jnp.zeros((b, s), jnp.int32)
     out = attend(q, k, v, pos, kv_pos, s, causal=False)
     from ..kernels import ops
-    out = ops.gather_activation(out)
-    y = jnp.einsum("bthk,hkd->btd", out, params["wo"].astype(x.dtype))
+    y = ops.rowparallel_einsum("bthk,hkd->btd", out,
+                               params["wo"].astype(x.dtype),
+                               x_axis=-2, w_axis=0)
     if "gate" in params:
         y = jnp.tanh(params["gate"]).astype(y.dtype) * y
     return ops.gather_activation(y)
@@ -669,6 +672,7 @@ def mla_apply(params, cfg, x, positions, *, cache=None, cache_pos=None,
                  scale=scale, mask_info=mask_info if cache is None else None,
                  tree_info=tree_info if cache is not None else None)
     from ..kernels import ops
-    out = ops.gather_activation(out)
-    y = jnp.einsum("bthk,hkd->btd", out, params["wo"].astype(x.dtype))
+    y = ops.rowparallel_einsum("bthk,hkd->btd", out,
+                               params["wo"].astype(x.dtype),
+                               x_axis=-2, w_axis=0)
     return ops.gather_activation(y), new_cache

@@ -153,13 +153,15 @@ def mlp_apply(params, x: Array, act: str = "silu") -> Array:
             h = jax.nn.silu(g) * h
     else:
         h = jax.nn.gelu(h) if act == "gelu" else jax.nn.silu(h)
-    # sharded serving: all-gather the d_ff-sharded hidden BEFORE the
-    # down-projection contraction and the d_model-sharded output before the
-    # residual add (bitwise cross-mesh identity — DESIGN.md §11); both are
-    # no-ops without an activation mesh
+    # sharded serving seam (DESIGN.md §11/§13): exact ruleset all-gathers
+    # the d_ff-sharded hidden BEFORE the down-projection (bitwise identity);
+    # throughput ruleset contracts it row-parallel at canonical chunk
+    # granularity, and the post-contraction gather becomes the MLP's single
+    # psum; plain einsum without an activation mesh
     from ..kernels import ops
-    h = ops.gather_activation(h)
-    y = jnp.einsum("...f,fd->...d", h, params["wo"].astype(x.dtype))
+    y = ops.rowparallel_einsum("...f,fd->...d", h,
+                               params["wo"].astype(x.dtype),
+                               x_axis=-1, w_axis=0)
     return ops.gather_activation(y)
 
 
@@ -241,8 +243,10 @@ def moe_apply(params, x: Array, cfg, return_aux: bool = False,
     hg = jnp.einsum("Gecd,edf->Gecf", xe, params["we_g"].astype(x.dtype))
     he = jax.nn.silu(hg) * hi
     from ..kernels import ops
-    he = ops.gather_activation(he)   # d_ff-sharded: gather pre-contraction
-    ye = jnp.einsum("Gecf,efd->Gecd", he, params["we_o"].astype(x.dtype))
+    # d_ff-sharded row-parallel down-projection seam (throughput ruleset)
+    ye = ops.rowparallel_einsum("Gecf,efd->Gecd", he,
+                                params["we_o"].astype(x.dtype),
+                                x_axis=-1, w_axis=1)
     y = jnp.einsum("Ggec,Gecd->Ggd", comb, ye).reshape(n, d)
 
     if "shared" in params:

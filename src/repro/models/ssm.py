@@ -215,14 +215,14 @@ def mamba2_apply(params, cfg, x, *, state=None, chunk=None,
     g = (g.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
          * params["ssm_norm"]).astype(x.dtype)
 
-    # sharded serving: gather the (possibly channel-sharded) gated hidden
-    # before the out_proj contraction and the d_model output after it, so
-    # GSPMD never picks a partial-sum strategy (bitwise cross-mesh identity,
-    # DESIGN.md §11); identity without an activation mesh
+    # sharded serving seams (DESIGN.md §11/§13): exact ruleset gathers the
+    # gated hidden before the out_proj contraction (no partial-sum strategy,
+    # bitwise cross-mesh identity); throughput keeps it channel-sharded for
+    # the row-parallel out_proj and psums once; identity without a mesh
     from ..kernels import ops as _ops
-    g = _ops.gather_activation(g)
-    out = _ops.gather_activation(
-        jnp.einsum("bte,ed->btd", g, params["out_proj"].astype(x.dtype)))
+    out = _ops.gather_activation(_ops.rowparallel_einsum(
+        "bte,ed->btd", g, params["out_proj"].astype(x.dtype),
+        x_axis=-1, w_axis=0))
     new_state = None
     if state is not None:
         if collect_states:

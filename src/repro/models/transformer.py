@@ -308,7 +308,8 @@ def forward(params, cfg: ModelConfig, tokens: Array, positions=None, *,
     logits = L.unembed_apply(params["embed"], x, cfg)
     # sharded serving: vocab-sharded logits feed softmax/argmax whose
     # distributed reductions would break bitwise cross-mesh identity —
-    # all-gather them here (no-op without an activation mesh, DESIGN.md §11)
+    # all-gather them here in BOTH serving rulesets (sampling always runs
+    # on full logits; no-op without an activation mesh, DESIGN.md §11/§13)
     from ..kernels import ops
     logits = ops.gather_activation(logits)
     return logits, (new_caches if caches is not None else None), \

@@ -101,6 +101,12 @@ class EngineConfig:
     tp: int = 1
     dp: int = 1
     mesh: Any = None                 # jax.sharding.Mesh
+    # "exact" = reduction-free output-dim sharding, tokens bitwise
+    # identical across mesh shapes (DESIGN.md §11). "throughput" =
+    # Megatron-style row-parallel down-projections, one psum per
+    # attention block / MLP, tokens match tp1 to tolerance only
+    # (DESIGN.md §13).
+    tp_ruleset: str = "exact"
 
     def __post_init__(self):
         assert self.mode in ("ar", "vsd", "pard")
@@ -138,6 +144,9 @@ class EngineConfig:
             raise ValueError(f"tp must be >= 1, got {self.tp}")
         if self.dp < 1:
             raise ValueError(f"dp must be >= 1, got {self.dp}")
+        if self.tp_ruleset not in ("exact", "throughput"):
+            raise ValueError("tp_ruleset must be 'exact' or 'throughput', "
+                             f"got {self.tp_ruleset!r}")
         if self.mesh is None and (self.tp > 1 or self.dp > 1):
             from ..launch import mesh as mesh_mod
             self.mesh = mesh_mod.make_host_mesh(model=self.tp, data=self.dp)

@@ -119,7 +119,7 @@ class Engine:
             kv_block_size=config.kv_block_size if self.paged else 0,
             tree=config.tree if mode == "pard" else None,
             prefill_chunk=config.prefill_chunk, kv_dtype=config.kv_dtype,
-            mesh=m) for m in meshes]
+            mesh=m, tp_ruleset=config.tp_ruleset) for m in meshes]
         self.dec = decs[0]
         self.k = self.dec.k          # a tree template overrides k (== depth)
         self.bank = self.dec.tree    # TemplateBank (or None: no tree)
@@ -143,7 +143,8 @@ class Engine:
         exs = [Executor(decs[r], target_cfg, draft_cfg, mode, max_batch,
                         max_len, self.paged, config.kv_block_size, nb,
                         config.seed, kv_dtype=config.kv_dtype,
-                        mesh=meshes[r], replica=r) for r in range(dp)]
+                        mesh=meshes[r], replica=r,
+                        tp_ruleset=config.tp_ruleset) for r in range(dp)]
         self.ex = exs[0]
         ctrl = (TreeController(self.bank, max_batch * dp, config.tree_ewma)
                 if config.adaptive_tree else None)

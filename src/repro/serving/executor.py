@@ -137,13 +137,18 @@ class Executor:
                  draft_cfg: Optional[ModelConfig], mode: str, max_batch: int,
                  max_len: int, paged: bool, kv_block_size: int,
                  num_blocks: Optional[int], seed: int,
-                 kv_dtype: str = "bf16", mesh=None, replica: int = 0):
+                 kv_dtype: str = "bf16", mesh=None, replica: int = 0,
+                 tp_ruleset: str = "exact"):
         self.dec = dec
         self.mode = mode
         self.tc, self.dc = target_cfg, draft_cfg
         self.max_batch, self.max_len = max_batch, max_len
         self.paged = paged
         self.kv_dtype = kv_dtype
+        # which serving ruleset the fused steps trace under ("exact" /
+        # "throughput" — DESIGN.md §13); salts the jit keys because the two
+        # rulesets bake different sharding constraints into the same step
+        self.tp_ruleset = tp_ruleset
         # data-parallel serving (DESIGN.md §12): which engine replica this
         # executor backs. Each replica owns its own _step_fns dict, but the
         # id also salts the jit-cache key so a shared cache could never
@@ -375,7 +380,7 @@ class Executor:
             else "decode"
         greedy_only = not any_sampled and self.mode != "ar"
         key = (variant, tree_sel is not None, greedy_only, self.kv_dtype,
-               self.replica)
+               self.replica, self.tp_ruleset)
         if key not in self._step_fns:
             fused = self._build_fused(variant, apply_tree=tree_sel is not None,
                                       greedy_only=greedy_only)
@@ -403,10 +408,10 @@ class Executor:
         tree_d = (jnp.zeros((b,), jnp.int32) if tree_sel is None
                   else jnp.asarray(tree_sel, jnp.int32))
         if self.mesh is not None:
-            # trace under the activation mesh so the forward's
-            # gather_activation hints bake in (bitwise identity, §11)
+            # trace under the activation mesh + ruleset so the forward's
+            # partial/gather_activation hints bake in (§11/§13)
             from ..kernels import ops as _ops
-            with _ops.activation_mesh(self.mesh):
+            with _ops.activation_mesh(self.mesh, self.tp_ruleset):
                 self.state, a, rank, rhist, live, n, gen = \
                     self._step_fns[key](self.state, retire_d, tree_d, limits_d)
         else:
@@ -445,6 +450,36 @@ class Executor:
         if res.a is None:
             return None, None, None, 0
         return res.a, res.rank, res.rhist, handle.n_draft
+
+    def step_hlo(self, *, tree: bool = False, any_sampled: bool = False) -> str:
+        """Compiled (post-GSPMD) HLO text of the decode-variant fused step.
+
+        AOT lower + compile against the live DecodeState — nothing
+        executes and nothing is donated, so this is safe to call on a
+        serving executor between ticks. tools/comm_audit.py walks the
+        returned text to count per-step collectives and their byte
+        volumes, the measurable gate for the throughput ruleset
+        (DESIGN.md §13; CPU-emulated collective wall-clock is not
+        trustworthy, op/byte accounting is)."""
+        greedy_only = not any_sampled and self.mode != "ar"
+        fused = self._build_fused("decode", apply_tree=tree,
+                                  greedy_only=greedy_only)
+        b = self.max_batch
+        args = (self.state, jnp.zeros((b,), bool),
+                jnp.zeros((b,), jnp.int32),
+                jnp.full((b,), NO_LIMIT, jnp.int32))
+        if self.mesh is None:
+            return jax.jit(fused).lower(*args).compile().as_text()
+        repl = jax.sharding.NamedSharding(
+            self.mesh, jax.sharding.PartitionSpec())
+        aux = repl if self.mode != "ar" else None
+        jitted = jax.jit(
+            fused,
+            in_shardings=(self._state_sh, repl, repl, repl),
+            out_shardings=(self._state_sh, aux, aux, aux, repl, repl, repl))
+        from ..kernels import ops as _ops
+        with _ops.activation_mesh(self.mesh, self.tp_ruleset):
+            return jitted.lower(*args).compile().as_text()
 
     # --------------------------------------------------------------- host
     def read_n(self) -> np.ndarray:

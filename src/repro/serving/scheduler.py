@@ -154,6 +154,13 @@ class TreeController:
             prior[:, 1:] = 0.15
         self.global_p = prior.copy()
         self.slot_p = np.tile(prior, (max_batch, 1, 1))
+        # cached scoring machinery (the adaptive-tree host hot path runs
+        # every harvested step over dp*max_batch rows — keep it vectorized):
+        # offered-rank mask per template [T, D, mb] and scratch rank ids
+        self._offer_mask = (np.arange(mb)[None, None, :]
+                            < self.offer[:, :, None])
+        self._ranks = np.arange(mb)
+        self._depths = np.arange(d)
 
     def seed_slot(self, slot: int) -> None:
         self.slot_p[slot] = self.global_p
@@ -167,18 +174,25 @@ class TreeController:
                rank: np.ndarray) -> None:
         """live [B] (rows decoding BEFORE the step), tree_idx [B], a [B]
         accepted depths, rank [B, D] accepted sibling rank per depth (-1
-        where the depth rejected or was never reached)."""
-        d = self.slot_p.shape[1]
-        for slot in np.nonzero(live)[0]:
-            br = self.offer[tree_idx[slot]]
-            # depths 1..a were accepted; depth a+1 was evaluated and
-            # rejected (if it exists); deeper depths carry no information
-            for dep in range(min(int(a[slot]) + 1, d)):
-                r = int(rank[slot, dep])
-                for c in range(int(br[dep])):
-                    obs = 1.0 if r == c else 0.0
-                    self.slot_p[slot, dep, c] += \
-                        self.ewma * (obs - self.slot_p[slot, dep, c])
+        where the depth rejected or was never reached).
+
+        One vectorized EWMA write over [live, D, mb]: a cell (slot, dep, c)
+        updates iff the depth was evaluated this step (dep <= a — depths
+        1..a accepted, depth a+1 evaluated and rejected, deeper ones carry
+        no information) AND rank c was offered (c < the in-use template's
+        branching at dep). Cell updates are independent, so this computes
+        bit-identical values to the scalar triple loop it replaced."""
+        idx = np.nonzero(live)[0]
+        if idx.size == 0:
+            return
+        br = self.offer[np.asarray(tree_idx)[idx]]            # [n, D]
+        evaluated = self._depths[None, :] <= np.asarray(a)[idx, None]
+        offered = self._ranks[None, None, :] < br[:, :, None]  # [n, D, mb]
+        upd = evaluated[:, :, None] & offered
+        obs = (np.asarray(rank)[idx][:, :, None]
+               == self._ranks[None, None, :]).astype(self.slot_p.dtype)
+        p = self.slot_p[idx]
+        self.slot_p[idx] = np.where(upd, p + self.ewma * (obs - p), p)
 
     def select(self, slot: Optional[int] = None,
                feasible=None) -> int:
@@ -187,14 +201,15 @@ class TreeController:
         indices (allocation / max_len constraints)."""
         p = self.global_p if slot is None else self.slot_p[slot]
         cands = range(len(self.bank)) if feasible is None else list(feasible)
+        # all templates scored in one shot against the cached offered-rank
+        # masks: s[t, d] = min(1, sum_{c < b_d} p[d, c]), E(t) = sum of the
+        # depth-wise survival cumprod
+        s = np.minimum(1.0, np.where(self._offer_mask, p[None], 0.0).sum(-1))
+        scores = np.cumprod(s, axis=1).sum(axis=1)
         best, best_e = next(iter(cands)), -1.0
-        for t in cands:
-            surv, e = 1.0, 0.0
-            for dep in range(p.shape[0]):
-                surv *= min(1.0, float(p[dep, :self.offer[t, dep]].sum()))
-                e += surv
-            if e > best_e + 1e-9:
-                best, best_e = t, e
+        for t in cands:   # keep the earliest-wins 1e-9 tie-break semantics
+            if scores[t] > best_e + 1e-9:
+                best, best_e = t, float(scores[t])
         return best
 
 

@@ -104,6 +104,54 @@ SERVING_PARAM_RULES: Dict[str, List[Tuple[Optional[str], ...]]] = {
 }
 SERVING_MLP_WO_RULES = [(None, "tp")]
 
+# Throughput serving ruleset: Megatron-style ROW PARALLELISM on the
+# down-projections. The up-projections (wq/wk/wv/wi/wg/we_i/we_g/in_proj)
+# keep the exact ruleset's column-parallel output-dim sharding, but the
+# contraction-side weights — attention ``wo`` [H, hd, d], mlp ``wo``
+# [f, d], moe ``we_o`` [E, f, d], ssm ``out_proj`` [e, d] — shard their
+# CONTRACTION dim over model. Between the column and row halves the
+# activation stays model-sharded (``ops.rowparallel_einsum``), each device
+# contracts its local shard, and GSPMD realizes the replicated output with
+# exactly ONE psum (all-reduce) per attention block and one per MLP —
+# replacing the exact ruleset's full-activation all-gather before every
+# contraction. The (tied) embedding table replicates instead of sharding
+# over vocab: the exact ruleset's vocab-parallel lookup costs a per-step
+# all-reduce and its vocab-sharded logits a per-step all-gather — shared
+# overhead that at repro scale (V = 4 d_model) rivals the per-layer
+# traffic; the throughput ruleset trades that table's memory for zero
+# embed/logits collectives (a production vocab would re-shard it). The
+# price of the row-parallel psum is accumulation order: tokens match an
+# exact-ruleset engine only to tolerance, not bitwise — the throughput
+# ruleset's OWN numerics are pinned at ROWPARALLEL_CHUNKS granularity so
+# they stay reproducible across mesh sizes (DESIGN.md §13). Every other
+# leaf is IDENTICAL to SERVING_PARAM_RULES — property tested in
+# tests/test_tp_ruleset.py.
+THROUGHPUT_PARAM_RULES: Dict[str, List[Tuple[Optional[str], ...]]] = {
+    **SERVING_PARAM_RULES,
+    "embedding": [(None, None)],         # replicated (tied lookup + logits)
+    "unembed": [(None, None)],
+    "wo": [("tp", None, None)],          # attention 3-D: shard heads (contraction)
+    "we_o": [(None, "tp", None)],        # moe: shard d_ff (contraction)
+    "out_proj": [("tp", None)],          # ssm: shard d_inner (contraction)
+}
+THROUGHPUT_MLP_WO_RULES = [("tp", None)]
+
+# Canonical chunk count of the throughput ruleset's row-parallel psum: the
+# down-projection contraction is ALWAYS split into this many f32-rounded
+# bf16 partials (tp4 = one per device via GSPMD; tp1 emulates the combine
+# in ops.rowparallel_einsum), so the ruleset's numerics are a property of
+# the ruleset, not of the mesh it happens to run on. A contraction dim
+# that this count does not divide replicates instead — on BOTH the weight
+# side (here) and the activation side (ops.rowparallel_einsum), so the
+# two fallbacks can never disagree.
+ROWPARALLEL_CHUNKS = 4
+
+# Leaves where the two serving rulesets intentionally differ: the
+# contraction-side weights, plus the replicated embedding pair. Everything
+# else must agree — tested.
+CONTRACTION_LEAVES = ("wo", "we_o", "out_proj")
+RULESET_DIVERGENT_LEAVES = CONTRACTION_LEAVES + ("embedding", "unembed")
+
 AXIS_MAP = {"vocab": "model", "tp": "model"}
 
 
@@ -118,18 +166,37 @@ def _feasible(shape, cand, mesh_shape) -> bool:
 
 
 def _spec_for_leaf(path: str, shape, mesh: Mesh, fsdp: bool,
-                   fsdp_axes=("data",), rule_set=None, mlp_wo=None) -> P:
+                   fsdp_axes=("data",), rule_set=None, mlp_wo=None,
+                   throughput: bool = False) -> P:
     name = path.rsplit("/", 1)[-1]
     rules = (PARAM_RULES if rule_set is None else rule_set).get(name)
-    if name == "wo" and len(shape) == 2:
-        rules = MLP_WO_RULES if mlp_wo is None else mlp_wo
+    if name == "wo":
+        # attention wo ([H, hd, d]) lives under mixer/cross; everything
+        # else named wo is an mlp down-projection ([f, d]). Rank cannot
+        # disambiguate: the scan stack's leading repeats dim makes a
+        # stacked mlp wo rank-3 — matching it against the attention rule
+        # used to shard the STACK dim (surfacing as a hoisted per-step
+        # weight reshard all-to-all in the tp audit)
+        parent = path.rsplit("/", 2)[-2] if "/" in path else ""
+        if parent not in ("mixer", "cross"):
+            rules = MLP_WO_RULES if mlp_wo is None else mlp_wo
     if rules is None:
         rules = [tuple(None for _ in shape)]
     mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    # throughput contraction split is pinned at ROWPARALLEL_CHUNKS
+    # granularity: a sharded dim the canonical chunk count does not divide
+    # must replicate even if the (smaller) mesh would — keeps the weight
+    # fallback aligned with ops.rowparallel_einsum's activation fallback
+    chunked = throughput and name in CONTRACTION_LEAVES
 
     chosen = None
     for cand in rules:
         if len(cand) <= len(shape) and _feasible(shape, cand, mesh_shape):
+            if chunked:
+                dims = shape[len(shape) - len(cand):]
+                if any(a == "tp" and d % ROWPARALLEL_CHUNKS
+                       for a, d in zip(cand, dims)):
+                    continue
             chosen = cand
             break
     if chosen is None:
@@ -174,25 +241,34 @@ def _map_with_path(tree, fn, prefix=""):
 
 def param_specs(params, mesh: Mesh, *, fsdp: bool = False,
                 fsdp_axes: Sequence[str] = ("data",),
-                expert_parallel: bool = False, serving: bool = False):
+                expert_parallel: bool = False, serving: bool = False,
+                ruleset: str = "exact"):
     """PartitionSpec tree matching ``params`` (arrays or ShapeDtypeStructs).
 
     ``expert_parallel=True`` flips the MoE rule to shard the experts dim
-    over the model axis (the §Perf experiment). ``serving=True`` selects
-    the reduction-free ``SERVING_PARAM_RULES`` (output-dim tensor
-    parallelism only — the bitwise-identity ruleset the serving engine
-    shards its target with; see DESIGN.md §11)."""
-    rules = SERVING_PARAM_RULES if serving else PARAM_RULES
-    mlp_wo = SERVING_MLP_WO_RULES if serving else MLP_WO_RULES
+    over the model axis (the §Perf experiment). ``serving=True`` selects a
+    serving ruleset chosen by ``ruleset``: ``"exact"`` (default) is the
+    reduction-free ``SERVING_PARAM_RULES`` (output-dim tensor parallelism
+    only — the bitwise-identity ruleset; DESIGN.md §11); ``"throughput"``
+    is the Megatron-style ``THROUGHPUT_PARAM_RULES`` (row-parallel
+    down-projections, one psum per block; DESIGN.md §13)."""
+    if ruleset not in ("exact", "throughput"):
+        raise ValueError(f"unknown serving ruleset {ruleset!r}")
+    if serving and ruleset == "throughput":
+        rules, mlp_wo = THROUGHPUT_PARAM_RULES, THROUGHPUT_MLP_WO_RULES
+    elif serving:
+        rules, mlp_wo = SERVING_PARAM_RULES, SERVING_MLP_WO_RULES
+    else:
+        rules, mlp_wo = PARAM_RULES, MLP_WO_RULES
     if expert_parallel:
         rules = dict(rules)
         rules["we_i"] = [("tp", None, None), (None, None, "tp")]
         rules["we_g"] = [("tp", None, None), (None, None, "tp")]
         rules["we_o"] = [("tp", None, None), (None, "tp", None)]
     return _map_with_path(
-        params, lambda p, leaf: _spec_for_leaf(p, leaf.shape, mesh, fsdp,
-                                               tuple(fsdp_axes), rules,
-                                               mlp_wo))
+        params, lambda p, leaf: _spec_for_leaf(
+            p, leaf.shape, mesh, fsdp, tuple(fsdp_axes), rules, mlp_wo,
+            throughput=serving and ruleset == "throughput"))
 
 
 def _batch_axes(mesh: Mesh) -> Tuple[str, ...]:

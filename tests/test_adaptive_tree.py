@@ -52,7 +52,10 @@ def test_template_bank_construction():
         assert np.array_equal(bank.anc[i, :ns], t.anc)
         assert not bank.anc[i, ns:].any()
         assert not bank.depth[i, ns:].any()
-    assert TemplateBank.default(4).key == "1x1x1x1|2x2x2x1|4x2x1x1"
+    # the default bank's wide hedge stays within the balanced tree's
+    # padded window (22 <= 23 slots) — see TemplateBank.default
+    assert TemplateBank.default(4).key == "1x1x1x1|2x2x2x1|3x2x1x1"
+    assert TemplateBank.default(4).max_slots == 23
 
 
 def test_template_bank_rejects_mixed_depth():

@@ -115,7 +115,7 @@ def test_tree_chunked_prefill_near_max_len(models):
     tc, tp, dc, dp = models
     from repro.core.spec_decode import TemplateBank
     rng = np.random.default_rng(31)
-    bank = TemplateBank.default(4)                   # widest window 29 slots
+    bank = TemplateBank.default(4)                   # widest window 23 slots
     max_len, max_new = 128, 6
     dec = SpecDecoder(tp, tc, tp, tc, k=4, max_len=max_len, tree=bank)
     p_len = max_len - max_new - dec.row_slack(0)     # chain slack, exactly
